@@ -1,0 +1,95 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference — on CPU
+these measure correctness-path overhead; on TPU the same BlockSpecs
+compile via Mosaic.  Also reports the analytic VMEM working set per
+kernel so the tiling claims in DESIGN.md are auditable."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timer
+from repro.kernels import ref
+from repro.kernels.batch_ed import batch_ed_pallas
+from repro.kernels.lb_keogh import lb_keogh_pallas
+from repro.kernels.mindist import mindist_pallas
+
+RNG = np.random.default_rng(0)
+
+
+def bench_mindist():
+    w, n = 16, 100_000
+    qlo = jnp.asarray(RNG.normal(size=w), jnp.float32)
+    qhi = qlo + 0.1
+    elo = jnp.asarray(RNG.normal(size=(n, w)), jnp.float32)
+    ehi = elo + 0.2
+    t_ref = timer(lambda: ref.mindist_ref(qlo, qhi, elo, ehi, 16, 16))
+    emit("kernel_mindist_ref_100k", t_ref,
+         f"bytes={(2 * n * w * 4)}")
+    t_pal = timer(lambda: mindist_pallas(qlo, qhi, elo, ehi, 16, 16))
+    emit("kernel_mindist_pallas_100k", t_pal,
+         "vmem_tile=16x4096x4x2B")
+
+
+def bench_batch_ed():
+    n, l = 4096, 256
+    wdt = jnp.asarray(RNG.normal(size=(n, l)), jnp.float32)
+    q = jnp.asarray(RNG.normal(size=(4, l)), jnp.float32)
+    t_ref = timer(lambda: ref.batch_ed_ref(wdt, q, True))
+    emit("kernel_batch_ed_ref", t_ref, f"flops={2 * n * l * 4}")
+    t_pal = timer(lambda: batch_ed_pallas(wdt, q, True))
+    emit("kernel_batch_ed_pallas", t_pal, "")
+
+
+def bench_lb_keogh():
+    n, l = 8192, 256
+    lo = jnp.asarray(RNG.normal(size=l) - 1, jnp.float32)
+    hi = lo + 2
+    wdt = jnp.asarray(RNG.normal(size=(n, l)), jnp.float32)
+    t_ref = timer(lambda: ref.lb_keogh_ref(lo, hi, wdt))
+    emit("kernel_lb_keogh_ref", t_ref, "")
+    t_pal = timer(lambda: lb_keogh_pallas(lo, hi, wdt))
+    emit("kernel_lb_keogh_pallas", t_pal, "")
+
+
+def bench_dtw_band():
+    n, l, r = 256, 192, 9
+    q = jnp.asarray(RNG.normal(size=l), jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(n, l)), jnp.float32)
+    from repro.core.dtw import dtw_band as core_scan
+    from repro.kernels.dtw_band import dtw_band_pallas
+    t_scan = timer(lambda: core_scan(q, c, r, squared=True))
+    emit("kernel_dtw_scan_256x192", t_scan, f"band={2 * r + 1}")
+    t_pal = timer(lambda: dtw_band_pallas(q, c, r), repeats=1)
+    emit("kernel_dtw_pallas_256x192", t_pal,
+         "vmem=block_b x (l+2r) + band state")
+
+
+def bench_envelope_build():
+    """Alg. 2 inner loop: Pallas streaming vs materialized ref."""
+    import jax
+    from repro.kernels.envelope import envelope_znorm_pallas
+    n, lmin, lmax, seg = 512, 160, 256, 16
+    series = jnp.asarray(RNG.normal(size=n).cumsum(), jnp.float32)
+    csum = jnp.concatenate([jnp.zeros(1), jnp.cumsum(series)])
+    csum2 = jnp.concatenate([jnp.zeros(1), jnp.cumsum(series ** 2)])
+    m = n - lmin + 1
+    offs = jnp.arange(m, dtype=jnp.int32)
+    w = lmax // seg
+    starts = offs[:, None] + jnp.arange(w)[None, :] * seg
+    segmean = (jnp.take(csum, jnp.clip(starts + seg, 0, n))
+               - jnp.take(csum, jnp.clip(starts, 0, n))) / seg
+    L = lmax - lmin + 1
+    e2 = jnp.clip(offs[:, None] + (lmin + jnp.arange(L))[None, :], 0, n)
+    s1 = jnp.take(csum, e2) - csum[offs][:, None]
+    s2 = jnp.take(csum2, e2) - csum2[offs][:, None]
+    t_ref = timer(lambda: ref.envelope_scan_ref(
+        segmean, s1, s2, offs, n, lmin, lmax, seg))
+    emit("kernel_envelope_ref", t_ref,
+         f"materializes {m}x{L}x{w} grid")
+    t_pal = timer(lambda: envelope_znorm_pallas(
+        segmean, s1, s2, offs, n, lmin, lmax, seg), repeats=1)
+    emit("kernel_envelope_pallas", t_pal, "streams the length axis")
+
+
+ALL = [bench_mindist, bench_batch_ed, bench_lb_keogh, bench_dtw_band,
+       bench_envelope_build]

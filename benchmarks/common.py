@@ -1,0 +1,193 @@
+"""Shared benchmark infrastructure: timing, workloads, baselines.
+
+Baselines implemented (the paper's competitors, in JAX):
+  ucr_scan   — optimized serial scan: ED via the dot identity over every
+               overlapping window (UCR-suite-style; its per-element early
+               abandoning becomes batched best-so-far short-circuiting,
+               which on a vector machine is the same work-skipping idea).
+  mass       — FFT-based z-normalized distance profile (MASS): one rFFT
+               convolution per (query, series) pair.
+  cmri_lite  — Compact Multi-Resolution Index: per-length indexes at R
+               resolutions, fixed-length PAA + iSAX pruning (the
+               multi-index strategy ULISSE §7.2 compares against; raw
+               mode only, as in the paper).
+  indint_lite— Index Interpolation: single fixed-length-prefix index;
+               eps-range on prefixes then verify (Loh et al.).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.paa import paa, znormalize
+from repro.core import isax
+from repro.core.types import Collection, EnvelopeParams
+
+
+def timer(fn: Callable, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall seconds of fn(*args) (block_until_ready on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+# --------------------------------------------------------------------------
+# serial-scan baselines
+# --------------------------------------------------------------------------
+
+def ucr_scan_knn(data: np.ndarray, q: np.ndarray, k: int, znorm: bool):
+    """Full scan over every overlapping window (dot-identity ED)."""
+    qlen = len(q)
+    n = data.shape[1]
+    qn = znormalize(jnp.asarray(q)) if znorm else jnp.asarray(q)
+
+    @jax.jit
+    def scan(rows):
+        offs = jnp.arange(n - qlen + 1)
+
+        def per_row(row):
+            wins = jax.vmap(
+                lambda o: jax.lax.dynamic_slice(row, (o,), (qlen,)))(offs)
+            if znorm:
+                wn = znormalize(wins)
+                return jnp.sum((wn - qn) ** 2, axis=-1)
+            return jnp.sum((wins - qn) ** 2, axis=-1)
+
+        return jax.lax.map(per_row, rows)
+
+    d2 = np.asarray(scan(jnp.asarray(data))).ravel()
+    idx = np.argpartition(d2, k)[:k]
+    idx = idx[np.argsort(d2[idx])]
+    return np.sqrt(np.maximum(d2[idx], 0))
+
+
+def mass_knn(data: np.ndarray, q: np.ndarray, k: int):
+    """MASS: z-normalized distance profile via FFT dot products."""
+    qlen = len(q)
+    n = data.shape[1]
+    qn = np.asarray(znormalize(jnp.asarray(q)))
+
+    @jax.jit
+    def profile(rows):
+        # dots via frequency domain: conv(row, reversed q)
+        fr = jnp.fft.rfft(rows, n=2 * n, axis=-1)
+        fq = jnp.fft.rfft(jnp.asarray(qn[::-1].copy()), n=2 * n)
+        dots = jnp.fft.irfft(fr * fq, n=2 * n, axis=-1)[
+            :, qlen - 1: n]                       # (S, n - qlen + 1)
+        csum = jnp.cumsum(rows, axis=-1)
+        csum2 = jnp.cumsum(rows * rows, axis=-1)
+        z = jnp.zeros((rows.shape[0], 1))
+        c1 = jnp.concatenate([z, csum], axis=-1)
+        c2 = jnp.concatenate([z, csum2], axis=-1)
+        s1 = c1[:, qlen:] - c1[:, :-qlen]
+        s2 = c2[:, qlen:] - c2[:, :-qlen]
+        mu = s1 / qlen
+        sd = jnp.sqrt(jnp.maximum(s2 / qlen - mu * mu, 1e-12))
+        return 2 * qlen - 2 * (dots - 0.0) / sd \
+            - 0.0 * mu  # z-normed query: ED^2 = 2L - 2 dot/sd
+
+    d2 = np.asarray(profile(jnp.asarray(data))).ravel()
+    idx = np.argpartition(d2, k)[:k]
+    idx = idx[np.argsort(d2[idx])]
+    return np.sqrt(np.maximum(d2[idx], 0))
+
+
+# --------------------------------------------------------------------------
+# multi-index baselines
+# --------------------------------------------------------------------------
+
+class CMRILite:
+    """Per-resolution fixed-length indexes (raw series, like CMRI)."""
+
+    def __init__(self, data: np.ndarray, lengths, seg_len=16, card=64):
+        self.data = jnp.asarray(data)
+        self.lengths = list(lengths)
+        self.seg = seg_len
+        self.tables = {}
+        n = data.shape[1]
+        sample = paa(self.data, seg_len)
+        self.bp = isax.calibrate_breakpoints(card, sample)
+        for l in self.lengths:
+            offs = jnp.arange(n - l + 1)
+            wins = jax.vmap(
+                lambda o: jax.lax.dynamic_slice_in_dim(
+                    self.data, o, l, axis=1), out_axes=1)(offs)
+            # wins: (S, n_off, l) -> PAA symbols per window
+            pw = paa(wins, seg_len)
+            self.tables[l] = (isax.symbolize(pw, self.bp), offs)
+
+    def knn(self, q: np.ndarray, k: int):
+        """Search the index for the largest length <= |q|; verify raw."""
+        qlen = len(q)
+        l = max(x for x in self.lengths if x <= qlen)
+        syms, offs = self.tables[l]
+        qp = paa(jnp.asarray(q[:l]), self.seg)
+        from repro.core.bounds import mindist_paa_isax
+        lbs = mindist_paa_isax(qp, syms, self.bp, self.seg)  # (S, n_off)
+        flat = np.asarray(lbs).ravel()
+        order = np.argsort(flat)
+        n = self.data.shape[1]
+        n_off_q = n - qlen + 1
+        best = np.full(k, np.inf)
+        checked = 0
+        dq = jnp.asarray(q)
+        for cand in order:
+            sid, off = divmod(int(cand), len(offs))
+            if off >= n_off_q:
+                continue
+            if flat[cand] ** 2 >= best[-1]:
+                break
+            w = self.data[sid, off:off + qlen]
+            d2 = float(jnp.sum((w - dq) ** 2))
+            checked += 1
+            if d2 < best[-1]:
+                best = np.sort(np.append(best[:-1], d2))
+        return np.sqrt(best), checked
+
+
+class IndIntLite:
+    """Index-interpolation: one fixed-prefix-length index; prefix ED
+    lower-bounds full ED for raw series, so eps-range on prefixes is a
+    correct filter (Loh et al.)."""
+
+    def __init__(self, data: np.ndarray, prefix_len: int):
+        self.data = jnp.asarray(data)
+        self.pl = prefix_len
+        n = data.shape[1]
+        offs = jnp.arange(n - prefix_len + 1)
+        self.prefixes = jax.vmap(
+            lambda o: jax.lax.dynamic_slice_in_dim(
+                self.data, o, prefix_len, axis=1), out_axes=1)(offs)
+
+    def knn(self, q: np.ndarray, k: int, eps: float):
+        qlen = len(q)
+        qp = jnp.asarray(q[: self.pl])
+        d2p = jnp.sum((self.prefixes - qp) ** 2, axis=-1)   # (S, n_off)
+        flat = np.asarray(d2p).ravel()
+        cands = np.nonzero(flat <= eps * eps)[0]
+        n = self.data.shape[1]
+        n_offp = self.prefixes.shape[1]
+        best = np.full(k, np.inf)
+        dq = jnp.asarray(q)
+        for cand in cands:
+            sid, off = divmod(int(cand), n_offp)
+            if off + qlen > n:
+                continue
+            w = self.data[sid, off:off + qlen]
+            d2 = float(jnp.sum((w - dq) ** 2))
+            if d2 < best[-1]:
+                best = np.sort(np.append(best[:-1], d2))
+        return np.sqrt(best), len(cands)

@@ -1,0 +1,44 @@
+"""Benchmark driver: ``python -m benchmarks.run [--only substr]``.
+
+One function per paper table/figure (bench_paper) + kernel micros
+(bench_kernels).  Prints ``name,us_per_call,derived`` CSV; the roofline
+tables come from ``python -m benchmarks.roofline`` over the dry-run
+artifacts (results/dryrun_*.jsonl).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    args = ap.parse_args()
+
+    sys.path.insert(0, "/root/repo/src")
+    from benchmarks import bench_kernels, bench_paper
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in bench_paper.ALL + bench_kernels.ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {fn.__name__} done in {time.time() - t0:.1f}s",
+                  flush=True)
+        except Exception:    # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"# {fn.__name__} FAILED:", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with the full production stack — AdamW, remat, deterministic pipeline,
+fault-tolerant loop with checkpoints (and an injected failure to prove
+the retry path).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import shutil
+
+import jax
+import numpy as np
+
+from repro.models import ModelConfig, init_params
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.data import TokenPipeline
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+
+    # ~100M params: a phi4-family dense model scaled to container size
+    cfg = ModelConfig(name="phi4-100m", family="dense", num_layers=8,
+                      d_model=512, num_heads=8, num_kv_heads=4,
+                      d_ff=1536, vocab_size=32_000, attn_chunk=128)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"model: {cfg.name}  {n / 1e6:.1f}M params")
+
+    state = {"params": params, "opt": adamw_init(params)}
+    opt = AdamWConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
+    step = jax.jit(make_train_step(cfg, opt), donate_argnums=(0,))
+    pipe = TokenPipeline(cfg.vocab_size, global_batch=args.batch,
+                         seq_len=256, seed=0)
+
+    loop = TrainLoop(
+        LoopConfig(total_steps=args.steps, ckpt_every=100,
+                   ckpt_dir=args.ckpt, log_every=20),
+        step, pipe, state)
+    # prove fault tolerance mid-run: inject one failure, watch it recover
+    out = loop.run(inject_failure_at=args.steps // 2)
+    print(f"status={out['status']} retries={out['retries']}")
+    losses = [(m["step"], m["loss"]) for m in loop.metrics_log]
+    for s, l in losses[:: max(len(losses) // 8, 1)]:
+        print(f"  step {s:4d}  loss {l:.4f}")
+    first, last = losses[0][1], losses[-1][1]
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'OK: decreasing' if last < first else 'WARN: not decreasing'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Architecture registry: one module per assigned arch (+ ULISSE defaults).
+
+Every module exposes ARCH (the exact published config) and REDUCED (a
+same-family scaled-down config for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "recurrentgemma_2b",
+    "granite_20b",
+    "deepseek_7b",
+    "deepseek_67b",
+    "phi4_mini_3_8b",
+    "qwen2_vl_2b",
+    "mixtral_8x22b",
+    "qwen3_moe_30b_a3b",
+    "xlstm_1_3b",
+    "whisper_base",
+]
+
+# canonical shape cells: name -> (seq_len, global_batch, step kind)
+SHAPES: Dict[str, tuple] = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+
+def normalize(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{normalize(arch_id)}")
+    return mod.ARCH
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{normalize(arch_id)}")
+    return mod.REDUCED
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> bool:
+    """long_500k needs sub-quadratic decode state (DESIGN.md §8)."""
+    if shape == "long_500k":
+        return cfg.is_subquadratic
+    return True

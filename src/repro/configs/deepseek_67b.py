@@ -1,0 +1,29 @@
+"""deepseek-67b [dense] — llama-arch [arXiv:2401.02954; hf].
+
+95L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=102400.
+Full quadratic attention => long_500k SKIPPED.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    num_layers=95,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22_016,
+    vocab_size=102_400,
+)
+
+REDUCED = ModelConfig(
+    name="deepseek-67b-reduced",
+    family="dense",
+    num_layers=5,          # deep-narrow like the original 95L
+    d_model=64,
+    num_heads=8,
+    num_kv_heads=2,
+    d_ff=176,
+    vocab_size=512,
+    attn_chunk=16,
+)

@@ -1,0 +1,29 @@
+"""deepseek-7b [dense] — llama-arch [arXiv:2401.02954; hf].
+
+30L d_model=4096 32H (GQA kv=32, i.e. MHA) d_ff=11008 vocab=102400.
+Full quadratic attention => long_500k SKIPPED.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = ModelConfig(
+    name="deepseek-7b",
+    family="dense",
+    num_layers=30,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=11_008,
+    vocab_size=102_400,
+)
+
+REDUCED = ModelConfig(
+    name="deepseek-7b-reduced",
+    family="dense",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=176,
+    vocab_size=512,
+    attn_chunk=16,
+)

@@ -1,0 +1,31 @@
+"""granite-20b [dense] — llama-arch, code model [arXiv:2405.04324; hf].
+
+52L d_model=6144 48H (GQA kv=1, i.e. MQA) d_ff=24576 vocab=49152.
+Full quadratic attention => long_500k SKIPPED.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = ModelConfig(
+    name="granite-20b",
+    family="dense",
+    num_layers=52,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    d_ff=24_576,
+    vocab_size=49_152,
+    gated_mlp=False,     # GPT-BigCode-style 2-matrix GELU MLP
+)
+
+REDUCED = ModelConfig(
+    name="granite-reduced",
+    family="dense",
+    num_layers=3,
+    d_model=48,
+    num_heads=6,
+    num_kv_heads=1,
+    d_ff=192,
+    vocab_size=512,
+    gated_mlp=False,
+    attn_chunk=16,
+)

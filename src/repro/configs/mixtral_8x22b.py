@@ -1,0 +1,36 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, SWA [arXiv:2401.04088; hf].
+
+56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768, MoE 8e top-2,
+sliding-window attention (window 4096, per the assignment).  SWA bounds
+the decode KV state => long_500k RUNS (rolling 4096-slot cache).
+"""
+from repro.models.config import ModelConfig
+
+ARCH = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16_384,
+    vocab_size=32_768,
+    window=4096,
+    num_experts=8,
+    experts_per_token=2,
+)
+
+REDUCED = ModelConfig(
+    name="mixtral-reduced",
+    family="moe",
+    num_layers=4,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    window=16,
+    num_experts=4,
+    experts_per_token=2,
+    attn_chunk=16,
+)

@@ -1,0 +1,29 @@
+"""phi4-mini-3.8b [dense] — RoPE SwiGLU GQA [arXiv:2412.08905; hf].
+
+32L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=200064.
+Full quadratic attention => long_500k SKIPPED.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = ModelConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=200_064,
+)
+
+REDUCED = ModelConfig(
+    name="phi4-mini-reduced",
+    family="dense",
+    num_layers=4,
+    d_model=96,
+    num_heads=6,
+    num_kv_heads=2,
+    d_ff=256,
+    vocab_size=512,
+    attn_chunk=16,
+)

@@ -1,0 +1,38 @@
+"""qwen2-vl-2b [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.  Transformer
+BACKBONE only: the vision frontend is a STUB — input_specs() provides 256
+precomputed patch embeddings merged at the sequence prefix; M-RoPE carries
+(temporal, height, width) position ids.  Full attention => long_500k
+SKIPPED.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151_936,
+    mrope=True,
+    mrope_sections=(16, 24, 24),   # head_dim 128 -> half 64
+    num_patches=256,
+)
+
+REDUCED = ModelConfig(
+    name="qwen2-vl-reduced",
+    family="vlm",
+    num_layers=4,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=192,
+    vocab_size=512,
+    mrope=True,
+    mrope_sections=(4, 2, 2),      # head_dim 16 -> half 8
+    num_patches=8,
+    attn_chunk=16,
+)

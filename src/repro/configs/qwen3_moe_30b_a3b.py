@@ -1,0 +1,35 @@
+"""qwen3-moe-30b-a3b [moe] — 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B].
+
+48L d_model=2048 32H (GQA kv=4, head_dim 128) d_ff=768 (per expert)
+vocab=151936, MoE 128e top-8.  Full attention => long_500k SKIPPED.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=768,
+    vocab_size=151_936,
+    head_dim=128,
+    num_experts=128,
+    experts_per_token=8,
+)
+
+REDUCED = ModelConfig(
+    name="qwen3-moe-reduced",
+    family="moe",
+    num_layers=4,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=48,
+    vocab_size=512,
+    head_dim=16,
+    num_experts=8,
+    experts_per_token=2,
+    attn_chunk=16,
+)

@@ -1,0 +1,43 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention, 1 attn : 2
+recurrent [arXiv:2402.19427; hf].
+
+26L d_model=2560 10H (GQA kv=1) d_ff=7680 vocab=256000.  Pattern
+(R, R, A) x 8 + (R, R) tail; local attention window 2048.  Sub-quadratic
+=> long_500k RUNS (bounded window KV + O(1) recurrent state).
+"""
+from repro.models.config import ModelConfig
+
+ARCH = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    d_ff=7680,
+    vocab_size=256_000,
+    head_dim=256,
+    window=2048,
+    pattern=("rglru", "rglru", "attn"),
+    tail=("rglru", "rglru"),
+    rnn_width=2560,
+    conv_width=4,
+)
+
+REDUCED = ModelConfig(
+    name="recurrentgemma-reduced",
+    family="hybrid",
+    num_layers=4,
+    d_model=64,
+    num_heads=2,
+    num_kv_heads=1,
+    d_ff=192,
+    vocab_size=512,
+    head_dim=32,
+    window=16,
+    pattern=("rglru", "rglru", "attn"),
+    tail=("rglru",),
+    rnn_width=64,
+    conv_width=4,
+    attn_chunk=16,
+)

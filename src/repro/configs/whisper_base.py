@@ -1,0 +1,35 @@
+"""whisper-base [audio] — enc-dec, conv frontend stub [arXiv:2212.04356].
+
+6L (6 encoder + 6 decoder) d_model=512 8H (kv=8) d_ff=2048 vocab=51865.
+The conv/mel frontend is a STUB: input_specs() provides precomputed frame
+embeddings (B, 1500, 512).  Decoder has full self+cross attention =>
+long_500k SKIPPED; decode shapes run against the decoder.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    num_layers=6,             # decoder layers; + 6 encoder layers below
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51_865,
+    encoder_layers=6,
+    num_frames=1500,
+)
+
+REDUCED = ModelConfig(
+    name="whisper-reduced",
+    family="encdec",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    encoder_layers=2,
+    num_frames=24,
+    attn_chunk=16,
+)

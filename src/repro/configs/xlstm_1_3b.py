@@ -1,0 +1,36 @@
+"""xlstm-1.3b [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+48L d_model=2048 4H (kv=4) d_ff=0 (projection inside block) vocab=50304.
+Pattern: 7 mLSTM : 1 sLSTM per group (xLSTM[7:1]), 6 groups.  O(1) decode
+state (matrix memory) => long_500k RUNS.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50_304,
+    pattern=("mlstm",) * 7 + ("slstm",),
+    proj_factor=2.0,
+    mlstm_chunk=256,
+)
+
+REDUCED = ModelConfig(
+    name="xlstm-reduced",
+    family="ssm",
+    num_layers=4,
+    d_model=64,
+    num_heads=2,
+    num_kv_heads=2,
+    d_ff=0,
+    vocab_size=512,
+    pattern=("mlstm", "mlstm", "mlstm", "slstm"),
+    proj_factor=2.0,
+    mlstm_chunk=8,
+    attn_chunk=16,
+)

@@ -1,0 +1,11 @@
+"""ULISSE core: the paper's contribution as composable JAX modules."""
+from repro.core.types import Collection, EnvelopeParams, EnvelopeSet
+from repro.core.index import UlisseIndex, build_index, index_stats
+from repro.core.search import (approx_knn, brute_force_knn, exact_knn,
+                               prepare_query, range_query)
+
+__all__ = [
+    "Collection", "EnvelopeParams", "EnvelopeSet", "UlisseIndex",
+    "build_index", "index_stats", "approx_knn", "exact_knn", "range_query",
+    "brute_force_knn", "prepare_query",
+]

@@ -1,0 +1,94 @@
+"""Lower bounds for ULISSE search (paper §6.1-6.2, Eq. 5 / Eq. 8).
+
+Both bounds are instances of one interval-vs-interval distance: the query
+contributes a per-segment interval [ql, qh] (degenerate ql == qh for ED;
+[PAA(L_dtw), PAA(U_dtw)] for DTW), the Envelope contributes
+[beta_l(iSAX(L)), beta_u(iSAX(U))], and the per-segment gap is
+
+    gap_i = max(0, e_lo_i - qh_i, ql_i - e_hi_i)
+    bound = sqrt(s) * sqrt(sum_i gap_i^2)           (first nseg_q segments)
+
+NOTE (paper typo fixed): Eq. 5's second branch reads beta_u(iSAX(L)) in the
+paper; the symmetric — and *safe* — breakpoint is beta_l(iSAX(L)) (member PAA
+coefficients can sit anywhere inside their symbol's region, so only the
+region's *outer* breakpoints give a valid lower bound; Prop. 2's proof says
+"the second case is symmetric", confirming intent).  Same fix in Eq. 8.
+The hypothesis suite enforces bound <= true distance over random inputs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import isax
+from repro.core.types import EnvelopeSet
+
+
+def interval_mindist(q_lo: jnp.ndarray, q_hi: jnp.ndarray,
+                     e_lo: jnp.ndarray, e_hi: jnp.ndarray,
+                     seg_len: int, nseg_q: int, squared: bool = False):
+    """Generic interval-vs-interval lower bound.
+
+    q_lo/q_hi: (w,) or (Qb, w) query intervals.
+    e_lo/e_hi: (N, w) envelope intervals (real-valued breakpoints or PAA).
+    Returns (N,) or (Qb, N).
+    """
+    q_lo = q_lo[..., None, :nseg_q]
+    q_hi = q_hi[..., None, :nseg_q]
+    e_lo_t = e_lo[..., :nseg_q]
+    e_hi_t = e_hi[..., :nseg_q]
+    gap = jnp.maximum(jnp.maximum(e_lo_t - q_hi, q_lo - e_hi_t), 0.0)
+    # unconstrained segments carry +-inf bounds; their gap is 0 by the max
+    # above unless e_lo=-inf < q_hi (always true) — explicitly zero out nans
+    gap = jnp.where(jnp.isfinite(gap), gap, 0.0)
+    d2 = seg_len * jnp.sum(gap * gap, axis=-1)
+    return d2 if squared else jnp.sqrt(d2)
+
+
+def envelope_breakpoint_bounds(env: EnvelopeSet, breakpoints: jnp.ndarray):
+    """[beta_l(iSAX(L)), beta_u(iSAX(U))] — what the paper's index stores."""
+    return (isax.beta_lower(env.sym_lo, breakpoints),
+            isax.beta_upper(env.sym_hi, breakpoints))
+
+
+@partial(jax.jit, static_argnames=("seg_len", "nseg_q", "squared", "use_paa"))
+def mindist_ulisse(q_paa: jnp.ndarray, env: EnvelopeSet,
+                   breakpoints: jnp.ndarray, seg_len: int, nseg_q: int,
+                   squared: bool = False, use_paa: bool = False):
+    """mindist_ULiSSE(PAA(Q), uENV) (paper Eq. 5) for all envelopes at once.
+
+    use_paa=True swaps the quantized symbol breakpoints for the raw float
+    L/U PAA bounds — strictly tighter, beyond-paper option (§Perf).
+    """
+    if use_paa:
+        e_lo, e_hi = env.paa_lo, env.paa_hi
+    else:
+        e_lo, e_hi = envelope_breakpoint_bounds(env, breakpoints)
+    d = interval_mindist(q_paa, q_paa, e_lo, e_hi, seg_len, nseg_q, squared)
+    return jnp.where(env.valid, d, jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("seg_len", "nseg_q", "squared", "use_paa"))
+def lb_pal(q_dtw_paa_lo: jnp.ndarray, q_dtw_paa_hi: jnp.ndarray,
+           env: EnvelopeSet, breakpoints: jnp.ndarray, seg_len: int,
+           nseg_q: int, squared: bool = False, use_paa: bool = False):
+    """LB_PaL(PAA(dtwENV_r(Q)), uENV) (paper Eq. 8, Lemma 3)."""
+    if use_paa:
+        e_lo, e_hi = env.paa_lo, env.paa_hi
+    else:
+        e_lo, e_hi = envelope_breakpoint_bounds(env, breakpoints)
+    d = interval_mindist(q_dtw_paa_lo, q_dtw_paa_hi, e_lo, e_hi,
+                         seg_len, nseg_q, squared)
+    return jnp.where(env.valid, d, jnp.inf)
+
+
+def mindist_paa_isax(q_paa: jnp.ndarray, sym: jnp.ndarray,
+                     breakpoints: jnp.ndarray, seg_len: int,
+                     squared: bool = False):
+    """Classic mindist_PAA_iSAX (paper Eq. 4) — used by baselines/tests."""
+    lo = isax.beta_lower(sym, breakpoints)
+    hi = isax.beta_upper(sym, breakpoints)
+    return interval_mindist(q_paa, q_paa, lo, hi, seg_len, q_paa.shape[-1],
+                            squared)

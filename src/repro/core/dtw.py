@@ -1,0 +1,99 @@
+"""Dynamic Time Warping: banded DP, query envelopes, LB_Keogh (paper §3, §6.2).
+
+TPU adaptation of the O(l*r) Sakoe-Chiba DP: the row recurrence
+
+    D[i,j] = d(q_i, c_j) + min(D[i-1,j], D[i-1,j-1], D[i,j-1])
+
+has a serial in-row (left) dependency.  Setting M[j] = min(up, diag) it
+becomes x_j = d_j + min(M_j, x_{j-1}), whose closed form is
+
+    x_j = S_j + min_{k<=j} (M_k - S_{k-1}),   S = cumsum(d)
+
+i.e. one cumsum + one cummin per row — fully vectorizable on the VPU with a
+(2r+1)-wide band as the only carried state.  `lax.scan` over rows gives the
+O(l) sequential depth the DP fundamentally requires; everything else is
+data-parallel (and `vmap`s over candidate batches).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_BIG = jnp.float32(1e30)
+
+
+def dtw_envelope(q: jnp.ndarray, r: int):
+    """dtwENV_r(Q): running min/max of q over window [i-r, i+r] (paper §6.2).
+
+    q: (..., l).  Returns (lo, hi) each (..., l).
+    """
+    l = q.shape[-1]
+    pad_lo = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(r, r)], constant_values=jnp.inf)
+    pad_hi = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(r, r)], constant_values=-jnp.inf)
+    idx = jnp.arange(l)[:, None] + jnp.arange(2 * r + 1)[None, :]
+    lo = jnp.min(jnp.take(pad_lo, idx, axis=-1), axis=-1)
+    hi = jnp.max(jnp.take(pad_hi, idx, axis=-1), axis=-1)
+    return lo, hi
+
+
+def lb_keogh(env_lo: jnp.ndarray, env_hi: jnp.ndarray, c: jnp.ndarray,
+             squared: bool = False) -> jnp.ndarray:
+    """LB_Keogh(dtwENV_r(Q), C) (paper Eq. 6). Broadcasts over leading dims."""
+    over = jnp.maximum(c - env_hi, 0.0)
+    under = jnp.maximum(env_lo - c, 0.0)
+    d2 = jnp.sum(over * over + under * under, axis=-1)
+    return d2 if squared else jnp.sqrt(d2)
+
+
+@partial(jax.jit, static_argnames=("r", "squared"))
+def dtw_band(q: jnp.ndarray, c: jnp.ndarray, r: int, squared: bool = False):
+    """Banded DTW distance between equal-length q (l,) and c (..., l).
+
+    Band representation: row i stores costs for j = i-r .. i+r in a
+    (2r+1,) vector.  Between consecutive rows the band shifts by one, so
+    up/diag come from the previous band at k+1 / k; the in-row left
+    dependency is solved with the cumsum/cummin closed form (module
+    docstring).  Sequential depth l, O(r) work per step.
+    """
+    l = q.shape[-1]
+    if c.ndim > 1:
+        return jax.vmap(lambda cc: dtw_band(q, cc, r, squared))(c)
+    band = 2 * r + 1
+    ks = jnp.arange(band)
+
+    def row(prev, i):
+        # prev: (band,) costs of row i-1 (j = i-1-r .. i-1+r)
+        j = i - r + ks                                    # columns of row i
+        in_seq = (j >= 0) & (j < l)
+        cj = jnp.take(c, jnp.clip(j, 0, l - 1))
+        # masked cells cost 0 in the cumsum (so telescoping stays small and
+        # exact in float32) and are excluded by forcing their entry cost m to
+        # BIG and their output to BIG; out-of-band cells form contiguous
+        # prefixes/suffixes, so no valid path ever crosses one.
+        d = jnp.where(in_seq, (q[i] - cj) ** 2, 0.0)
+        up = jnp.concatenate([prev[1:], jnp.array([_BIG])])   # D[i-1, j]
+        diag = prev                                           # D[i-1, j-1]
+        m = jnp.where(in_seq, jnp.minimum(up, diag), _BIG)
+        # first cell of the row has no in-row left neighbor: x_j closed form
+        s = jnp.cumsum(d)
+        s_prev = jnp.concatenate([jnp.array([0.0], s.dtype), s[:-1]])
+        x = s + jax.lax.cummin(m - s_prev)
+        x = jnp.where(in_seq, jnp.minimum(x, _BIG), _BIG)
+        return x, None
+
+    # row 0: D[0, j] = sum_{m<=j} d(q_0, c_m) for 0 <= j <= r
+    j0 = jnp.arange(band) - r
+    in0 = (j0 >= 0) & (j0 < l)
+    d0 = jnp.where(in0, (q[0] - jnp.take(c, jnp.clip(j0, 0, l - 1))) ** 2, 0.0)
+    first = jnp.where(in0, jnp.cumsum(d0), _BIG)
+
+    last, _ = jax.lax.scan(row, first, jnp.arange(1, l))
+    out = last[r] if l > 1 else first[r]  # cell (l-1, l-1) sits at k = r
+    return out if squared else jnp.sqrt(out)
+
+
+def dtw_distance(q: jnp.ndarray, c: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Convenience alias matching the paper's DTW(D, D') with window r."""
+    return dtw_band(q, c, r, squared=False)

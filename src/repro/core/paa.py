@@ -1,0 +1,67 @@
+"""Piecewise Aggregate Approximation (PAA) primitives (paper §3.1).
+
+PAA(D) represents D in a w-dimensional space by the means of w contiguous
+segments of length s.  Everything here is pure jnp and shape-static.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paa(x: jnp.ndarray, seg_len: int) -> jnp.ndarray:
+    """PAA of the longest multiple-of-s prefix of x along the last axis.
+
+    x: (..., l). Returns (..., l // seg_len).
+    """
+    l = x.shape[-1]
+    w = l // seg_len
+    x = x[..., : w * seg_len]
+    return jnp.mean(x.reshape(*x.shape[:-1], w, seg_len), axis=-1)
+
+
+def znormalize(x: jnp.ndarray, axis: int = -1, eps: float = 1e-8) -> jnp.ndarray:
+    """Z-normalize: zero mean, unit (population) std along `axis`."""
+    mu = jnp.mean(x, axis=axis, keepdims=True)
+    sd = jnp.std(x, axis=axis, keepdims=True)
+    return (x - mu) / jnp.maximum(sd, eps)
+
+
+def prefix_sums(x: jnp.ndarray):
+    """(csum, csum2) with a leading zero along the last axis.
+
+    csum[..., i] = sum(x[..., :i]); window sums become 2 gathers.
+    """
+    zeros = jnp.zeros(x.shape[:-1] + (1,), x.dtype)
+    csum = jnp.concatenate([zeros, jnp.cumsum(x, axis=-1)], axis=-1)
+    csum2 = jnp.concatenate([zeros, jnp.cumsum(x * x, axis=-1)], axis=-1)
+    return csum, csum2
+
+
+def segment_sums(csum: jnp.ndarray, offsets: jnp.ndarray, seg_len: int, w: int):
+    """Sums of PAA segments for subsequences starting at `offsets`.
+
+    csum: (n + 1,) prefix sums of one series.
+    offsets: (...,) int32 start offsets.
+    Returns (..., w): segment z covers [o + z*s, o + (z+1)*s).
+    Out-of-range segments are garbage — callers must mask with
+    `o + (z+1)*s <= n`.
+    """
+    n = csum.shape[-1] - 1
+    z = jnp.arange(w, dtype=jnp.int32)
+    start = offsets[..., None] + z * seg_len          # (..., w)
+    end = start + seg_len
+    start_c = jnp.clip(start, 0, n)
+    end_c = jnp.clip(end, 0, n)
+    return jnp.take(csum, end_c, axis=-1) - jnp.take(csum, start_c, axis=-1)
+
+
+def query_paa(q: jnp.ndarray, seg_len: int, znorm: bool, eps: float = 1e-8) -> jnp.ndarray:
+    """Query-side PAA used by every lower bound (paper Alg. 4 line 1).
+
+    Z-normalizes the *full* query first (when the index is Z-normalized),
+    then takes the PAA of the longest multiple-of-s prefix.
+    """
+    q = jnp.asarray(q, jnp.float32)
+    if znorm:
+        q = znormalize(q, eps=eps)
+    return paa(q, seg_len)

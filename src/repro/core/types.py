@@ -1,0 +1,175 @@
+"""Core parameter and data types for the ULISSE framework.
+
+All series-level conventions are 0-based:
+  - a subsequence (o, l) of series D is D[o : o + l];
+  - a *master series* at offset o is D[o : o + min(|D| - o, lmax)];
+  - an Envelope anchored at `a` represents every subsequence (o, l) with
+    o in [a, a + gamma] and l in [lmin, lmax] that fits inside D.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvelopeParams:
+    """Static parameters of the ULISSE summarization (paper §4).
+
+    Attributes:
+      lmin / lmax: query length range [l_min, l_max].
+      gamma: number of *additional* master series per Envelope; one Envelope
+        represents masters at offsets a .. a + gamma (paper's gamma).
+      seg_len: PAA segment length `s`.
+      card: iSAX alphabet cardinality (paper uses 256 = 8 bits).
+      znorm: whether the index represents Z-normalized subsequences.
+    """
+
+    lmin: int
+    lmax: int
+    gamma: int
+    seg_len: int
+    card: int = 256
+    znorm: bool = True
+
+    def __post_init__(self):
+        if self.lmin > self.lmax:
+            raise ValueError(f"lmin={self.lmin} > lmax={self.lmax}")
+        if self.lmin < self.seg_len:
+            raise ValueError("lmin must be >= seg_len (need >= 1 PAA segment)")
+        if self.gamma < 0:
+            raise ValueError("gamma must be >= 0")
+        if self.card < 2 or self.card > 256:
+            raise ValueError("card must be in [2, 256]")
+
+    @property
+    def w(self) -> int:
+        """Number of PAA segments covering the longest subsequence."""
+        return self.lmax // self.seg_len
+
+    @property
+    def n_master(self) -> int:
+        """Max number of master series represented by one Envelope."""
+        return self.gamma + 1
+
+    def num_envelopes(self, series_len: int) -> int:
+        """Number of Envelopes extracted from one series of length n.
+
+        Anchors are a_j = j * (gamma + 1) while a_j + lmin <= n.
+        """
+        if series_len < self.lmin:
+            return 0
+        n_start = series_len - self.lmin + 1  # valid master start positions
+        return -(-n_start // (self.gamma + 1))  # ceil division
+
+    def query_segments(self, qlen: int) -> int:
+        """Number of PAA segments of the longest multiple-of-s query prefix."""
+        if not (self.lmin <= qlen <= self.lmax):
+            raise ValueError(f"query length {qlen} outside [{self.lmin}, {self.lmax}]")
+        return qlen // self.seg_len
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Collection:
+    """A data series collection: fixed-length series stacked in one array.
+
+    `data` is (num_series, series_len) float32.  Running sums are kept for
+    O(1) window statistics (paper Alg. 2 keeps accSum / accSqSum; here they
+    are materialized as cumulative arrays so every (offset, length) window's
+    mean / std is a 2-gather).  Series are centered per-series before the
+    squared cumsum to keep float32 variance computation well-conditioned
+    (Z-normalization is invariant to per-series shifts).
+    """
+
+    data: jnp.ndarray          # (S, n) raw values
+    csum: jnp.ndarray          # (S, n + 1) cumsum of centered values
+    csum2: jnp.ndarray         # (S, n + 1) cumsum of squared centered values
+    center: jnp.ndarray        # (S,) per-series mean removed before csum/csum2
+
+    @classmethod
+    def from_array(cls, data) -> "Collection":
+        data = jnp.asarray(data, jnp.float32)
+        if data.ndim == 1:
+            data = data[None]
+        center = jnp.mean(data, axis=-1)
+        centered = data - center[:, None]
+        zeros = jnp.zeros((data.shape[0], 1), jnp.float32)
+        csum = jnp.concatenate([zeros, jnp.cumsum(centered, axis=-1)], axis=-1)
+        csum2 = jnp.concatenate([zeros, jnp.cumsum(centered * centered, axis=-1)], axis=-1)
+        return cls(data=data, csum=csum, csum2=csum2, center=center)
+
+    @property
+    def num_series(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def series_len(self) -> int:
+        return self.data.shape[1]
+
+    def window_stats(self, sid, off, length):
+        """(mean, std) of windows data[sid, off : off + length] (vectorized)."""
+        s1 = self.csum[sid, off + length] - self.csum[sid, off]
+        s2 = self.csum2[sid, off + length] - self.csum2[sid, off]
+        mu_c = s1 / length
+        var = jnp.maximum(s2 / length - mu_c * mu_c, 0.0)
+        return mu_c + self.center[sid], jnp.sqrt(var)
+
+    def tree_flatten(self):
+        return (self.data, self.csum, self.csum2, self.center), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EnvelopeSet:
+    """A flat array-of-structs set of ULISSE Envelopes.
+
+    Shapes: N = number of envelopes, w = PAA segments.
+      paa_lo / paa_hi : (N, w) float32 — real-valued L / U PAA bounds.
+      sym_lo / sym_hi : (N, w) int32   — iSAX(L) / iSAX(U) symbols.
+      series_id       : (N,)  int32    — source series in the Collection.
+      anchor          : (N,)  int32    — first master offset `a`.
+      n_master        : (N,)  int32    — number of valid masters (<= gamma+1).
+      valid           : (N,)  bool     — padding mask (False = padding row).
+
+    Segments never touched by any represented subsequence carry
+    paa_lo=-inf / paa_hi=+inf so they contribute zero to every lower bound.
+    """
+
+    paa_lo: jnp.ndarray
+    paa_hi: jnp.ndarray
+    sym_lo: jnp.ndarray
+    sym_hi: jnp.ndarray
+    series_id: jnp.ndarray
+    anchor: jnp.ndarray
+    n_master: jnp.ndarray
+    valid: jnp.ndarray
+
+    @property
+    def size(self) -> int:
+        return self.paa_lo.shape[0]
+
+    @property
+    def w(self) -> int:
+        return self.paa_lo.shape[1]
+
+    def tree_flatten(self):
+        return (
+            self.paa_lo, self.paa_hi, self.sym_lo, self.sym_hi,
+            self.series_id, self.anchor, self.n_master, self.valid,
+        ), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def concat_envelope_sets(sets) -> EnvelopeSet:
+    return jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs, axis=0), *sets)

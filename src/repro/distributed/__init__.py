@@ -1,0 +1,1 @@
+"""Distributed runtime: sharded ULISSE, collectives, grad compression."""

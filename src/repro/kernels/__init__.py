@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the ULISSE hot spots (+ ops wrappers, ref oracles)."""
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,84 @@
+"""Pallas kernel: batched Euclidean verification on the MXU ("MASS-on-MXU").
+
+The paper's verification step (and its strongest serial competitor, MASS)
+computes ED between a query and many overlapping windows.  MASS uses FFT
+dot products; an FFT has no MXU mapping, but the underlying identity does:
+
+    ED^2(q, w)           = ||w||^2 - 2 w.q + ||q||^2          (raw)
+    ED_z^2(qhat, w)      = 2L - 2 (w @ qhat) / sigma_w        (Z-normalized,
+                            query pre-normalized; w @ qhat is shift-invariant)
+
+so verification becomes one (N, L) x (L, Qb) matmul on the systolic array,
+with window statistics fused into the same VMEM pass.  This is the paper's
+hardware adaptation centerpiece (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (LANES, SUBLANES, VMEM_BUDGET, pad_axis,
+                                  pick_block_rows, round_up)
+
+
+def _batch_ed_kernel(w_ref, q_ref, len_ref, out_ref, *, znorm: bool,
+                     qlen: int):
+    w = w_ref[...]                                   # (block_n, L_pad)
+    q = q_ref[...]                                   # (L_pad, Qb_pad)
+    dots = jnp.dot(w, q, preferred_element_type=jnp.float32)
+    inv_l = 1.0 / jnp.float32(qlen)
+    if znorm:
+        mu = jnp.sum(w, axis=-1, keepdims=True) * inv_l
+        ssq = jnp.sum(w * w, axis=-1, keepdims=True) * inv_l
+        var = jnp.maximum(ssq - mu * mu, 0.0)
+        sd = jnp.maximum(jnp.sqrt(var), 1e-8)
+        d2 = 2.0 * jnp.float32(qlen) - 2.0 * dots / sd
+    else:
+        wss = jnp.sum(w * w, axis=-1, keepdims=True)
+        qss = len_ref[...]                            # (1, Qb_pad) ||q||^2
+        d2 = wss - 2.0 * dots + qss
+    out_ref[...] = jnp.maximum(d2, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("znorm", "interpret"))
+def batch_ed_pallas(windows: jnp.ndarray, queries: jnp.ndarray,
+                    znorm: bool, interpret: bool = True):
+    """Squared ED of every window (N, L) against every query (Qb, L).
+
+    Padding: L to 128 (zero padding is exact — zero columns add nothing to
+    dots or window stats *only* in raw mode; in znorm mode stats divide by
+    the true L captured statically, and padded columns are zeros in both
+    operands so dots are unaffected).  Returns (N, Qb).
+    """
+    n, l = windows.shape
+    qb = queries.shape[0]
+    w_p, _ = pad_axis(windows, 1, LANES)
+    q_p, _ = pad_axis(queries, 1, LANES)
+    l_pad = w_p.shape[1]
+    qt = q_p.T                                        # (L_pad, Qb)
+    qt, _ = pad_axis(qt, 1, LANES)
+    qb_pad = qt.shape[1]
+    qss = jnp.sum(q_p * q_p, axis=-1)
+    qss = jnp.pad(qss, (0, qb_pad - qb))[None, :]     # (1, Qb_pad)
+
+    row_bytes = (l_pad + qb_pad) * 4
+    block_n = pick_block_rows(row_bytes, max_rows=512)
+    w_p, _ = pad_axis(w_p, 0, block_n)
+    n_pad = w_p.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_batch_ed_kernel, znorm=znorm, qlen=l),
+        out_shape=jax.ShapeDtypeStruct((n_pad, qb_pad), jnp.float32),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, l_pad), lambda i: (i, 0)),
+            pl.BlockSpec((l_pad, qb_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, qb_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, qb_pad), lambda i: (i, 0)),
+        interpret=interpret,
+    )(w_p, qt, qss)
+    return out[:n, :qb]

@@ -1,0 +1,100 @@
+"""Pallas kernel: banded Sakoe-Chiba DTW DP (paper §3 + §6, the O(l*r) DP).
+
+TPU adaptation (DESIGN.md §3): the DP's only fundamental serialization is
+over rows; within a row the left-neighbor recurrence
+
+    x_j = d_j + min(M_j, x_{j-1}),   M_j = min(up_j, diag_j)
+
+has the closed form x = cumsum(d) + cummin(M - shift(cumsum(d))), i.e. two
+log-depth lane scans on the VPU.  The carried state is one (2r+1)-wide band
+per candidate; a *batch* of candidates rides the sublane axis so each scan
+step is a full (block_b, band_pad) VPU tile.  Wrapper pads candidates with
+r zeros on each side so the per-row window slice always starts at column i
+(never negative), and masks recover exact semantics.
+
+VMEM working set per grid step: block_b * (l + 2r, padded) candidate tile +
+the query row + one band tile — sized by pick_block_rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (LANES, cummin_lanes, cumsum_lanes,
+                                  pad_axis, pick_block_rows, round_up)
+
+_BIG = 1e30  # plain float: jnp constants would be captured by the kernel
+
+
+def _dtw_band_kernel(q_ref, c_ref, out_ref, *, l: int, r: int,
+                     band_pad: int):
+    """One block of candidates: full banded DP, band carried in registers."""
+    band = 2 * r + 1
+    q = q_ref[...]                       # (1, l)
+    c = c_ref[...]                       # (block_b, l + 2r padded); col j+r = c_j
+    ks = jax.lax.broadcasted_iota(jnp.int32, (1, band_pad), 1)   # lane ids
+    in_band = ks < band
+
+    def window(i):
+        """Candidate values aligned to row i's band: lane k -> c[i - r + k]."""
+        return jax.lax.dynamic_slice(c, (0, i), (c.shape[0], band_pad))
+
+    def row_cost(i, w):
+        j = i - r + ks                   # column of lane k
+        in_seq = (j >= 0) & (j < l) & in_band
+        qi = jax.lax.dynamic_slice(q, (0, i), (1, 1))
+        d = jnp.where(in_seq, (qi - w) ** 2, 0.0)
+        return d, in_seq
+
+    # row 0: D[0, j] = sum_{m <= j} d(q_0, c_m), 0 <= j <= r
+    d0, in0 = row_cost(0, window(0))
+    band0 = jnp.where(in0, cumsum_lanes(d0), _BIG)
+
+    def step(i, prev):
+        d, in_seq = row_cost(i, window(i))
+        # up = D[i-1, j] sits one lane right in the shifted band; diag = prev
+        up = jnp.concatenate(
+            [prev[:, 1:], jnp.full((prev.shape[0], 1), _BIG)], axis=-1)
+        m = jnp.where(in_seq, jnp.minimum(up, prev), _BIG)
+        s = cumsum_lanes(d)
+        s_prev = jnp.concatenate(
+            [jnp.zeros((s.shape[0], 1), s.dtype), s[:, :-1]], axis=-1)
+        x = s + cummin_lanes(m - s_prev)
+        return jnp.where(in_seq, jnp.minimum(x, _BIG), _BIG)
+
+    last = jax.lax.fori_loop(1, l, step, band0) if l > 1 else band0
+    out_ref[...] = last[:, r][:, None]   # cell (l-1, l-1) sits at lane r
+
+
+@functools.partial(jax.jit, static_argnames=("r", "squared", "interpret"))
+def dtw_band_pallas(q: jnp.ndarray, candidates: jnp.ndarray, r: int,
+                    squared: bool = True, interpret: bool = True):
+    """Banded DTW of q (l,) against candidates (N, l). Returns (N,)."""
+    n, l = candidates.shape
+    band_pad = round_up(2 * r + 1, LANES)
+    # left pad r zeros (window alignment) and right-pad so every row slice
+    # of width band_pad stays in bounds: need width >= (l - 1) + band_pad.
+    width = round_up(l - 1 + band_pad, LANES)
+    c_p = jnp.pad(candidates, ((0, 0), (r, width - l - r)))
+    q_p = jnp.pad(q, (0, round_up(l, LANES) - l))[None, :]
+
+    block_b = pick_block_rows((width + band_pad) * 4, max_rows=256)
+    c_p, _ = pad_axis(c_p, 0, block_b)
+    n_pad = c_p.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_dtw_band_kernel, l=l, r=r, band_pad=band_pad),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        grid=(n_pad // block_b,),
+        in_specs=[
+            pl.BlockSpec((1, q_p.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, width), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        interpret=interpret,
+    )(q_p, c_p)
+    d2 = out[:n, 0]
+    return d2 if squared else jnp.sqrt(d2)

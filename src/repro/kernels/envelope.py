@@ -1,0 +1,108 @@
+"""Pallas kernel: Z-normalized Envelope construction (paper Alg. 2).
+
+The paper's inner loops evaluate, for every master offset o and every
+subsequence length l' in [lmin, lmax], the normalized PAA coefficients
+
+    paaNorm(o, l', z) = (segmean(o, z) - mu(o, l')) / sigma(o, l')
+
+and min/max-reduce them into the Envelope.  XLA materializes the full
+(masters, lengths, segments) grid (it cannot fuse a min-reduce over a
+broadcasted quotient without a temp); this kernel streams the lengths axis
+instead: the L = lmax - lmin + 1 window-sum rows are read once HBM->VMEM,
+each updating a VMEM-resident (w, block_m) min/max accumulator.  Peak
+memory drops from O(M*L*w) to O(M*w + block working set).
+
+Layout: masters on lanes (the huge axis), segments on sublanes; per-length
+window sums s1/s2 are (L, block_m) tiles consumed row by row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANES, SUBLANES, pad_axis, pick_block_rows
+
+_POS = 3.0e38   # plain floats: jnp constants would be captured by the kernel
+_NEG = -3.0e38
+
+
+def _envelope_kernel(segmean_ref, s1_ref, s2_ref, off_ref, lo_ref, hi_ref, *,
+                     n: int, lmin: int, lmax: int, seg_len: int, w: int,
+                     w_pad: int):
+    segmean = segmean_ref[...]                    # (w_pad, block_m)
+    off = off_ref[...]                            # (1, block_m) int32
+    z = jax.lax.broadcasted_iota(jnp.int32, (w_pad, 1), 0)
+    seg_end = (z + 1) * seg_len                   # end of segment z (rel.)
+    seg_real = z < w
+
+    def step(t, carry):
+        lo, hi = carry
+        lprime = lmin + t
+        s1 = jax.lax.dynamic_slice(s1_ref[...], (t, 0), (1, segmean.shape[1]))
+        s2 = jax.lax.dynamic_slice(s2_ref[...], (t, 0), (1, segmean.shape[1]))
+        inv = 1.0 / jnp.float32(lprime)
+        mu = s1 * inv                             # (1, block_m)
+        var = jnp.maximum(s2 * inv - mu * mu, 0.0)
+        sigma = jnp.maximum(jnp.sqrt(var), 1e-8)
+        vals = (segmean - mu) / sigma             # (w_pad, block_m)
+        # segment inside subsequence AND subsequence inside series
+        mask = seg_real & (seg_end <= lprime) & (off + lprime <= n)
+        lo = jnp.minimum(lo, jnp.where(mask, vals, _POS))
+        hi = jnp.maximum(hi, jnp.where(mask, vals, _NEG))
+        return lo, hi
+
+    init = (jnp.full(segmean.shape, _POS), jnp.full(segmean.shape, _NEG))
+    lo, hi = jax.lax.fori_loop(0, lmax - lmin + 1, step, init)
+    lo_ref[...] = lo
+    hi_ref[...] = hi
+
+
+@functools.partial(jax.jit, static_argnames=("n", "lmin", "lmax", "seg_len",
+                                             "interpret"))
+def envelope_znorm_pallas(segmean: jnp.ndarray, s1: jnp.ndarray,
+                          s2: jnp.ndarray, offsets: jnp.ndarray,
+                          n: int, lmin: int, lmax: int, seg_len: int,
+                          interpret: bool = True):
+    """Per-master normalized PAA bounds (the Alg. 2 length reduction).
+
+    segmean: (M, w) raw segment means per master offset.
+    s1 / s2: (M, L) window sums / squared sums for lengths lmin..lmax
+             (s1[m, t] = sum of series[off_m : off_m + lmin + t]).
+    offsets: (M,) int32 master offsets.
+    Returns (lo, hi): (M, w); masters whose (length, segment) cell is never
+    valid keep +/-BIG sentinels (callers _finalize to +-inf).
+    """
+    m, w = segmean.shape
+    L = s1.shape[1]
+    sm_t, _ = pad_axis(segmean.T, 0, SUBLANES)              # (w_pad, M)
+    w_pad = sm_t.shape[0]
+    block_m = pick_block_rows((w_pad + 2 * L) * 4,
+                              max_rows=4096, min_rows=LANES)
+    block_m = max((block_m // LANES) * LANES, LANES)
+    sm_t, _ = pad_axis(sm_t, 1, block_m)
+    s1_t, _ = pad_axis(s1.T, 1, block_m)                    # (L, M_pad)
+    s2_t, _ = pad_axis(s2.T, 1, block_m)
+    off_p, _ = pad_axis(offsets.astype(jnp.int32)[None, :], 1, block_m,
+                        value=n + 1)                        # padding invalid
+    m_pad = sm_t.shape[1]
+
+    lo, hi = pl.pallas_call(
+        functools.partial(_envelope_kernel, n=n, lmin=lmin, lmax=lmax,
+                          seg_len=seg_len, w=w, w_pad=w_pad),
+        out_shape=(jax.ShapeDtypeStruct((w_pad, m_pad), jnp.float32),
+                   jax.ShapeDtypeStruct((w_pad, m_pad), jnp.float32)),
+        grid=(m_pad // block_m,),
+        in_specs=[
+            pl.BlockSpec((w_pad, block_m), lambda i: (0, i)),
+            pl.BlockSpec((L, block_m), lambda i: (0, i)),
+            pl.BlockSpec((L, block_m), lambda i: (0, i)),
+            pl.BlockSpec((1, block_m), lambda i: (0, i)),
+        ],
+        out_specs=(pl.BlockSpec((w_pad, block_m), lambda i: (0, i)),
+                   pl.BlockSpec((w_pad, block_m), lambda i: (0, i))),
+        interpret=interpret,
+    )(sm_t, s1_t, s2_t, off_p)
+    return lo[:w, :m].T, hi[:w, :m].T

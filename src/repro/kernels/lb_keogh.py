@@ -1,0 +1,56 @@
+"""Pallas kernel: batched LB_Keogh (paper Eq. 6) — the DTW second-tier
+filter.  Elementwise VPU work streaming candidate windows once; the query's
+DTW envelope stays VMEM-resident across the whole grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANES, pad_axis, pick_block_rows
+
+
+def _lb_keogh_kernel(lo_ref, hi_ref, w_ref, out_ref):
+    lo = lo_ref[...]                                  # (1, L_pad)
+    hi = hi_ref[...]
+    w = w_ref[...]                                    # (block_n, L_pad)
+    over = jnp.maximum(w - hi, 0.0)
+    under = jnp.maximum(lo - w, 0.0)
+    d2 = jnp.sum(over * over + under * under, axis=-1, keepdims=True)
+    out_ref[...] = d2                                 # (block_n, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lb_keogh_pallas(env_lo: jnp.ndarray, env_hi: jnp.ndarray,
+                    windows: jnp.ndarray, interpret: bool = True):
+    """Squared LB_Keogh: env (L,), windows (N, L) -> (N,).
+
+    Padding columns carry lo=-BIG / hi=+BIG so they never contribute.
+    """
+    n, l = windows.shape
+    big = jnp.float32(3.0e38)
+    w_p, _ = pad_axis(windows, 1, LANES)
+    l_pad = w_p.shape[1]
+    lo_p = jnp.pad(env_lo, (0, l_pad - l), constant_values=-big)[None, :]
+    hi_p = jnp.pad(env_hi, (0, l_pad - l), constant_values=big)[None, :]
+
+    block_n = pick_block_rows(l_pad * 4, max_rows=1024)
+    w_p, _ = pad_axis(w_p, 0, block_n)
+    n_pad = w_p.shape[0]
+
+    out = pl.pallas_call(
+        _lb_keogh_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((1, l_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, l_pad), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, l_pad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        interpret=interpret,
+    )(lo_p, hi_p, w_p)
+    return out[:n, 0]

@@ -1,0 +1,85 @@
+"""Pallas kernel: streaming envelope lower bounds (paper Eq. 5 / Eq. 8).
+
+This is the dominant op of ULISSE exact search (paper Fig. 23f: LB
+computations outnumber true-distance computations by orders of magnitude).
+It is purely memory-bound: N envelopes x 2w floats stream HBM->VMEM once,
+each producing one scalar.
+
+Layout: *segment-major* (w, N) so the huge N axis sits on lanes — tiles are
+(w_pad sublanes, block_n lanes), perfectly aligned for w<=8/16 instead of
+wasting 112/128 lanes in envelope-major layout.  The query interval is a
+(w_pad, 1) VMEM-resident block broadcast across lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANES, SUBLANES, pad_axis, round_up
+
+_BIGF = jnp.float32(3.0e38)
+
+
+def _mindist_kernel(qlo_ref, qhi_ref, elo_ref, ehi_ref, out_ref, *,
+                    seg_len: int):
+    qlo = qlo_ref[...]                       # (w_pad, 1)
+    qhi = qhi_ref[...]
+    elo = elo_ref[...]                       # (w_pad, block_n)
+    ehi = ehi_ref[...]
+    gap = jnp.maximum(jnp.maximum(elo - qhi, qlo - ehi), 0.0)
+    gap = jnp.where(jnp.isfinite(gap), gap, 0.0)
+    d2 = jnp.float32(seg_len) * jnp.sum(gap * gap, axis=0, keepdims=True)
+    out_ref[...] = jnp.sqrt(d2)              # (1, block_n)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("seg_len", "nseg", "block_n", "interpret"))
+def mindist_pallas(q_lo: jnp.ndarray, q_hi: jnp.ndarray,
+                   e_lo: jnp.ndarray, e_hi: jnp.ndarray,
+                   seg_len: int, nseg: int,
+                   block_n: int = 4096, interpret: bool = True):
+    """Lower bounds of one query interval against N envelopes.
+
+    q_lo/q_hi: (w,); e_lo/e_hi: (N, w). Returns (N,) distances.
+    Inactive segments (>= nseg) are neutralized by substituting
+    unconstrained bounds, so the kernel body stays branch-free.
+    """
+    w = q_lo.shape[-1]
+    n = e_lo.shape[0]
+    # deactivate segments beyond the query prefix
+    seg_ok = jnp.arange(w) < nseg
+    q_lo = jnp.where(seg_ok, q_lo, 0.0)
+    q_hi = jnp.where(seg_ok, q_hi, 0.0)
+    e_lo_m = jnp.where(seg_ok[None, :], e_lo, -_BIGF)
+    e_hi_m = jnp.where(seg_ok[None, :], e_hi, _BIGF)
+
+    # segment-major layout, pad w to sublanes and N to lanes*block
+    elo_t, _ = pad_axis(e_lo_m.T, 0, SUBLANES)            # (w_pad, N)
+    ehi_t, _ = pad_axis(e_hi_m.T, 0, SUBLANES, value=0.0)
+    elo_t = jnp.where(jnp.arange(elo_t.shape[0])[:, None] < w, elo_t, 0.0)
+    ehi_t = jnp.where(jnp.arange(ehi_t.shape[0])[:, None] < w, ehi_t, 0.0)
+    block_n = min(block_n, round_up(n, LANES))
+    elo_t, _ = pad_axis(elo_t, 1, block_n, value=0.0)
+    ehi_t, _ = pad_axis(ehi_t, 1, block_n, value=0.0)
+    w_pad, n_pad = elo_t.shape
+
+    qlo_c = jnp.pad(q_lo, (0, w_pad - w))[:, None]        # (w_pad, 1)
+    qhi_c = jnp.pad(q_hi, (0, w_pad - w))[:, None]
+
+    out = pl.pallas_call(
+        functools.partial(_mindist_kernel, seg_len=seg_len),
+        out_shape=jax.ShapeDtypeStruct((1, n_pad), jnp.float32),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((w_pad, 1), lambda i: (0, 0)),
+            pl.BlockSpec((w_pad, 1), lambda i: (0, 0)),
+            pl.BlockSpec((w_pad, block_n), lambda i: (0, i)),
+            pl.BlockSpec((w_pad, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        interpret=interpret,
+    )(qlo_c, qhi_c, elo_t, ehi_t)
+    return out[0, :n]

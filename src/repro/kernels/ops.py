@@ -1,0 +1,65 @@
+"""Public jitted entry points for the kernel layer.
+
+Each op dispatches to the Pallas kernel (interpret=True on CPU — the TPU
+target executes the same BlockSpec'd kernel compiled by Mosaic) and is the
+only surface core/search and the benchmarks call.  `use_pallas=False` falls
+back to the pure-jnp oracle, which is what the correctness sweeps compare
+against.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.batch_ed import batch_ed_pallas
+from repro.kernels.common import default_interpret
+from repro.kernels.dtw_band import dtw_band_pallas
+from repro.kernels.envelope import envelope_znorm_pallas
+from repro.kernels.lb_keogh import lb_keogh_pallas
+from repro.kernels.mindist import mindist_pallas
+
+
+def mindist(q_lo, q_hi, e_lo, e_hi, seg_len: int, nseg: int,
+            use_pallas: bool = True):
+    """Envelope lower bounds (Eq. 5 / Eq. 8): (N,) distances."""
+    if not use_pallas:
+        return ref.mindist_ref(q_lo, q_hi, e_lo, e_hi, seg_len, nseg)
+    return mindist_pallas(q_lo, q_hi, e_lo, e_hi, seg_len, nseg,
+                          interpret=default_interpret())
+
+
+def batch_ed(windows, queries, znorm: bool, use_pallas: bool = True):
+    """Squared ED of (N, L) windows vs (Qb, L) queries -> (N, Qb)."""
+    if not use_pallas:
+        return ref.batch_ed_ref(windows, queries, znorm)
+    return batch_ed_pallas(windows, queries, znorm,
+                           interpret=default_interpret())
+
+
+def lb_keogh(env_lo, env_hi, windows, use_pallas: bool = True):
+    """Squared LB_Keogh of (N, L) windows vs a query DTW envelope -> (N,)."""
+    if not use_pallas:
+        return ref.lb_keogh_ref(env_lo, env_hi, windows)
+    return lb_keogh_pallas(env_lo, env_hi, windows,
+                           interpret=default_interpret())
+
+
+def dtw_band(q, candidates, r: int, use_pallas: bool = True):
+    """Squared banded DTW of q (L,) vs candidates (N, L) -> (N,)."""
+    if not use_pallas:
+        return ref.dtw_band_ref(q, candidates, r)
+    return dtw_band_pallas(q, candidates, r, squared=True,
+                           interpret=default_interpret())
+
+
+def envelope_znorm(segmean, s1, s2, offsets, n: int, lmin: int, lmax: int,
+                   seg_len: int, use_pallas: bool = True):
+    """Alg. 2 length-reduction: per-master normalized PAA (lo, hi)."""
+    if not use_pallas:
+        return ref.envelope_scan_ref(segmean, s1, s2, offsets, n, lmin,
+                                     lmax, seg_len)
+    return envelope_znorm_pallas(segmean, s1, s2, offsets, n, lmin, lmax,
+                                 seg_len, interpret=default_interpret())

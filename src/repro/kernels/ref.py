@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` of kernels/).
+
+Each function is the semantic ground truth its kernel must reproduce;
+tests sweep shapes/dtypes and assert allclose(kernel, ref).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mindist_ref(q_lo, q_hi, e_lo, e_hi, seg_len: int, nseg: int):
+    """Interval-vs-interval lower bound (Eq. 5 / Eq. 8 unified).
+
+    q_lo/q_hi: (w,); e_lo/e_hi: (N, w). Returns (N,) distances (not squared).
+    Segments >= nseg are inactive; +-inf envelope bounds contribute zero.
+    """
+    gap = jnp.maximum(jnp.maximum(e_lo[:, :nseg] - q_hi[None, :nseg],
+                                  q_lo[None, :nseg] - e_hi[:, :nseg]), 0.0)
+    gap = jnp.where(jnp.isfinite(gap), gap, 0.0)
+    return jnp.sqrt(seg_len * jnp.sum(gap * gap, axis=-1))
+
+
+def batch_ed_ref(windows, queries, znorm: bool):
+    """Squared ED between every window (N, L) and every query (Qb, L).
+
+    Z-normalized mode: queries must already be Z-normalized; windows are
+    normalized implicitly via the dot-product identity
+        ED^2 = 2L - 2 (W @ qhat) / sigma_w.
+    Returns (N, Qb).
+    """
+    l = windows.shape[-1]
+    dots = windows @ queries.T                       # (N, Qb)
+    if znorm:
+        mu = jnp.mean(windows, axis=-1)
+        var = jnp.mean(windows * windows, axis=-1) - mu * mu
+        sd = jnp.maximum(jnp.sqrt(jnp.maximum(var, 0.0)), 1e-8)
+        d2 = 2.0 * l - 2.0 * dots / sd[:, None]
+    else:
+        wss = jnp.sum(windows * windows, axis=-1)
+        qss = jnp.sum(queries * queries, axis=-1)
+        d2 = wss[:, None] - 2.0 * dots + qss[None, :]
+    return jnp.maximum(d2, 0.0)
+
+
+def lb_keogh_ref(env_lo, env_hi, windows):
+    """Squared LB_Keogh (Eq. 6): env (L,), windows (N, L) -> (N,)."""
+    over = jnp.maximum(windows - env_hi[None, :], 0.0)
+    under = jnp.maximum(env_lo[None, :] - windows, 0.0)
+    return jnp.sum(over * over + under * under, axis=-1)
+
+
+def dtw_band_ref(q, candidates, r: int):
+    """Squared banded DTW: q (L,), candidates (N, L) -> (N,).
+
+    Delegates to the core scan implementation (itself validated against a
+    numpy triple-loop DP in the tests).
+    """
+    from repro.core.dtw import dtw_band
+    return dtw_band(q, candidates, r, squared=True)
+
+
+def envelope_raw_ref(series, lmin: int, lmax: int, gamma: int, seg_len: int):
+    """Alg. 1 oracle: series (B, n) -> (lo, hi) each (B, n_env, w)."""
+    from repro.core.envelope import build_envelopes_raw
+    from repro.core.types import EnvelopeParams
+    p = EnvelopeParams(lmin=lmin, lmax=lmax, gamma=gamma, seg_len=seg_len,
+                       card=4, znorm=False)
+    lo, hi, _ = jax.vmap(build_envelopes_raw, in_axes=(0, None))(series, p)
+    return lo, hi
+
+
+def envelope_scan_ref(segmean, s1, s2, offsets, n: int, lmin: int,
+                      lmax: int, seg_len: int):
+    """Alg. 2 length reduction, materialized (the kernel streams it).
+
+    segmean (M, w), s1/s2 (M, L), offsets (M,).  Builds the full
+    (M, L, w) normalization grid and min/max-reduces over L.  Cells where
+    the segment exceeds l' or the subsequence exceeds the series keep
+    +/-BIG sentinels (matching the kernel).
+    """
+    big = jnp.float32(3.0e38)
+    m, w = segmean.shape
+    L = s1.shape[1]
+    lprime = lmin + jnp.arange(L, dtype=jnp.int32)           # (L,)
+    mu = s1 / lprime[None, :]                                # (M, L)
+    var = jnp.maximum(s2 / lprime[None, :] - mu * mu, 0.0)
+    sigma = jnp.maximum(jnp.sqrt(var), 1e-8)
+    vals = (segmean[:, None, :] - mu[..., None]) / sigma[..., None]  # (M,L,w)
+    seg_end = (jnp.arange(w, dtype=jnp.int32) + 1) * seg_len
+    mask = ((seg_end[None, None, :] <= lprime[None, :, None])
+            & ((offsets[:, None] + lprime[None, :]) <= n)[..., None])
+    lo = jnp.min(jnp.where(mask, vals, big), axis=1)
+    hi = jnp.max(jnp.where(mask, vals, -big), axis=1)
+    return lo, hi
+
+
+def envelope_znorm_ref(series, lmin: int, lmax: int, gamma: int, seg_len: int):
+    """Alg. 2 oracle: series (B, n) -> (lo, hi) each (B, n_env, w)."""
+    from repro.core.envelope import build_envelopes_znorm
+    from repro.core.types import EnvelopeParams
+    p = EnvelopeParams(lmin=lmin, lmax=lmax, gamma=gamma, seg_len=seg_len,
+                       card=4, znorm=True)
+    lo, hi, _ = jax.vmap(build_envelopes_znorm, in_axes=(0, None))(series, p)
+    return lo, hi

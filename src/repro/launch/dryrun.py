@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.
+
+For each cell this driver:
+  1. builds the production mesh ((16,16) or (2,16,16)),
+  2. builds abstract params/caches/batches (ShapeDtypeStructs, no
+     allocation) and their NamedShardings,
+  3. jit(step).lower(...).compile(),
+  4. records memory_analysis (proves the cell fits 16 GB/chip),
+     cost_analysis (FLOPs/bytes for the roofline), and the collective
+     operand bytes parsed from the optimized HLO,
+  5. appends a JSON record consumed by benchmarks/roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek_7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod] [--out results.jsonl]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import cell_setup
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (per-chip effective, 1 link)
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8,
+                "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32"
+                       r"|u16|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    base = _DTYPE_BYTES.get(dtype, _DTYPE_BYTES.get(dtype[:3], 4))
+    return n * base
+
+
+def f32_promotion_bytes(hlo_text: str, floor: int = 256 * 2**20) -> int:
+    """XLA:CPU promotes bf16 dot operands to f32 and hoists whole-stack
+    converts out of while loops; Mosaic/TPU consumes bf16 natively.  Sum
+    the sizes of large f32 buffers that shadow a same-shape bf16 buffer —
+    subtracted from temp for the TPU-adjusted memory estimate."""
+    seen = {"f32": set(), "bf16": set()}
+    for m in re.finditer(r"= (f32|bf16)\[([0-9,]+)\]", hlo_text):
+        seen[m.group(1)].add(m.group(2))
+    total = 0
+    for dims in seen["f32"] & seen["bf16"]:
+        b = _shape_bytes("f32", dims)
+        if b >= floor:
+            total += b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device operand bytes of every collective in the optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        rhs = line.split(" = ", 1)[1]
+        for op in _COLLECTIVES:
+            # match the op as the instruction (e.g. "bf16[..] all-gather(")
+            if re.search(rf"\b{op}(?:-start|-done)?\(", rhs):
+                paren = rhs.split("(", 1)[1]
+                operands = paren.rsplit(")", 1)[0]
+                ob = sum(_shape_bytes(m.group(1), m.group(2))
+                         for m in _SHAPE_RE.finditer(operands))
+                if ob == 0 and op != "all-to-all":
+                    # some dialects omit operand shapes: use result shape
+                    m = _SHAPE_RE.search(rhs.split("(", 1)[0])
+                    if m:
+                        ob = _shape_bytes(m.group(1), m.group(2))
+                out[op] += ob
+                counts[op] += 1
+                break
+    out["counts"] = counts
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def model_flops(cfg, kind: str, seq: int, batch: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D_new (decode/prefill fwd-only)."""
+    n_active = cfg.num_params(active_only=True)
+    tokens = batch * seq if kind != "decode" else batch * 1
+    mult = 6 if kind == "train" else 2
+    return float(mult) * n_active * tokens
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             microbatches: int = 0, setup_override=None,
+             hlo_dir: str = "/root/repo/results/hlo") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    cell = (setup_override or cell_setup)(
+        arch_id, shape_name, mesh, microbatches=microbatches)
+    step = cell["step"]
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(step,
+                         in_shardings=cell["in_shardings"],
+                         out_shardings=cell["out_shardings"],
+                         donate_argnums=cell["donate"])
+        lowered = jitted.lower(*cell["args"])
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    hlo = compiled.as_text()
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag = f"{arch_id}__{shape_name}__" \
+              f"{'2x16x16' if multi_pod else '16x16'}"
+        import gzip
+        with gzip.open(os.path.join(hlo_dir, tag + ".hlo.gz"), "wt") as f:
+            f.write(hlo)
+    coll = collective_bytes(hlo)
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll["total"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cell["cfg"], cell["kind"], cell["seq"], cell["batch"])
+    hlo_total = flops_dev * chips
+
+    rec = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "kind": cell["kind"], "seq": cell["seq"],
+        "global_batch": cell["batch"],
+        "compile_s": round(t1 - t0, 1),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll["total"],
+        "collective_detail": {k: coll[k] for k in _COLLECTIVES},
+        "collective_counts": coll["counts"],
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "cpu_f32_promotion_bytes": f32_promotion_bytes(hlo),
+            # TPU-adjusted: args + temp minus CPU-only f32 dot promotions
+            "peak_bytes": max(
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+                - f32_promotion_bytes(hlo),
+                getattr(mem, "argument_size_in_bytes", 0)),
+        },
+        "roofline": {
+            **{k: float(v) for k, v in terms.items()},
+            "dominant": dominant,
+            "model_flops": mf,
+            "hlo_flops_total": hlo_total,
+            "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+            "roofline_fraction":
+                (mf / chips / PEAK_FLOPS) / max(terms.values())
+                if max(terms.values()) > 0 else 0.0,
+        },
+    }
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--out", default="/root/repo/results/dryrun.jsonl")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            cfg = get_config(a)
+            for s in SHAPES:
+                if shape_applicable(cfg, s):
+                    cells.append((a, s))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    failures = 0
+    for arch_id, shape_name in cells:
+        tag = f"{arch_id} x {shape_name} x " \
+              f"{'2x16x16' if args.multipod else '16x16'}"
+        try:
+            rec = run_cell(arch_id, shape_name, args.multipod,
+                           args.microbatches)
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+            r = rec["roofline"]
+            peak_gb = rec["memory"]["peak_bytes"] / 2**30
+            print(f"OK   {tag}: compile={rec['compile_s']}s "
+                  f"peak={peak_gb:.2f}GiB dominant={r['dominant']} "
+                  f"terms=({r['compute_s']:.4f}, {r['memory_s']:.4f}, "
+                  f"{r['collective_s']:.4f})s "
+                  f"roofline_frac={r['roofline_fraction']:.3f}",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001 — report, keep sweeping
+            failures += 1
+            print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

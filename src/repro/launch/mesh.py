@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) ('data', 'model') single pod; (2, 16, 16)
+    ('pod', 'data', 'model') for the 2-pod = 512-chip configuration."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over host devices for tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count >= prod(shape))."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The axes batch/FSDP shard over: ('pod','data') when multi-pod."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,71 @@
+"""ULISSE query service launcher (the paper's native serving workload).
+
+    python -m repro.launch.serve --devices 8 --series 2048 --queries 20
+
+Builds a sharded collection + compiled per-length query engines and
+answers a mixed-length stream, reporting latency and exactness.
+"""
+import argparse
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--series", type=int, default=1024)
+    ap.add_argument("--series-len", type=int, default=256)
+    ap.add_argument("--queries", type=int, default=12)
+    ap.add_argument("--k", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import EnvelopeParams, isax
+    from repro.distributed.ulisse import (decode_id,
+                                          make_distributed_query,
+                                          shard_collection)
+    from repro.train.data import series_batches
+
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    ns = (args.series // n_dev) * n_dev
+    data = series_batches(ns, args.series_len, seed=11)
+    p = EnvelopeParams(lmin=args.series_len // 2,
+                       lmax=args.series_len, gamma=16, seg_len=16,
+                       znorm=True)
+    bp = isax.gaussian_breakpoints(p.card)
+    sharded = shard_collection(mesh, jnp.asarray(data))
+    lengths = sorted({p.lmin, (p.lmin + p.lmax) // 2 // 16 * 16, p.lmax})
+    engines = {l: make_distributed_query(mesh, p, bp, qlen=l, k=args.k)
+               for l in lengths}
+    print(f"serving {ns} series x {args.series_len} over {n_dev} "
+          f"devices; query lengths {lengths}")
+
+    rng = np.random.default_rng(1)
+    lats = []
+    for i in range(args.queries):
+        qlen = lengths[i % len(lengths)]
+        s = rng.integers(0, ns)
+        o = rng.integers(0, args.series_len - qlen + 1)
+        q = jnp.asarray(data[s, o:o + qlen]
+                        + rng.normal(size=qlen).astype(np.float32) * .02)
+        t0 = time.perf_counter()
+        d, codes, exact = engines[qlen](sharded, q)
+        d.block_until_ready()
+        lats.append(time.perf_counter() - t0)
+        sid, off = decode_id(np.asarray(codes))
+        print(f"  |Q|={qlen} nn=({sid[0]},{off[0]}) d={float(d[0]):.4f} "
+              f"exact={bool(exact)} {lats[-1] * 1e3:.1f}ms")
+    print(f"median latency {np.median(lats[1:]) * 1e3:.1f}ms")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,193 @@
+"""Sharding rules: pytree paths -> PartitionSpecs for params, optimizer
+state, decode caches, and batches, on the production mesh.
+
+Layouts (see DESIGN.md §6):
+  train   — 2D fully-sharded ("ZeRO-3"): weights sharded (fsdp, tp) on
+            (in, out) dims, batch sharded over every data-parallel axis;
+            optimizer state inherits the weight sharding (ZeRO by
+            construction).
+  serve   — weights identically 2D-sharded; decode KV caches shard their
+            *sequence* dim over the model axis (kv-head counts rarely
+            divide 16; sequence always does), batch over the data axes.
+
+Every spec passes through `sanitize`, which drops mesh axes that do not
+divide the corresponding dim — a structural guarantee that .lower() never
+fails on divisibility, at worst costing replication (the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio exposes any waste this causes).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# parameter leaves that are (in, out) column-parallel -> (fsdp, tp)
+_COL = {"q", "k", "v", "up", "gate", "in_x", "in_gate", "w_a", "w_i",
+        "skip_gate", "w", "xq", "xk", "xv", "in_proj", "proj"}
+# parameter leaves that are (in, out) row-parallel -> (tp, fsdp)
+_ROW = {"o", "down", "out", "xo"}
+_REPL = {"scale", "bias", "f_bias", "router"}
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def sanitize(mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Drop axes that don't divide their dim; trim/extend rank."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, entries[: len(shape)]):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _path_names(path) -> list:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+    return names
+
+
+def param_spec(mesh, path, leaf, cfg: ModelConfig) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    fsdp = tuple(a for a in mesh.axis_names if a != "model")
+    fsdp = fsdp if len(fsdp) > 1 else fsdp[0]
+    tp = "model"
+    stacked = any(n in ("groups", "blocks") for n in names)
+    prefix = (None,) if stacked else ()
+
+    if name == "table":                      # embed (V, d)
+        # d (not vocab) sharded: keeps the token gather local — a
+        # vocab-sharded table trips SPMD "involuntary full remat" (the
+        # gather replicates the whole (B,S,d) embedding output per device).
+        spec = P(*prefix, None, fsdp)
+    elif "moe" in names and name in ("up", "gate"):   # (E, d, ff)
+        e = leaf.shape[len(prefix)]
+        if e % _axis_size(mesh, tp) == 0:
+            spec = P(*prefix, tp, fsdp, None)
+        else:
+            spec = P(*prefix, None, fsdp, tp)
+    elif "moe" in names and name == "down":           # (E, ff, d)
+        e = leaf.shape[len(prefix)]
+        if e % _axis_size(mesh, tp) == 0:
+            spec = P(*prefix, tp, None, fsdp)
+        else:
+            spec = P(*prefix, None, tp, fsdp)
+    elif name == "r":                        # sLSTM (H, hd, 4hd)
+        spec = P(*prefix, None, fsdp, tp)
+    elif name == "conv":                     # (w, rw)
+        spec = P(*prefix, None, tp)
+    elif name == "lam":                      # (rw,)
+        spec = P(*prefix, tp)
+    elif name in _REPL:
+        spec = P(*prefix)
+    elif name in _ROW:
+        spec = P(*prefix, tp, fsdp)
+    elif name in _COL:
+        spec = P(*prefix, fsdp, tp)
+    else:
+        spec = P(*prefix)
+    return sanitize(mesh, spec, leaf.shape)
+
+
+def tree_param_specs(mesh, params, cfg: ModelConfig):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(mesh, path, leaf, cfg), params)
+
+
+def tree_param_shardings(mesh, params, cfg: ModelConfig):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_param_specs(mesh, params, cfg))
+
+
+def opt_state_specs(mesh, params, cfg: ModelConfig):
+    pspecs = tree_param_specs(mesh, params, cfg)
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+# --------------------------------------------------------------------------
+# batches & caches
+# --------------------------------------------------------------------------
+
+def batch_axes(mesh, include_model: bool) -> Any:
+    axes = [a for a in mesh.axis_names if a != "model"]
+    if include_model:
+        axes.append("model")
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def batch_spec(mesh, leaf_shape, cfg: ModelConfig, *, train: bool,
+               global_batch: int, leading_extra: int = 0) -> P:
+    """Batch arrays: (B, S, ...) or (3, B, S) for positions3."""
+    include_model = train and (
+        global_batch % _axis_size(mesh, batch_axes(mesh, True)) == 0)
+    ba = batch_axes(mesh, include_model)
+    spec = P(*([None] * leading_extra), ba)
+    return sanitize(mesh, spec, leaf_shape)
+
+
+def tree_batch_specs(mesh, batch, cfg: ModelConfig, *, train: bool,
+                     global_batch: int):
+    def per_leaf(path, leaf):
+        names = _path_names(path)
+        extra = 1 if names and names[-1] == "positions3" else 0
+        return batch_spec(mesh, leaf.shape, cfg, train=train,
+                          global_batch=global_batch, leading_extra=extra)
+    return jax.tree_util.tree_map_with_path(per_leaf, batch)
+
+
+def cache_spec(mesh, path, leaf, cfg: ModelConfig) -> P:
+    """Decode caches.  KV caches (B, S, KV, hd) shard S over model; the
+    recurrent/xLSTM states shard their widest unit dim over model."""
+    names = _path_names(path)
+    name = names[-1]
+    dp = batch_axes(mesh, False)
+    tp = "model"
+    stacked = any(n in ("groups", "cross") for n in names)
+    prefix = (None,) if stacked else ()
+    if name in ("k", "v", "k_s", "v_s"):     # (B, S, KV, hd|1)
+        spec = P(*prefix, dp, tp, None, None)
+    elif name == "conv":                     # (B, w-1, rw)
+        spec = P(*prefix, dp, None, tp)
+    elif name == "C":                        # (B, H, hd, hd)
+        spec = P(*prefix, dp, None, tp, None)
+    elif name in ("n", "h", "c"):            # (B, H, hd) / (B, rw)
+        spec = P(*prefix, dp, None, tp) if leaf.ndim - len(prefix) == 3 \
+            else P(*prefix, dp, tp)
+    elif name == "m":                        # (B, H) or (B, H, hd)
+        spec = P(*prefix, dp, None, tp) if leaf.ndim - len(prefix) == 3 \
+            else P(*prefix, dp, None)
+    else:
+        spec = P(*prefix, dp)
+    return sanitize(mesh, spec, leaf.shape)
+
+
+def tree_cache_specs(mesh, cache, cfg: ModelConfig):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_spec(mesh, path, leaf, cfg), cache)
+
+
+def as_shardings(mesh, specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

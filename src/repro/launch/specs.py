@@ -1,0 +1,190 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every dry-run cell.
+
+Everything here is abstract: `jax.eval_shape` builds parameter/cache
+structures, so no cell ever allocates model-scale memory on the host.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.launch import sharding as sh
+from repro.models import abstract_params, init_cache
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig
+from repro.train.step import (make_prefill_step, make_serve_step,
+                              make_train_step)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def ba_flat_moe(ba) -> tuple:
+    return ba if isinstance(ba, tuple) else (ba,)
+
+
+def batch_structs(cfg: ModelConfig, seq: int, batch: int
+                  ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training/prefill batch stand-ins for one architecture."""
+    out = {"tokens": _sds((batch, seq), jnp.int32),
+           "labels": _sds((batch, seq), jnp.int32)}
+    if cfg.family == "vlm":
+        out["vision_embeds"] = _sds((batch, cfg.num_patches, cfg.d_model),
+                                    jnp.bfloat16)
+        out["positions3"] = _sds((3, batch, seq), jnp.int32)
+    if cfg.family == "encdec":
+        out["frames"] = _sds((batch, cfg.num_frames, cfg.d_model),
+                             jnp.bfloat16)
+    return out
+
+
+def abstract_opt_state(params):
+    return {
+        "m": jax.tree_util.tree_map(
+            lambda p: _sds(p.shape, jnp.float32), params),
+        "v": jax.tree_util.tree_map(
+            lambda p: _sds(p.shape, jnp.float32), params),
+        "step": _sds((), jnp.int32),
+    }
+
+
+def abstract_bf16_params(params):
+    def cast(p):
+        dt = jnp.bfloat16 if jnp.issubdtype(p.dtype, jnp.floating) \
+            else p.dtype
+        return _sds(p.shape, dt)
+    return jax.tree_util.tree_map(cast, params)
+
+
+def cell_setup(arch_id: str, shape_name: str, mesh, *,
+               microbatches: int = 0) -> Dict[str, Any]:
+    """Build (step_fn, args, in_shardings, out_shardings) for one cell.
+
+    microbatches=0 picks the default: 1 on a single pod, 8 multi-pod
+    (batch shards 32-way there, so accumulation restores per-device
+    activation footprint).
+    """
+    cfg = get_config(arch_id)
+    seq, global_batch, kind = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape_name):
+        raise ValueError(f"{arch_id} x {shape_name}: inapplicable "
+                         "(quadratic attention at 500k)")
+    multi_pod = "pod" in mesh.axis_names
+    params = abstract_params(cfg)
+    pspecs = sh.tree_param_specs(mesh, params, cfg)
+    # shard_map context for the MoE dispatch island (tokens stay local).
+    # prefill/decode: ff-TP island — expert weights consumed sharded (no
+    # per-layer expert gathers, §Perf); train: gather mode with the
+    # island batch spec matching the microbatch sharding exactly (an
+    # unsharded island replicates every token on every device).
+    spmd = None
+    if cfg.num_experts:
+        ff_tp = (kind != "train"
+                 and cfg.d_ff % mesh.shape["model"] == 0)
+        spmd = {"mesh": mesh, "x_spec": None,
+                "mode": "ff_tp" if ff_tp else "gather"}
+
+    if kind == "train":
+        if microbatches == 0:
+            microbatches = 8 if multi_pod else 1
+        opt_cfg = AdamWConfig()
+        micro_b = global_batch // microbatches
+        ba_train = sh.batch_axes(
+            mesh, micro_b % sh._axis_size(
+                mesh, sh.batch_axes(mesh, True)) == 0)
+        act_sh = NamedSharding(mesh, sh.sanitize(
+            mesh, P(ba_train, None, None), (micro_b, seq, cfg.d_model)))
+        ba_flat = ba_train if isinstance(ba_train, tuple) else (ba_train,)
+        vocab_ax = None if "model" in ba_flat else "model"
+        logit_sh = NamedSharding(mesh, sh.sanitize(
+            mesh, P(ba_train, None, vocab_ax),
+            (micro_b, seq, cfg.vocab_padded)))
+        if spmd is not None:
+            # ff-TP is valid (and a 16x compute win) whenever the island
+            # tokens are NOT sharded over the model axis — multi-pod
+            # train shards batch over (pod, data) only, leaving model
+            # idle in gather mode (§Perf iteration log).
+            if "model" not in ba_flat_moe(ba_train) \
+                    and cfg.d_ff % mesh.shape["model"] == 0:
+                spmd = {**spmd, "mode": "ff_tp"}
+            spmd = {**spmd, "x_spec": sh.sanitize(
+                mesh, P(ba_train, None, None),
+                (micro_b, seq, cfg.d_model))}
+        step = make_train_step(cfg, opt_cfg, microbatches=microbatches,
+                               act_sharding=act_sh, logits_sharding=logit_sh,
+                               spmd=spmd)
+        batch = batch_structs(cfg, seq, global_batch)
+        state = {"params": params, "opt": abstract_opt_state(params)}
+        state_specs = {"params": pspecs,
+                       "opt": sh.opt_state_specs(mesh, params, cfg)}
+        bspecs = sh.tree_batch_specs(mesh, batch, cfg, train=True,
+                                     global_batch=global_batch)
+        args = (state, batch)
+        in_specs = (state_specs, bspecs)
+        out_specs = (state_specs, P())       # metrics replicated
+        donate = (0,)
+    elif kind == "prefill":
+        dp0 = sh.batch_axes(mesh, False)
+        if spmd is not None:
+            spmd = {**spmd, "x_spec": sh.sanitize(
+                mesh, P(dp0, None, None),
+                (global_batch, seq, cfg.d_model))}
+        act_sh = NamedSharding(mesh, sh.sanitize(
+            mesh, P(dp0, None, None), (global_batch, seq, cfg.d_model)))
+        logit_sh = NamedSharding(mesh, sh.sanitize(
+            mesh, P(dp0, None, "model"),
+            (global_batch, seq, cfg.vocab_padded)))
+        step = make_prefill_step(cfg, cache_len=seq, act_sharding=act_sh,
+                                 logits_sharding=logit_sh, spmd=spmd)
+        bparams = abstract_bf16_params(params)
+        batch = batch_structs(cfg, seq, global_batch)
+        cache = jax.eval_shape(
+            functools.partial(init_cache, cfg, global_batch, seq))
+        bspecs = sh.tree_batch_specs(mesh, batch, cfg, train=False,
+                                     global_batch=global_batch)
+        cspecs = sh.tree_cache_specs(mesh, cache, cfg)
+        dp = sh.batch_axes(mesh, False)
+        logit_spec = sh.sanitize(
+            mesh, P(dp, None, "model"),
+            (global_batch, 1, cfg.vocab_padded))
+        args = (bparams, batch)
+        in_specs = (pspecs, bspecs)
+        out_specs = (logit_spec, cspecs)
+        donate = ()
+    elif kind == "decode":
+        if spmd is not None:
+            xs = sh.sanitize(mesh, P(sh.batch_axes(mesh, False), None, None),
+                             (global_batch, 1, cfg.d_model))
+            spmd = {**spmd, "x_spec": xs}
+        step = make_serve_step(cfg, spmd=spmd)
+        bparams = abstract_bf16_params(params)
+        cache = jax.eval_shape(
+            functools.partial(init_cache, cfg, global_batch, seq))
+        token = _sds((global_batch, 1), jnp.int32)
+        cur = _sds((), jnp.int32)
+        cspecs = sh.tree_cache_specs(mesh, cache, cfg)
+        dp = sh.batch_axes(mesh, False)
+        tok_spec = sh.sanitize(mesh, P(dp, None), (global_batch, 1))
+        logit_spec = sh.sanitize(
+            mesh, P(dp, None, "model"),
+            (global_batch, 1, cfg.vocab_padded))
+        args = (bparams, token, cache, cur)
+        in_specs = (pspecs, tok_spec, cspecs, P())
+        out_specs = (tok_spec, logit_spec, cspecs)
+        donate = (2,)
+    else:
+        raise ValueError(kind)
+
+    return {
+        "cfg": cfg, "kind": kind, "step": step, "args": args,
+        "in_shardings": sh.as_shardings(mesh, in_specs),
+        "out_shardings": sh.as_shardings(mesh, out_specs),
+        "donate": donate,
+        "seq": seq, "batch": global_batch,
+    }

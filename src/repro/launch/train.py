@@ -1,0 +1,97 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch deepseek_7b [--steps N]
+        [--devices 8] [--reduced]
+
+On the real cluster the same entry point runs under multi-host jax
+(jax.distributed.initialize from the scheduler's env); in this container
+`--devices` simulates the mesh with host devices.  SIGTERM triggers
+checkpoint-and-exit (preemption handling); relaunching resumes and can
+reshard onto a different mesh (elastic).
+"""
+import argparse
+import os
+import signal
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek_7b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="simulate N host devices (0 = real devices)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config")
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config, get_reduced
+    from repro.launch import sharding as sh
+    from repro.models import init_params
+    from repro.optim import AdamWConfig, adamw_init
+    from repro.train.data import TokenPipeline
+    from repro.train.loop import LoopConfig, TrainLoop
+    from repro.train.step import make_train_step
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    n_dev = jax.device_count()
+    # largest (data, model) grid that fits the device count
+    model_ax = 1
+    for m in (16, 8, 4, 2, 1):
+        if n_dev % m == 0 and m <= n_dev:
+            model_ax = m
+            break
+    mesh = jax.make_mesh((n_dev // model_ax, model_ax),
+                         ("data", "model"))
+    print(f"mesh: {dict(mesh.shape)}  arch: {cfg.name}")
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = {"params": params, "opt": adamw_init(params)}
+    pspecs = sh.tree_param_specs(mesh, params, cfg)
+    state_specs = {"params": pspecs,
+                   "opt": sh.opt_state_specs(mesh, params, cfg)}
+    state_sh = sh.as_shardings(mesh, state_specs)
+    state = jax.device_put(state, state_sh)
+
+    opt = AdamWConfig(warmup_steps=10, total_steps=args.steps)
+    spmd = None
+    if cfg.num_experts:
+        spmd = {"mesh": mesh,
+                "x_spec": sh.sanitize(
+                    mesh, P(sh.batch_axes(mesh, True), None, None),
+                    (args.global_batch, args.seq, cfg.d_model))}
+    step = jax.jit(make_train_step(cfg, opt,
+                                   microbatches=args.microbatches,
+                                   spmd=spmd),
+                   donate_argnums=(0,))
+    pipe = TokenPipeline(cfg.vocab_size, args.global_batch, args.seq)
+
+    def put_batch(b):
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(jnp.asarray(x), NamedSharding(
+                mesh, sh.sanitize(mesh, P(sh.batch_axes(mesh, True)),
+                                  x.shape))), b)
+
+    loop = TrainLoop(LoopConfig(total_steps=args.steps, ckpt_every=50,
+                                ckpt_dir=args.ckpt),
+                     step, pipe, state, shardings=state_sh,
+                     put_batch=put_batch)
+    signal.signal(signal.SIGTERM, lambda *_: loop.request_preempt())
+    out = loop.run()
+    print(out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,154 @@
+"""ULISSE-query dry-run cell: the paper's own workload on the production
+mesh, lowered through the same machinery as the LM cells.
+
+The step is one exact k-NN over a pre-built sharded index:
+  per device:  mindist lower bounds for every local envelope (streaming,
+               memory-bound — the paper's dominant op, Fig. 23f),
+               top-`verify_top` candidate verification on the MXU,
+  global:      one k-sized top-k merge (the only cross-device traffic).
+
+Workload: 16.8M series x 256 points (16 GB collection), gamma=16,
+[lmin,lmax]=[160,256] -> ~6 envelopes/series, ~100M envelopes total.
+
+Variants for the §Perf loop:
+  bounds_dtype = f32 (baseline) | bf16 (halve envelope stream bytes;
+    rounding L down / U up keeps them valid lower bounds),
+  verify_top   = 128 (baseline) | 32 (less verification traffic),
+  fused_qbatch = 1 (baseline) | 8 (amortize the envelope stream over a
+    batch of queries — the strongest lever: the stream is query-
+    independent).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.paa import paa, znormalize
+
+# workload constants
+SERIES_PER_DEV = 65_536
+SERIES_LEN = 256
+LMIN, LMAX, GAMMA, SEG = 160, 256, 16, 16
+W = LMAX // SEG
+QLEN, K = 192, 10
+
+
+def _env_per_series() -> int:
+    n_start = SERIES_LEN - LMIN + 1
+    return -(-n_start // (GAMMA + 1))
+
+
+def make_query_step(mesh, *, bounds_dtype=jnp.float32, verify_top=128,
+                    qbatch=1):
+    nseg = QLEN // SEG
+    g = GAMMA + 1
+    dp = tuple(a for a in mesh.axis_names)      # shard over ALL axes
+
+    def local(env_lo, env_hi, anchors, sids, data, qs):
+        # qs: (qbatch, QLEN) replicated
+        qn = znormalize(qs)
+        qp = paa(qn, SEG)                        # (qbatch, W')
+        lo = env_lo[:, :nseg].astype(jnp.float32)
+        hi = env_hi[:, :nseg].astype(jnp.float32)
+        gap = jnp.maximum(
+            jnp.maximum(lo[None] - qp[:, None, :nseg],
+                        qp[:, None, :nseg] - hi[None]), 0.0)
+        lbs = SEG * jnp.sum(gap * gap, axis=-1)  # (qbatch, N_env) squared
+
+        def per_query(lb, q1):
+            neg, cand = jax.lax.top_k(-lb, verify_top)
+            a = jnp.take(anchors, cand)
+            s = jnp.take(sids, cand)
+            offs = a[:, None] + jnp.arange(g)[None, :]
+            ok = offs + QLEN <= SERIES_LEN
+            offs_c = jnp.clip(offs, 0, SERIES_LEN - QLEN)
+
+            def win(sid, off):
+                return jax.lax.dynamic_slice(data, (sid, off),
+                                             (1, QLEN))[0]
+
+            wins = jax.vmap(jax.vmap(win, in_axes=(None, 0)),
+                            in_axes=(0, 0))(s, offs_c)
+            wins = wins.reshape(-1, QLEN)
+            wn = znormalize(wins)
+            d2 = jnp.sum((wn - q1[None]) ** 2, axis=-1)
+            d2 = jnp.where(ok.reshape(-1), d2, jnp.inf)
+            negd, sel = jax.lax.top_k(-d2, K)
+            return -negd
+
+        local_best = jax.vmap(per_query)(lbs, qn)   # (qbatch, K)
+        # global k-merge over every mesh axis
+        gathered = local_best
+        for ax in dp:
+            gathered = jax.lax.all_gather(gathered, ax, axis=1,
+                                          tiled=True)
+        neg, _ = jax.lax.top_k(-gathered, K)
+        return -neg                                  # (qbatch, K)
+
+    n_env = SERIES_PER_DEV * _env_per_series()
+    espec = P(dp)
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(espec, espec, espec, espec, espec, P()),
+        out_specs=P(), check_vma=False)
+
+    def step(env_lo, env_hi, anchors, sids, data, qs):
+        return fn(env_lo, env_hi, anchors, sids, data, qs)
+
+    return step
+
+
+def ulisse_cell_setup(arch_id: str, shape_name: str, mesh, *,
+                      microbatches: int = 0,
+                      bounds_dtype=jnp.float32, verify_top: int = 128,
+                      qbatch: int = 1) -> Dict[str, Any]:
+    devs = mesh.size
+    n_env_g = SERIES_PER_DEV * _env_per_series() * devs
+    n_series_g = SERIES_PER_DEV * devs
+    dp = tuple(mesh.axis_names)
+
+    def sds(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    args = (
+        sds((n_env_g, W), bounds_dtype),          # env_lo
+        sds((n_env_g, W), bounds_dtype),          # env_hi
+        sds((n_env_g,), jnp.int32),               # anchors
+        sds((n_env_g,), jnp.int32),               # series ids (local)
+        sds((n_series_g, SERIES_LEN), jnp.float32),
+        sds((qbatch, QLEN), jnp.float32),
+    )
+    espec = NamedSharding(mesh, P(dp))
+    in_sh = (espec, espec, espec, espec, espec,
+             NamedSharding(mesh, P()))
+    step = make_query_step(mesh, bounds_dtype=bounds_dtype,
+                           verify_top=verify_top, qbatch=qbatch)
+
+    class _Cfg:        # roofline model-flops proxy: verification work
+        def num_params(self, active_only=False):
+            return 1
+
+    return {
+        "cfg": _cfg_proxy(qbatch), "kind": "decode", "step": step,
+        "args": args,
+        "in_shardings": in_sh,
+        "out_shardings": NamedSharding(mesh, P()),
+        "donate": (),
+        "seq": QLEN, "batch": qbatch,
+    }
+
+
+def _cfg_proxy(qbatch):
+    class C:
+        name = "ulisse-query"
+        family = "ulisse"
+
+        @staticmethod
+        def num_params(active_only=False):
+            # "useful work" proxy: LB stream (2*N*w flops-equivalent)
+            return SERIES_PER_DEV * _env_per_series() * W
+    return C()

@@ -1,0 +1,9 @@
+"""LM substrate: the assigned architecture pool as composable JAX modules."""
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (abstract_params, forward_decode,
+                                      forward_seq, init_cache, init_params,
+                                      lm_loss)
+
+__all__ = ["ModelConfig", "init_params", "abstract_params", "forward_seq",
+           "forward_decode", "init_cache", "lm_loss"]

@@ -1,0 +1,196 @@
+"""Attention: GQA with full-causal, sliding-window, bidirectional and
+cached-decode paths.
+
+Memory discipline is what lets the 32k prefill and 500k cells compile on a
+16 GB chip: full attention uses an online-softmax `lax.scan` over KV chunks
+(never materializing the (S, S) logits), and sliding-window attention
+gathers only the `window + chunk` keys each query chunk can see — true
+O(S * window) FLOPs, which is what makes the SWA/local architectures
+genuinely sub-quadratic in the roofline (not just masked-out compute).
+
+All functions take q (B, Sq, H, hd), k/v (B, Skv, KV, hd); GQA groups are
+expanded inside the einsums, never materialized.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_logits(q, k, scale):
+    """(B, Sq, KV, G, hd) x (B, Skv, KV, hd) -> (B, KV, G, Sq, Skv).
+
+    bf16 inputs, f32 accumulation — the MXU-native contraction; a full
+    f32 upcast of q/k would double VMEM traffic and (on the CPU dry-run
+    backend) hoist f32 copies of whole saved stacks.
+    """
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _gqa_out(probs, v):
+    """(B, KV, G, Sq, Skv) x (B, Skv, KV, hd) -> (B, Sq, KV, G, hd)."""
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+
+
+def _split_groups(q, num_kv: int):
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, hd)
+
+
+def _merge_groups(o):
+    b, s, kv, g, hd = o.shape
+    return o.reshape(b, s, kv * g, hd)
+
+
+def attention_full(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                   causal: bool, chunk: int = 512,
+                   q_offset: int = 0) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV chunks (flash-style).
+
+    q_offset: absolute position of q[0] (for causal masks when Sq != Skv,
+    e.g. chunked prefill).  Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    scale = hd ** -0.5
+    qg = _split_groups(q, kv)
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, kv, hd)
+    vc = v.reshape(b, n_chunks, chunk, kv, hd)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kb, vb, c = inputs                       # (B, chunk, KV, hd), idx
+        logits = _gqa_logits(qg, kb, scale)      # f32 accumulated
+        kv_pos = c * chunk + jnp.arange(chunk)
+        mask = jnp.broadcast_to((kv_pos < skv)[None, :], (sq, chunk))
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        # probs cast bf16 for the MXU pv-matmul; accumulate f32
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, h // kv, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, h // kv, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv, h // kv, sq, hd), jnp.float32)
+    # checkpoint the chunk step: without it the backward saves every
+    # chunk's (Sq, chunk) probs — O(S^2) memory, exactly what the online
+    # softmax exists to avoid.  (Flash-attention backward recompute.)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]     # (B, KV, G, Sq, hd)
+    out = jnp.moveaxis(out, 3, 1)                    # (B, Sq, KV, G, hd)
+    return _merge_groups(out).astype(q.dtype)
+
+
+def attention_window(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                     window: int, chunk: int = 512) -> jnp.ndarray:
+    """Causal sliding-window attention with O(S * window) FLOPs.
+
+    Query chunk c attends keys [c*chunk - window + 1, (c+1)*chunk); we left
+    -pad K/V by `window` so each chunk gathers a static (window + chunk)
+    slice.  Assumes Sq == Skv (training/prefill path).
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    scale = hd ** -0.5
+    chunk = min(chunk, s)
+    assert s % chunk == 0, "window path expects chunk | seq_len"
+    n_chunks = s // chunk
+    span = window + chunk
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+
+    def per_chunk(c):
+        qs = jax.lax.dynamic_slice_in_dim(q, c * chunk, chunk, axis=1)
+        ks = jax.lax.dynamic_slice_in_dim(kp, c * chunk, span, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(vp, c * chunk, span, axis=1)
+        qg = _split_groups(qs, kv)
+        logits = _gqa_logits(qg, ks, scale)              # f32 accumulated
+        q_pos = c * chunk + jnp.arange(chunk)            # absolute
+        k_pos = c * chunk - window + jnp.arange(span)    # absolute
+        mask = ((k_pos[None, :] <= q_pos[:, None])
+                & (q_pos[:, None] - k_pos[None, :] < window)
+                & (k_pos[None, :] >= 0))
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1).astype(vs.dtype)
+        return _merge_groups(jnp.einsum(
+            "bkgqs,bskh->bqkgh", p, vs,
+            preferred_element_type=jnp.float32)).astype(q.dtype)
+
+    out = jax.lax.map(per_chunk, jnp.arange(n_chunks))   # (C, B, chunk, H, hd)
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
+
+
+def attention_decode(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cur_len: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """Single-token decode against a (possibly rolling) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, S_cache, KV, hd); cur_len: () int32 —
+    number of valid cache slots.  With rolling caches the slot order is
+    rotated but softmax is permutation-invariant, so only validity
+    matters.  Returns (B, 1, H, hd).
+    """
+    b, _, h, hd = q.shape
+    s_cache, kv = k_cache.shape[1], k_cache.shape[2]
+    scale = hd ** -0.5
+    qg = _split_groups(q, kv)
+    logits = _gqa_logits(qg, k_cache, scale)             # f32 accumulated
+    valid = jnp.arange(s_cache) < cur_len
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return _merge_groups(out).astype(q.dtype)
+
+
+def update_cache(cache: jnp.ndarray, new: jnp.ndarray,
+                 cur_len: jnp.ndarray, rolling: bool) -> jnp.ndarray:
+    """Write one new (B, 1, KV, hd) entry at slot cur_len (mod size if
+    rolling)."""
+    size = cache.shape[1]
+    slot = cur_len % size if rolling else jnp.minimum(cur_len, size - 1)
+    return jax.lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype),
+                                               slot, axis=1)
+
+
+# --------------------------------------------------------------------------
+# int8 KV quantization (beyond-paper: halves decode cache bytes; the
+# dominant decode_32k memory consumer for MHA archs like deepseek-7b)
+# --------------------------------------------------------------------------
+
+def quantize_kv(x: jnp.ndarray):
+    """(.., hd) bf16 -> (int8 values, bf16 per-entry scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray,
+                  dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)).astype(dtype)

@@ -1,0 +1,143 @@
+"""Model configuration for the assigned architecture pool.
+
+One frozen dataclass covers all ten families; family-specific fields are
+zero/empty when unused.  Exact published hyperparameters live in
+src/repro/configs/<arch>.py; smoke tests use `reduced()` scaled-down
+variants of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 => d_model // num_heads
+
+    # --- attention ---
+    window: int = 0              # sliding-window size; 0 = full attention
+    rope_theta: float = 10_000.0
+    mrope: bool = False          # M-RoPE (3 position streams, qwen2-vl)
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)   # t/h/w head_dim split
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+
+    # --- hybrid (recurrentgemma): repeating layer pattern ---
+    # e.g. ("rglru", "rglru", "attn"); empty => all-attention.  `tail` holds
+    # the remainder layers when num_layers % len(pattern) != 0 (unrolled
+    # after the scanned groups, e.g. recurrentgemma's 26 = 8*3 + 2).
+    pattern: Tuple[str, ...] = ()
+    tail: Tuple[str, ...] = ()
+    rnn_width: int = 0           # RG-LRU width (0 => d_model)
+    conv_width: int = 4
+
+    # --- xLSTM ---
+    # pattern entries "mlstm"/"slstm"; d_ff == 0 => projection inside block
+    proj_factor: float = 2.0     # mLSTM up-projection factor
+
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0      # 0 => decoder-only
+    num_frames: int = 1500       # stub conv-frontend output length
+
+    # --- VLM (qwen2-vl) ---
+    num_patches: int = 0         # stub patch embeddings merged at prefix
+
+    # --- numerics / misc ---
+    kv_quant: bool = False       # int8 KV cache (per-entry scales)
+    gated_mlp: bool = True       # SwiGLU (True) vs plain GELU MLP (False)
+    norm_eps: float = 1e-6
+    vocab_round: int = 256       # pad embedding tables to this multiple
+    attn_chunk: int = 512        # online-softmax KV chunk
+    mlstm_chunk: int = 256       # chunkwise-parallel mLSTM chunk
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // self.num_heads)
+        if self.num_heads % max(self.num_kv_heads, 1) != 0:
+            raise ValueError("num_heads must be a multiple of num_kv_heads")
+        if self.pattern:
+            if (self.num_layers - len(self.tail)) % len(self.pattern) != 0:
+                raise ValueError(
+                    f"{self.name}: num_layers={self.num_layers} minus "
+                    f"tail {len(self.tail)} not a multiple of pattern "
+                    f"size {len(self.pattern)}")
+        if self.family == "hybrid" and self.rnn_width == 0:
+            object.__setattr__(self, "rnn_width", self.d_model)
+
+    # ------------------------------------------------------------------
+    @property
+    def vocab_padded(self) -> int:
+        r = self.vocab_round
+        return ((self.vocab_size + r - 1) // r) * r
+
+    @property
+    def group_pattern(self) -> Tuple[str, ...]:
+        """The repeating layer-group unit scanned over depth."""
+        if self.pattern:
+            return self.pattern
+        if self.family == "moe":
+            return ("moe",)
+        return ("attn",)
+
+    @property
+    def num_groups(self) -> int:
+        return (self.num_layers - len(self.tail)) // len(self.group_pattern)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True when long-context decode state is bounded (long_500k runs)."""
+        kinds = set(self.group_pattern)
+        if kinds <= {"rglru", "mlstm", "slstm"}:
+            return True
+        if "attn" in kinds or "moe" in kinds:
+            return self.window > 0 and not any(
+                k in ("attn", "moe") and self.window == 0
+                for k in kinds)
+        return False
+
+    def num_params(self, active_only: bool = False) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS roofline terms)."""
+        d, hd = self.d_model, self.head_dim
+        h, kv = self.num_heads, self.num_kv_heads
+        per = {}
+        per["attn"] = d * (h * hd) + 2 * d * (kv * hd) + (h * hd) * d
+        per["mlp"] = (3 if self.gated_mlp else 2) * d * self.d_ff
+        if self.num_experts:
+            e = self.experts_per_token if active_only else self.num_experts
+            per["moe"] = per["attn"] + d * self.num_experts + e * 3 * d * self.d_ff
+        rw = self.rnn_width or d
+        per["rglru"] = 2 * d * rw + rw * self.conv_width + 3 * rw + rw * d
+        pf = self.proj_factor
+        dm = int(d * pf)
+        per["mlstm"] = 2 * d * dm + 3 * dm * dm // max(self.num_heads, 1) \
+            + dm * d  # qkv block-diagonal-ish + in/out proj
+        per["slstm"] = 4 * d * d // max(self.num_heads, 1) * self.num_heads \
+            + 4 * (d // max(self.num_heads, 1)) ** 2 * self.num_heads
+        total = 0
+        all_layers = list(self.group_pattern) * self.num_groups + list(self.tail)
+        for kind in all_layers:
+            if kind == "attn":
+                total += per["attn"] + (per["mlp"] if self.d_ff else 0)
+            elif kind == "moe":
+                total += per["moe"]
+            elif kind == "rglru":
+                total += per["rglru"] + (per["mlp"] if self.d_ff else 0)
+            elif kind in ("mlstm", "slstm"):
+                total += per[kind]
+        if self.encoder_layers:
+            total += self.encoder_layers * (2 * per["attn"] + per["mlp"])
+        total += 2 * self.vocab_padded * d      # embed + unembed
+        return total

@@ -1,0 +1,167 @@
+"""Shared layer primitives: norms, embeddings, RoPE / M-RoPE, SwiGLU.
+
+Parameters are plain dict pytrees; every init_* has a matching apply
+function.  Params are stored float32 (optimizer master dtype) and cast to
+bf16 at the compute boundary by the callers (`cast_params`).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale)
+
+
+def cast_params(params, dtype=jnp.bfloat16):
+    """Cast float params to the compute dtype (ints/bools untouched)."""
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(cast, params)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    # variance reduction accumulates in f32, but x itself stays in its
+    # compute dtype: a full f32 image of the residual stream would get
+    # loop-hoisted by XLA into an f32 copy of the whole saved-carry stack
+    # (2x activation-checkpoint memory on the train cells).
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True,
+                   dtype=jnp.float32)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * p["scale"].astype(x.dtype)
+
+
+def init_layernorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# embeddings
+# --------------------------------------------------------------------------
+
+def init_embedding(key, vocab_padded: int, d: int) -> Params:
+    return {"table": jax.random.normal(key, (vocab_padded, d),
+                                       jnp.float32) * 0.02}
+
+
+def embed(p: Params, tokens: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return jnp.take(p["table"].astype(dtype), tokens, axis=0)
+
+
+def init_unembed(key, d: int, vocab_padded: int) -> Params:
+    return {"proj": dense_init(key, d, vocab_padded)}
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    # logits in float32: the loss subtracts a max and exponentiates
+    return jnp.einsum("...d,dv->...v", x, p["proj"].astype(x.dtype)
+                      ).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim // 2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, H, hd); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                 # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Tuple[int, ...]) -> jnp.ndarray:
+    """M-RoPE (qwen2-vl): 3 position streams rotate disjoint head_dim
+    sections (temporal / height / width).  positions3: (3, B, S)."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, "mrope sections must sum to head_dim//2"
+    freqs = rope_freqs(x.shape[-1], theta)                 # (half,)
+    # choose which position stream drives each frequency slot
+    sect_id = jnp.repeat(jnp.arange(len(sections)),
+                         jnp.array(sections), total_repeat_length=half)
+    pos = jnp.moveaxis(positions3.astype(jnp.float32), 0, -1)  # (B, S, 3)
+    pos_slot = pos[..., sect_id]                               # (B, S, half)
+    angles = pos_slot * freqs                              # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal position embedding (length, d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    args = jnp.arange(length)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1
+                           ).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, gated: bool = True) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": dense_init(k1, d, d_ff),
+         "down": dense_init(k3, d_ff, d)}
+    if gated:
+        p["gate"] = dense_init(k2, d, d_ff)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    up = jnp.einsum("...d,df->...f", x, p["up"].astype(dt))
+    if "gate" in p:       # SwiGLU
+        gate = jnp.einsum("...d,df->...f", x, p["gate"].astype(dt))
+        hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up
+    else:                 # plain GELU MLP (e.g. GPT-BigCode / granite)
+        hidden = jax.nn.gelu(up.astype(jnp.float32)).astype(dt)
+    return jnp.einsum("...f,fd->...d", hidden, p["down"].astype(dt))

@@ -1,0 +1,156 @@
+"""Mixture-of-Experts: top-k router + sort-based capacity dispatch.
+
+TPU-native dispatch (DESIGN.md §Hardware adaptation): the GShard-style
+dense one-hot dispatch einsum costs O(T * E * C * d) — ruinous for
+many-small-expert configs (qwen3: 128 experts of ff=768, dispatch would
+be 30x the expert FLOPs).  We instead *sort* token assignments by expert
+id and scatter them into (E, C) capacity slots — O(T log T) data movement
++ the true O(T * topk * d * ff) expert FLOPs.  Tokens beyond an expert's
+capacity are dropped (contribute only the residual), matching
+capacity-factor MoE training semantics.
+
+Distribution: data-dependent scatter/gather is hostile to GSPMD (it
+replicates the full global token table on every device).  `moe_ffn_spmd`
+therefore wraps the local dispatch in a shard_map island: tokens stay on
+their device, expert weights arrive via the same FSDP all-gather the
+dense path uses, and the sort/scatter never crosses the partitioner.
+Expert-parallel all-to-all dispatch is the §Perf hillclimb alternative.
+
+Expert weights are (E, d, ff) tensors; the expert axis shards over
+`model` when E divides the mesh axis (qwen3: 128/16), otherwise the ff
+axis shards (mixtral: 8 experts, ff 16384/16) — see launch/sharding.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init
+
+
+def init_moe(key, d: int, d_ff: int, num_experts: int) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, d, num_experts),
+        "up": jax.random.normal(k2, (num_experts, d, d_ff), jnp.float32)
+        * d ** -0.5,
+        "gate": jax.random.normal(k3, (num_experts, d, d_ff), jnp.float32)
+        * d ** -0.5,
+        "down": jax.random.normal(k4, (num_experts, d_ff, d), jnp.float32)
+        * d_ff ** -0.5,
+    }
+
+
+def moe_ffn(p: dict, x: jnp.ndarray, *, num_experts: int, topk: int,
+            capacity_factor: float = 1.25) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d), plus router aux loss as second output."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    dt = x.dtype
+
+    # ---- router (float32 for a stable softmax) ----
+    logits = (xt.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, topk)    # (T, topk)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- capacity assignment via sort ----
+    capacity = max(int(capacity_factor * t * topk / num_experts), 1)
+    flat_expert = expert_ids.reshape(-1)                  # (T*topk,)
+    flat_token = jnp.repeat(jnp.arange(t), topk)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert)                      # stable
+    sorted_expert = flat_expert[order]
+    # rank of each assignment within its expert = position - first position
+    idx = jnp.arange(t * topk)
+    seg_start = jnp.where(
+        jnp.concatenate([jnp.array([True]),
+                         sorted_expert[1:] != sorted_expert[:-1]]),
+        idx, 0)
+    seg_start = jax.lax.associative_scan(jnp.maximum, seg_start)
+    rank = idx - seg_start                                # within-expert rank
+    keep = rank < capacity
+    slot = sorted_expert * capacity + jnp.minimum(rank, capacity - 1)
+
+    # ---- dispatch: scatter token rows into (E*C, d) slots ----
+    src_token = flat_token[order]
+    src_gate = jnp.where(keep, flat_gate[order], 0.0)
+    dispatched = jnp.zeros((num_experts * capacity, d), dt)
+    rows = jnp.where(keep, slot, num_experts * capacity)  # OOB drop
+    dispatched = dispatched.at[rows].set(
+        xt[src_token], mode="drop")                       # (E*C, d)
+    ec = dispatched.reshape(num_experts, capacity, d)
+
+    # ---- expert SwiGLU ----
+    up = jnp.einsum("ecd,edf->ecf", ec, p["up"].astype(dt))
+    gate = jnp.einsum("ecd,edf->ecf", ec, p["gate"].astype(dt))
+    hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up
+    out = jnp.einsum("ecf,efd->ecd", hidden, p["down"].astype(dt))
+    out = out.reshape(num_experts * capacity, d)
+
+    # ---- combine: gather expert outputs back, weighted by gates ----
+    gathered = jnp.where(keep[:, None], out[jnp.minimum(slot,
+                         num_experts * capacity - 1)], 0.0)
+    combined = jnp.zeros((t, d), jnp.float32)
+    combined = combined.at[src_token].add(
+        gathered.astype(jnp.float32) * src_gate[:, None])
+
+    # ---- load-balancing aux (Switch-style) ----
+    me = jnp.mean(probs, axis=0)                          # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], num_experts, dtype=jnp.float32),
+        axis=0)
+    aux = num_experts * jnp.sum(me * ce)
+
+    return combined.reshape(b, s, d).astype(dt), aux
+
+
+def moe_ffn_spmd(p: dict, x: jnp.ndarray, *, num_experts: int, topk: int,
+                 capacity_factor: float, mesh, x_spec: P,
+                 mode: str = "gather"):
+    """shard_map wrapper around the local sort-based dispatch.
+
+    mode="gather": expert weights replicated into the island (FSDP
+      all-gather) — right for training, where the batch already shards
+      over every axis and the gather amortizes over many tokens.
+    mode="ff_tp": expert weights consumed SHARDED on their ff dim over
+      the model axis; every rank routes identically, computes its ff
+      slice, and psums the down-projection output.  No expert-weight
+      gather at all — the §Perf fix for prefill/decode, where gathering
+      4.8 GB of mixtral experts per layer dwarfed the compute.
+    """
+    all_axes = tuple(mesh.axis_names)
+
+    def local_gather(pl, xl):
+        out, aux = moe_ffn(pl, xl, num_experts=num_experts, topk=topk,
+                           capacity_factor=capacity_factor)
+        aux = jax.lax.pmean(aux, all_axes)
+        return out, aux
+
+    def local_ff_tp(pl, xl):
+        out, aux = moe_ffn(pl, xl, num_experts=num_experts, topk=topk,
+                           capacity_factor=capacity_factor)
+        out = jax.lax.psum(out, "model")     # partial ff contributions
+        aux = jax.lax.pmean(aux, all_axes)
+        return out, aux
+
+    if mode == "ff_tp":
+        weight_specs = {"router": P(),
+                        "up": P(None, None, "model"),
+                        "gate": P(None, None, "model"),
+                        "down": P(None, "model", None)}
+        fn = jax.shard_map(local_ff_tp, mesh=mesh,
+                           in_specs=(weight_specs, x_spec),
+                           out_specs=(x_spec, P()),
+                           check_vma=False)
+        return fn(p, x)
+
+    weight_specs = jax.tree_util.tree_map(lambda _: P(), p)
+    fn = jax.shard_map(local_gather, mesh=mesh,
+                       in_specs=(weight_specs, x_spec),
+                       out_specs=(x_spec, P()),
+                       check_vma=False)   # aux varies on a subset of axes
+    return fn(p, x)

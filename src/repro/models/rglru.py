@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The block: x -> {linear -> conv1d(w=4) -> RG-LRU} * {linear -> GeLU} ->
+elementwise product -> linear out.  The RG-LRU recurrence
+
+    r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+is a first-order linear recurrence: training/prefill run it as a
+`jax.lax.associative_scan` over composed (a, b) pairs — log-depth on the
+sequence, the TPU-native replacement for the paper-series' CUDA linear
+scan; decode is the O(1) single-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+_C = 8.0  # the Griffin constant
+
+
+def init_rglru(key, d: int, rnn_width: int, conv_width: int) -> dict:
+    ks = jax.random.split(key, 7)
+    rw = rnn_width
+    return {
+        "in_x": dense_init(ks[0], d, rw),
+        "in_gate": dense_init(ks[1], d, rw),
+        "conv": jax.random.normal(ks[2], (conv_width, rw), jnp.float32)
+        * conv_width ** -0.5,
+        "w_a": dense_init(ks[3], rw, rw),
+        "w_i": dense_init(ks[4], rw, rw),
+        # Lambda parameterized so that a ~ U(0.9, 0.999) at init
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, rw)) / _C)).astype(jnp.float32),
+        "out": dense_init(ks[5], rw, d),
+    }
+
+
+def _gates(p, x):
+    """a_t (decay) and gated input for the recurrence. x: (..., rw)."""
+    dt = x.dtype
+    r = jax.nn.sigmoid((x @ p["w_a"].astype(dt)).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_i"].astype(dt)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably from log_a
+    b_scale = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    b = b_scale * i * x.astype(jnp.float32)
+    return a, b
+
+
+def _conv1d(p, x, conv_state=None):
+    """Causal depthwise conv, width w. x: (B, S, rw).
+
+    conv_state: (B, w-1, rw) trailing inputs from the previous step
+    (decode); None => zero history (train/prefill).
+    """
+    w = p["conv"].shape[0]
+    s = x.shape[1]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + s, :] * p["conv"][i].astype(x.dtype)
+              for i in range(w))
+    new_state = xp[:, -(w - 1):, :] if w > 1 else xp[:, :0, :]
+    return out, new_state
+
+
+def rglru_seq(p: dict, x: jnp.ndarray, want_state: bool = False):
+    """Full-sequence block forward (train/prefill). x: (B, S, d).
+
+    Returns (out, state|None); state = {h, conv} for decode continuation.
+    """
+    dt = x.dtype
+    gate = jax.nn.gelu((x @ p["in_gate"].astype(dt)).astype(jnp.float32))
+    xr = x @ p["in_x"].astype(dt)
+    xr, conv_state = _conv1d(p, xr)
+    a, b = _gates(p, xr)                       # (B, S, rw) float32
+
+    def combine(u, v):
+        a1, b1 = u
+        a2, b2 = v
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h * gate).astype(dt) @ p["out"].astype(dt)
+    state = None
+    if want_state:
+        state = {"h": h[:, -1], "conv": conv_state}
+    return out, state
+
+
+def rglru_decode(p: dict, x: jnp.ndarray, state: dict):
+    """One-step decode. x: (B, 1, d); state: {h: (B, rw), conv: (B, w-1, rw)}."""
+    dt = x.dtype
+    gate = jax.nn.gelu((x @ p["in_gate"].astype(dt)).astype(jnp.float32))
+    xr = x @ p["in_x"].astype(dt)
+    xr, conv_state = _conv1d(p, xr, conv_state=state["conv"].astype(dt))
+    a, b = _gates(p, xr)                       # (B, 1, rw)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = (h[:, None] * gate).astype(dt) @ p["out"].astype(dt)
+    return out, {"h": h, "conv": conv_state.astype(state["conv"].dtype)}
+
+
+def init_rglru_state(batch: int, rnn_width: int, conv_width: int,
+                     dtype=jnp.float32) -> dict:
+    return {"h": jnp.zeros((batch, rnn_width), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, rnn_width), dtype)}

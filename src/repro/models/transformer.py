@@ -1,0 +1,551 @@
+"""Model assembly: composable blocks -> scanned layer groups -> LM heads.
+
+One code path serves all ten assigned architectures; a config's
+`group_pattern` decides which temporal-mixing blocks appear in the
+repeating unit that `lax.scan` iterates over depth (O(1)-in-depth HLO —
+the 95-layer deepseek-67b compiles as fast as the 6-layer whisper).
+
+Three execution modes share the block code:
+  seq     — full-sequence forward (training, and the encoder),
+  prefill — full-sequence forward that also emits decode caches,
+  decode  — one token against caches (KV / recurrent state / xLSTM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rg
+from repro.models import xlstm as xl
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ==========================================================================
+# per-kind block init
+# ==========================================================================
+
+def _init_attn_block(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 8)
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    p = {
+        "norm": L.init_rmsnorm(d),
+        "q": L.dense_init(ks[0], d, h * hd),
+        "k": L.dense_init(ks[1], d, kv * hd),
+        "v": L.dense_init(ks[2], d, kv * hd),
+        "o": L.dense_init(ks[3], h * hd, d),
+    }
+    if cross:
+        p["xnorm"] = L.init_rmsnorm(d)
+        p["xq"] = L.dense_init(ks[4], d, h * hd)
+        p["xk"] = L.dense_init(ks[5], d, kv * hd)
+        p["xv"] = L.dense_init(ks[6], d, kv * hd)
+        p["xo"] = L.dense_init(ks[7], h * hd, d)
+    return p
+
+
+def _init_ffn(key, cfg: ModelConfig, kind: str) -> Params:
+    if kind == "moe":
+        return {"ffn_norm": L.init_rmsnorm(cfg.d_model),
+                "moe": moe_lib.init_moe(key, cfg.d_model, cfg.d_ff,
+                                        cfg.num_experts)}
+    if cfg.d_ff > 0:
+        return {"ffn_norm": L.init_rmsnorm(cfg.d_model),
+                "mlp": L.init_mlp(key, cfg.d_model, cfg.d_ff,
+                                  gated=cfg.gated_mlp)}
+    return {}
+
+
+def _init_block(key, kind: str, cfg: ModelConfig, cross: bool = False
+                ) -> Params:
+    k1, k2 = jax.random.split(key)
+    if kind in ("attn", "moe"):
+        p = _init_attn_block(k1, cfg, cross=cross)
+    elif kind == "rglru":
+        p = {"norm": L.init_rmsnorm(cfg.d_model),
+             **rg.init_rglru(k1, cfg.d_model, cfg.rnn_width,
+                             cfg.conv_width)}
+    elif kind == "mlstm":
+        p = {"norm": L.init_rmsnorm(cfg.d_model),
+             **xl.init_mlstm(k1, cfg.d_model, cfg.num_heads,
+                             cfg.proj_factor)}
+    elif kind == "slstm":
+        p = {"norm": L.init_rmsnorm(cfg.d_model),
+             **xl.init_slstm(k1, cfg.d_model, cfg.num_heads)}
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    p.update(_init_ffn(k2, cfg, kind))
+    return p
+
+
+# ==========================================================================
+# per-kind block apply
+# ==========================================================================
+
+def _rope(cfg: ModelConfig, x, positions, positions3):
+    if cfg.mrope and positions3 is not None:
+        return L.apply_mrope(x, positions3, cfg.rope_theta,
+                             cfg.mrope_sections)
+    return L.apply_rope(x, positions, cfg.rope_theta)
+
+
+def _attn_qkv(p, cfg: ModelConfig, x, positions, positions3,
+              rope: bool = True):
+    b, s, d = x.shape
+    dt = x.dtype
+    q = (x @ p["q"].astype(dt)).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = (x @ p["k"].astype(dt)).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = (x @ p["v"].astype(dt)).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if rope:
+        q = _rope(cfg, q, positions, positions3)
+        k = _rope(cfg, k, positions, positions3)
+    return q, k, v
+
+
+def _attn_seq(p, cfg: ModelConfig, x, positions, positions3, *,
+              causal: bool = True, want_cache: bool = False,
+              cache_len: int = 0):
+    h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    q, k, v = _attn_qkv(p, cfg, h, positions, positions3,
+                        rope=not (cfg.family == "encdec" and not causal))
+    if cfg.window > 0 and causal:
+        o = attn.attention_window(q, k, v, window=cfg.window,
+                                  chunk=min(cfg.attn_chunk, q.shape[1]))
+    else:
+        o = attn.attention_full(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    out = x + o.reshape(*x.shape[:2], -1) @ p["o"].astype(x.dtype)
+    cache = None
+    if want_cache:
+        keep = min(cache_len, k.shape[1]) if cfg.window == 0 \
+            else min(cfg.window, cache_len, k.shape[1])
+        kk, vv = k[:, -keep:], v[:, -keep:]
+        pad = cache_len - keep
+        if pad > 0:
+            kk = jnp.pad(kk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vv = jnp.pad(vv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if cfg.kv_quant:
+            kq, ks = attn.quantize_kv(kk)
+            vq, vs = attn.quantize_kv(vv)
+            cache = {"k": kq, "v": vq, "k_s": ks, "v_s": vs}
+        else:
+            cache = {"k": kk, "v": vv}
+    return out, cache
+
+
+def _attn_decode(p, cfg: ModelConfig, x, cache, cur_len, positions3=None):
+    h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    pos = jnp.full((x.shape[0], 1), cur_len, jnp.int32)
+    pos3 = None
+    if cfg.mrope:
+        pos3 = jnp.full((3, x.shape[0], 1), cur_len, jnp.int32)
+    q, k, v = _attn_qkv(p, cfg, h, pos, pos3)
+    rolling = cfg.window > 0
+    eff_len = jnp.minimum(cur_len, cache["k"].shape[1]) if rolling else cur_len
+    if cfg.kv_quant:
+        kq, ks = attn.quantize_kv(k)
+        vq, vs = attn.quantize_kv(v)
+        new_cache = {
+            "k": attn.update_cache(cache["k"], kq, cur_len, rolling),
+            "v": attn.update_cache(cache["v"], vq, cur_len, rolling),
+            "k_s": attn.update_cache(cache["k_s"], ks, cur_len, rolling),
+            "v_s": attn.update_cache(cache["v_s"], vs, cur_len, rolling),
+        }
+        kc = attn.dequantize_kv(new_cache["k"], new_cache["k_s"], x.dtype)
+        vc = attn.dequantize_kv(new_cache["v"], new_cache["v_s"], x.dtype)
+    else:
+        kc = attn.update_cache(cache["k"], k, cur_len, rolling)
+        vc = attn.update_cache(cache["v"], v, cur_len, rolling)
+        new_cache = {"k": kc, "v": vc}
+    o = attn.attention_decode(q, kc, vc, eff_len + 1)
+    out = x + o.reshape(*x.shape[:2], -1) @ p["o"].astype(x.dtype)
+    return out, new_cache
+
+
+def _cross_attn(p, cfg: ModelConfig, x, enc_kv):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    h = L.rmsnorm(p["xnorm"], x, cfg.norm_eps)
+    b, s, d = x.shape
+    dt = x.dtype
+    q = (h @ p["xq"].astype(dt)).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    o = attn.attention_full(q, enc_kv["k"], enc_kv["v"], causal=False,
+                            chunk=cfg.attn_chunk)
+    return x + o.reshape(b, s, -1) @ p["xo"].astype(dt)
+
+
+def _ffn_apply(p, cfg: ModelConfig, kind: str, x, spmd=None):
+    aux = jnp.float32(0.0)
+    if kind == "moe":
+        h = L.rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+        if spmd is not None:
+            o, aux = moe_lib.moe_ffn_spmd(
+                p["moe"], h, num_experts=cfg.num_experts,
+                topk=cfg.experts_per_token,
+                capacity_factor=cfg.capacity_factor,
+                mesh=spmd["mesh"], x_spec=spmd["x_spec"],
+                mode=spmd.get("mode", "gather"))
+        else:
+            o, aux = moe_lib.moe_ffn(
+                p["moe"], h, num_experts=cfg.num_experts,
+                topk=cfg.experts_per_token,
+                capacity_factor=cfg.capacity_factor)
+        x = x + o
+    elif "mlp" in p:
+        h = L.rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h)
+    return x, aux
+
+
+def block_seq(p: Params, kind: str, cfg: ModelConfig, x, positions,
+              positions3=None, enc_kv=None, causal: bool = True,
+              want_cache: bool = False, cache_len: int = 0, spmd=None):
+    """Full-sequence block forward; optionally emits this block's cache."""
+    cache = None
+    if kind in ("attn", "moe"):
+        x, cache = _attn_seq(p, cfg, x, positions, positions3,
+                             causal=causal, want_cache=want_cache,
+                             cache_len=cache_len)
+        if enc_kv is not None:
+            x = _cross_attn(p, cfg, x, enc_kv)
+    elif kind == "rglru":
+        h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+        o, cache = rg.rglru_seq(p, h, want_state=want_cache)
+        x = x + o
+    elif kind == "mlstm":
+        h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+        o, cache = xl.mlstm_seq(p, h, cfg.num_heads, cfg.mlstm_chunk,
+                                want_state=want_cache)
+        x = x + o
+    elif kind == "slstm":
+        h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+        o, cache = xl.slstm_seq(p, h, cfg.num_heads,
+                                want_state=want_cache)
+        x = x + o
+    x, aux = _ffn_apply(p, cfg, kind, x, spmd)
+    return x, cache, aux
+
+
+def block_decode(p: Params, kind: str, cfg: ModelConfig, x, cache,
+                 cur_len, enc_kv=None, positions3=None, spmd=None):
+    if kind in ("attn", "moe"):
+        x, cache = _attn_decode(p, cfg, x, cache, cur_len, positions3)
+        if enc_kv is not None:
+            x = _cross_attn(p, cfg, x, enc_kv)
+    elif kind == "rglru":
+        h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+        o, cache = rg.rglru_decode(p, h, cache)
+        x = x + o
+    elif kind == "mlstm":
+        h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+        o, cache = xl.mlstm_decode(p, h, cache, cfg.num_heads)
+        x = x + o
+    elif kind == "slstm":
+        h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+        o, cache = xl.slstm_decode(p, h, cache, cfg.num_heads)
+        x = x + o
+    x, aux = _ffn_apply(p, cfg, kind, x, spmd)
+    return x, cache, aux
+
+
+# ==========================================================================
+# cache init
+# ==========================================================================
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int,
+                     cache_len: int, dtype=jnp.bfloat16):
+    if kind in ("attn", "moe"):
+        size = min(cfg.window, cache_len) if cfg.window > 0 else cache_len
+        shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+        if cfg.kv_quant:
+            sshape = shape[:-1] + (1,)
+            return {"k": jnp.zeros(shape, jnp.int8),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "k_s": jnp.zeros(sshape, jnp.bfloat16),
+                    "v_s": jnp.zeros(sshape, jnp.bfloat16)}
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kind == "rglru":
+        return rg.init_rglru_state(batch, cfg.rnn_width, cfg.conv_width,
+                                   dtype)
+    if kind == "mlstm":
+        return xl.init_mlstm_state(batch, cfg.d_model, cfg.num_heads,
+                                   cfg.proj_factor)
+    if kind == "slstm":
+        return xl.init_slstm_state(batch, cfg.d_model, cfg.num_heads)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16):
+    """Stacked decode caches: groups (num_groups leading dim) + tail."""
+    pattern = cfg.group_pattern
+
+    def one_group():
+        return {f"l{j}": init_block_cache(k, cfg, batch, cache_len, dtype)
+                for j, k in enumerate(pattern)}
+
+    groups = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_groups,) + x.shape),
+        one_group())
+    tail = [init_block_cache(k, cfg, batch, cache_len, dtype)
+            for k in cfg.tail]
+    cache = {"groups": groups, "tail": tail}
+    if cfg.encoder_layers:
+        # cross-attention K/V per decoder layer (filled by prefill)
+        shape = (batch, cfg.num_frames, cfg.num_kv_heads, cfg.head_dim)
+        xkv = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        cache["cross"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None],
+                                       (cfg.num_groups,) + x.shape), xkv)
+    return cache
+
+
+# ==========================================================================
+# parameter init
+# ==========================================================================
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, 8)
+    pattern = cfg.group_pattern
+    cross = cfg.encoder_layers > 0
+
+    def init_group(k):
+        ks = jax.random.split(k, len(pattern))
+        return {f"l{j}": _init_block(ks[j], kind, cfg, cross=cross)
+                for j, kind in enumerate(pattern)}
+
+    gkeys = jax.random.split(keys[0], cfg.num_groups)
+    params: Params = {
+        "embed": L.init_embedding(keys[1], cfg.vocab_padded, cfg.d_model),
+        "unembed": L.init_unembed(keys[2], cfg.d_model, cfg.vocab_padded),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "groups": jax.vmap(init_group)(gkeys),
+    }
+    if cfg.tail:
+        tkeys = jax.random.split(keys[3], len(cfg.tail))
+        params["tail"] = [
+            _init_block(tkeys[j], kind, cfg)
+            for j, kind in enumerate(cfg.tail)]
+    if cfg.encoder_layers:
+        ekeys = jax.random.split(keys[4], cfg.encoder_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(
+                lambda k: _init_block(k, "attn", cfg))(ekeys),
+            "norm": L.init_rmsnorm(cfg.d_model),
+            "in_proj": L.dense_init(keys[5], cfg.d_model, cfg.d_model),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """Parameter ShapeDtypeStructs without allocating (dry-run init)."""
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ==========================================================================
+# whole-model forwards
+# ==========================================================================
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                  dtype=jnp.bfloat16):
+    x = L.embed(params["embed"], batch["tokens"], dtype)
+    if cfg.num_patches and "vision_embeds" in batch:
+        p = cfg.num_patches
+        x = jnp.concatenate(
+            [batch["vision_embeds"].astype(dtype), x[:, p:]], axis=1)
+    return x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+
+
+def _encoder_forward(params, cfg: ModelConfig, frames: jnp.ndarray,
+                     act_sharding=None):
+    """Whisper encoder over stub frame embeddings (B, F, d)."""
+    dt = frames.dtype
+    pe = params["encoder"]
+    x = frames @ pe["in_proj"].astype(dt)
+    x = x + L.sinusoidal_positions(frames.shape[1],
+                                   cfg.d_model).astype(dt)[None]
+    x = _constrain(x, act_sharding)      # batch-shard the encoder stream
+    positions = jnp.broadcast_to(
+        jnp.arange(frames.shape[1], dtype=jnp.int32)[None],
+        frames.shape[:2])
+
+    def enc_block(h, bp):
+        h, _, _ = block_seq(bp, "attn", cfg, h, positions, causal=False)
+        return _constrain(h, act_sharding), None
+
+    x, _ = jax.lax.scan(enc_block, x, pe["blocks"])
+    return L.rmsnorm(pe["norm"], x, cfg.norm_eps)
+
+
+def _enc_kv_sharding(act_sharding):
+    """Stacked (G, B, F, KV, hd) encoder-KV sharding derived from the
+    residual-stream sharding: batch axis moves to dim 1.  Without this
+    pin the scanned cross-attention inputs replicate the whole batch."""
+    if act_sharding is None:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec
+    spec = act_sharding.spec
+    ba = spec[0] if len(spec) else None
+    return NamedSharding(act_sharding.mesh,
+                         PartitionSpec(None, ba, None, None, None))
+
+
+def _encoder_kv(params, cfg: ModelConfig, enc_out: jnp.ndarray):
+    """Per-decoder-group cross K/V from encoder output."""
+    b, f, d = enc_out.shape
+    dt = enc_out.dtype
+
+    def per_group(gp):
+        blk = gp["l0"]
+        k = (enc_out @ blk["xk"].astype(dt)).reshape(
+            b, f, cfg.num_kv_heads, cfg.head_dim)
+        v = (enc_out @ blk["xv"].astype(dt)).reshape(
+            b, f, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": k, "v": v}
+
+    return jax.vmap(per_group)(params["groups"])
+
+
+def _constrain(x, sharding):
+    if sharding is not None:
+        return jax.lax.with_sharding_constraint(x, sharding)
+    return x
+
+
+def forward_seq(params: Params, cfg: ModelConfig,
+                batch: Dict[str, jnp.ndarray], *,
+                want_cache: bool = False, cache_len: int = 0,
+                remat: bool = True, dtype=jnp.bfloat16,
+                act_sharding=None, logits_sharding=None, spmd=None):
+    """Training / prefill forward.  Returns (logits, aux, cache|None).
+
+    act_sharding / logits_sharding: optional NamedShardings pinned onto
+    the residual stream and the LM head output.  Without the pin, GSPMD's
+    propagation on the 2D-sharded weights prefers a weight-stationary
+    layout that *replicates the batch* across the mesh (256x activation
+    memory) — see DESIGN.md §6.
+    """
+    x = _embed_inputs(params, cfg, batch, dtype)
+    x = _constrain(x, act_sharding)
+    b, s, _ = x.shape
+    if cfg.mrope and "positions3" in batch:
+        positions3 = batch["positions3"]
+    else:
+        positions3 = None
+    positions = jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    enc_kv_all = None
+    if cfg.encoder_layers:
+        enc_out = _encoder_forward(params, cfg,
+                                   batch["frames"].astype(dtype),
+                                   act_sharding=act_sharding)
+        enc_kv_all = _encoder_kv(params, cfg, enc_out)   # stacked per group
+        ekv_sh = _enc_kv_sharding(act_sharding)
+        if ekv_sh is not None:
+            enc_kv_all = jax.tree_util.tree_map(
+                lambda t: jax.lax.with_sharding_constraint(t, ekv_sh),
+                enc_kv_all)
+
+    pattern = cfg.group_pattern
+
+    def group_fn(h, scanned):
+        h = _constrain(h, act_sharding)
+        gp = scanned["p"]
+        enc_kv = scanned.get("enc", None)
+        caches = {}
+        aux = jnp.float32(0.0)
+        for j, kind in enumerate(pattern):
+            h, c, a = block_seq(
+                gp[f"l{j}"], kind, cfg, h, positions, positions3,
+                enc_kv=enc_kv, causal=True,
+                want_cache=want_cache, cache_len=cache_len, spmd=spmd)
+            h = _constrain(h, act_sharding)
+            if want_cache:
+                caches[f"l{j}"] = c
+            aux = aux + a
+        return h, (caches, aux)
+
+    scanned = {"p": params["groups"]}
+    if enc_kv_all is not None:
+        scanned["enc"] = enc_kv_all
+    fn = jax.checkpoint(group_fn) if remat else group_fn
+    x, (caches, auxs) = jax.lax.scan(fn, x, scanned)
+    aux_total = jnp.sum(auxs)
+
+    tail_caches = []
+    for j, kind in enumerate(cfg.tail):
+        x, c, a = block_seq(params["tail"][j], kind, cfg, x, positions,
+                            positions3, want_cache=want_cache,
+                            cache_len=cache_len, spmd=spmd)
+        tail_caches.append(c)
+        aux_total = aux_total + a
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["unembed"], x)
+    logits = _constrain(logits, logits_sharding)
+    cache = None
+    if want_cache:
+        cache = {"groups": caches, "tail": tail_caches}
+        if cfg.encoder_layers:
+            cache["cross"] = enc_kv_all
+    return logits, aux_total, cache
+
+
+def forward_decode(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                   cache, cur_len, *, dtype=jnp.bfloat16, spmd=None):
+    """One-token decode.  token: (B, 1) int32.  Returns (logits, cache)."""
+    x = L.embed(params["embed"], token, dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    pattern = cfg.group_pattern
+
+    def group_fn(h, scanned):
+        gp, gc = scanned["p"], scanned["c"]
+        enc_kv = scanned.get("enc", None)
+        new_caches = {}
+        for j, kind in enumerate(pattern):
+            h, nc, _ = block_decode(gp[f"l{j}"], kind, cfg, h, gc[f"l{j}"],
+                                    cur_len, enc_kv=enc_kv, spmd=spmd)
+            new_caches[f"l{j}"] = nc
+        return h, new_caches
+
+    scanned = {"p": params["groups"], "c": cache["groups"]}
+    if cfg.encoder_layers:
+        scanned["enc"] = cache["cross"]
+    x, new_group_caches = jax.lax.scan(group_fn, x, scanned)
+
+    new_tail = []
+    for j, kind in enumerate(cfg.tail):
+        x, nc, _ = block_decode(params["tail"][j], kind, cfg, x,
+                                cache["tail"][j], cur_len, spmd=spmd)
+        new_tail.append(nc)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["unembed"], x)
+    new_cache = {"groups": new_group_caches, "tail": new_tail}
+    if cfg.encoder_layers:
+        new_cache["cross"] = cache["cross"]
+    return logits, new_cache
+
+
+# ==========================================================================
+# loss
+# ==========================================================================
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+            vocab_size: int) -> jnp.ndarray:
+    """Mean next-token CE; padded vocab columns masked out."""
+    vpad = logits.shape[-1]
+    if vpad > vocab_size:
+        neg = jnp.full((vpad - vocab_size,), -1e30, jnp.float32)
+        logits = logits.at[..., vocab_size:].set(neg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

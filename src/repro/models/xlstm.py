@@ -1,0 +1,260 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-
+parallel training form) and sLSTM (scalar memory, sequential scan).
+
+mLSTM recurrence (per head, exponential gating):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (hd x hd matrix memory)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t q_t / max(|n_t^T q_t|, 1)
+
+Training uses the *chunkwise-parallel* form: a scan over chunks carries
+(C, n, m); within a chunk the contribution is an attention-like masked
+quadratic in the gate-weighted keys — O(S * chunk) memory, O(S * (chunk +
+hd)) * hd FLOPs, the TPU-native middle ground between the O(S^2) parallel
+form (32k/500k-hostile) and the O(S) purely sequential scan (MXU-hostile).
+All gating runs in float32 in log space for stability (the m state is the
+running log-max).
+
+sLSTM is fundamentally sequential (recurrent R matmul inside the gate);
+it runs as a lax.scan over time with per-head block-diagonal recurrence.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+NEG = -1e30
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def init_mlstm(key, d: int, num_heads: int, proj_factor: float = 2.0) -> dict:
+    dm = int(d * proj_factor)
+    hd = dm // num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], d, dm),
+        "q": dense_init(ks[1], dm, dm),
+        "k": dense_init(ks[2], dm, dm),
+        "v": dense_init(ks[3], dm, dm),
+        "w_i": dense_init(ks[4], dm, num_heads, scale=0.02),
+        "w_f": dense_init(ks[5], dm, num_heads, scale=0.02),
+        "f_bias": jnp.full((num_heads,), 3.0, jnp.float32),
+        "out": dense_init(ks[6], dm, d),
+        "skip_gate": dense_init(ks[7], d, dm),
+    }
+
+
+def _mlstm_qkv(p, x, num_heads):
+    """x: (B, S, d) -> q, k, v (B, S, H, hd) f32 + log gates (B, S, H)."""
+    dt = x.dtype
+    up = x @ p["up"].astype(dt)                            # (B, S, dm)
+    b, s, dm = up.shape
+    hd = dm // num_heads
+    q = (up @ p["q"].astype(dt)).reshape(b, s, num_heads, hd)
+    k = (up @ p["k"].astype(dt)).reshape(b, s, num_heads, hd)
+    v = (up @ p["v"].astype(dt)).reshape(b, s, num_heads, hd)
+    logf = jax.nn.log_sigmoid(
+        (up @ p["w_f"].astype(dt)).astype(jnp.float32)
+        + p["f_bias"].astype(jnp.float32))                 # (B, S, H)
+    logi = (up @ p["w_i"].astype(dt)).astype(jnp.float32)
+    k = k * (k.shape[-1] ** -0.5)
+    return (q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), logf, logi, up)
+
+
+def mlstm_seq(p: dict, x: jnp.ndarray, num_heads: int,
+              chunk: int = 256, want_state: bool = False):
+    """Chunkwise-parallel mLSTM block forward. x: (B, S, d).
+
+    Returns (out, state|None); state = {C, n, m} at the final position.
+    """
+    dt = x.dtype
+    q, k, v, logf, logi, up = _mlstm_qkv(p, x, num_heads)
+    b, s, h, hd = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, "mlstm chunk must divide seq_len"
+    nc = s // chunk
+
+    def r(t):  # (B, S, ...) -> (nc, B, chunk, ...)
+        return jnp.moveaxis(t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+
+    qc, kc, vc = r(q), r(k), r(v)
+    lfc, lic = r(logf), r(logi)
+    csum_f = jnp.cumsum(lfc, axis=2)                       # in-chunk cumsum
+
+    def step(carry, inp):
+        C, n, m = carry            # (B,H,hd,hd), (B,H,hd), (B,H)
+        qb, kb, vb, lf, li, cf = inp
+        # decay from chunk start to position t: cf (B, chunk, H)
+        # total chunk decay:
+        f_all = cf[:, -1]                                   # (B, H)
+        # --- intra-chunk (attention-like, log-stabilized) ---
+        # log weight of (t, t') = cf_t - cf_t' + li_t'   for t' <= t
+        logw = (cf[:, :, None, :] - cf[:, None, :, :]
+                + li[:, None, :, :])                        # (B, t, t', H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        logw = jnp.where(tri[None, :, :, None], logw, NEG)
+        # --- inter-chunk: state contribution carries log-scale m ---
+        # per-position effective log scale of state path: cf_t + m
+        log_state = cf + m[:, None, :]                      # (B, t, H)
+        m_new_pos = jnp.maximum(jnp.max(logw, axis=2), log_state)  # (B,t,H)
+        w = jnp.exp(logw - m_new_pos[:, :, None, :])        # (B,t,t',H)
+        sstate = jnp.exp(log_state - m_new_pos)             # (B,t,H)
+        # numerator: intra (gated attention-like) + inter (state readout)
+        logits = jnp.einsum("bthd,buhd->btuh", qb, kb)      # (B,t,u,H)
+        num_intra = jnp.einsum("btuh,btuh,buhe->bthe", logits, w, vb)
+        num_inter = jnp.einsum("bthd,bhde->bthe", qb, C) * sstate[..., None]
+        den_intra = jnp.einsum("btuh,btuh->bth", logits, w)
+        den_inter = jnp.einsum("bthd,bhd->bth", qb, n) * sstate
+        num = num_intra + num_inter                         # (B,t,H,hd)
+        den = den_intra + den_inter                         # (B,t,H)
+        hsig = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new_pos))[..., None]
+        # --- state update to end of chunk ---
+        m_next = jnp.maximum(f_all + m,
+                             jnp.max(cf[:, -1:, :] - cf + li, axis=1))
+        decay_state = jnp.exp(f_all + m - m_next)           # (B, H)
+        wk = jnp.exp(cf[:, -1:, :] - cf + li - m_next[:, None, :])  # (B,t,H)
+        C_next = (C * decay_state[..., None, None]
+                  + jnp.einsum("bthd,bth,bthe->bhde", kb, wk, vb))
+        n_next = (n * decay_state[..., None]
+                  + jnp.einsum("bthd,bth->bhd", kb, wk))
+        return (C_next, n_next, m_next), hsig
+
+    C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.full((b, h), NEG, jnp.float32)
+    final, hs = jax.lax.scan(step, (C0, n0, m0),
+                             (qc, kc, vc, lfc, lic, csum_f))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, h * hd)       # (B, S, dm)
+    skip = jax.nn.silu((x @ p["skip_gate"].astype(dt)).astype(jnp.float32))
+    out = (hs * skip).astype(dt) @ p["out"].astype(dt)
+    state = None
+    if want_state:
+        state = {"C": final[0], "n": final[1], "m": final[2]}
+    return out, state
+
+
+def mlstm_decode(p: dict, x: jnp.ndarray, state: dict, num_heads: int):
+    """One-step mLSTM. x: (B, 1, d); state: {C, n, m}."""
+    dt = x.dtype
+    q, k, v, logf, logi, up = _mlstm_qkv(p, x, num_heads)
+    qb, kb, vb = q[:, 0], k[:, 0], v[:, 0]                 # (B, H, hd)
+    lf, li = logf[:, 0], logi[:, 0]                        # (B, H)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    decay = jnp.exp(lf + m - m_new)
+    inw = jnp.exp(li - m_new)
+    C = C * decay[..., None, None] + jnp.einsum(
+        "bhd,bhe->bhde", kb * inw[..., None], vb)
+    n = n * decay[..., None] + kb * inw[..., None]
+    num = jnp.einsum("bhd,bhde->bhe", qb, C)
+    den = jnp.einsum("bhd,bhd->bh", qb, n)
+    hsig = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    b = x.shape[0]
+    hs = hsig.reshape(b, 1, -1)
+    skip = jax.nn.silu((x @ p["skip_gate"].astype(dt)).astype(jnp.float32))
+    out = (hs * skip).astype(dt) @ p["out"].astype(dt)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def init_mlstm_state(batch: int, d: int, num_heads: int,
+                     proj_factor: float = 2.0) -> dict:
+    dm = int(d * proj_factor)
+    hd = dm // num_heads
+    return {"C": jnp.zeros((batch, num_heads, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, num_heads, hd), jnp.float32),
+            "m": jnp.full((batch, num_heads), NEG, jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def init_slstm(key, d: int, num_heads: int) -> dict:
+    hd = d // num_heads
+    ks = jax.random.split(key, 3)
+    return {
+        # input projections for the 4 gates (z, i, f, o) fused
+        "w": jax.random.normal(ks[0], (d, 4 * d), jnp.float32) * d ** -0.5,
+        # per-head recurrent block-diagonal (H, hd, 4*hd)
+        "r": jax.random.normal(ks[1], (num_heads, hd, 4 * hd),
+                               jnp.float32) * hd ** -0.5,
+        "bias": jnp.concatenate([
+            jnp.zeros((2 * d,), jnp.float32),               # z, i
+            jnp.full((d,), 3.0, jnp.float32),               # f
+            jnp.zeros((d,), jnp.float32)]),                 # o
+        "out": dense_init(ks[2], d, d),
+    }
+
+
+def _slstm_step(p, carry, wx_t, num_heads):
+    """One recurrence step.  carry: (c, n, h, m) each (B, H, hd) / (B, H)."""
+    c, n, h, m = carry
+    b = h.shape[0]
+    hd = h.shape[-1]
+    rh = jnp.einsum("bhd,hdk->bhk", h, p["r"].astype(jnp.float32))
+    pre = wx_t + rh.reshape(b, -1) + p["bias"].astype(jnp.float32)
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    zh = jnp.tanh(z).reshape(b, num_heads, hd)
+    oh = jax.nn.sigmoid(o).reshape(b, num_heads, hd)
+    li = i.reshape(b, num_heads, hd)                        # log i
+    lf = jax.nn.log_sigmoid(f).reshape(b, num_heads, hd)    # log f
+    # m is per (B, H, hd): exact per-unit stabilization
+    m_new = jnp.maximum(lf + m, li)
+    c_new = jnp.exp(lf + m - m_new) * c + jnp.exp(li - m_new) * zh
+    n_new = jnp.exp(lf + m - m_new) * n + jnp.exp(li - m_new)
+    h_new = oh * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_seq(p: dict, x: jnp.ndarray, num_heads: int,
+              want_state: bool = False):
+    """Sequential sLSTM block forward. x: (B, S, d).
+
+    Returns (out, state|None); state = {c, n, h, m} after the last step.
+    """
+    dt = x.dtype
+    b, s, d = x.shape
+    hd = d // num_heads
+    wx = (x @ p["w"].astype(dt)).astype(jnp.float32)        # (B, S, 4d)
+    init = (jnp.zeros((b, num_heads, hd), jnp.float32),
+            jnp.zeros((b, num_heads, hd), jnp.float32),
+            jnp.zeros((b, num_heads, hd), jnp.float32),
+            jnp.full((b, num_heads, hd), NEG, jnp.float32))
+
+    def step(carry, wx_t):
+        new = _slstm_step(p, carry, wx_t, num_heads)
+        return new, new[2]
+
+    final, hs = jax.lax.scan(step, init, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)
+    out = hs.astype(dt) @ p["out"].astype(dt)
+    state = None
+    if want_state:
+        state = {"c": final[0], "n": final[1], "h": final[2], "m": final[3]}
+    return out, state
+
+
+def slstm_decode(p: dict, x: jnp.ndarray, state: dict, num_heads: int):
+    """One-step sLSTM. x: (B, 1, d)."""
+    dt = x.dtype
+    wx = (x[:, 0] @ p["w"].astype(dt)).astype(jnp.float32)
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    c, n, h, m = _slstm_step(p, carry, wx, num_heads)
+    out = h.reshape(x.shape[0], 1, -1).astype(dt) @ p["out"].astype(dt)
+    return out, {"c": c, "n": n, "h": h, "m": m}
+
+
+def init_slstm_state(batch: int, d: int, num_heads: int) -> dict:
+    hd = d // num_heads
+    shape = (batch, num_heads, hd)
+    return {"c": jnp.zeros(shape, jnp.float32),
+            "n": jnp.zeros(shape, jnp.float32),
+            "h": jnp.zeros(shape, jnp.float32),
+            "m": jnp.full(shape, NEG, jnp.float32)}

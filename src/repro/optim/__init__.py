@@ -1,0 +1,7 @@
+"""From-scratch optimizers + distributed-optimization tricks."""
+
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, cosine_lr)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "cosine_lr"]

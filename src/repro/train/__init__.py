@@ -1,0 +1,1 @@
+"""Training substrate: steps, checkpointing, fault-tolerant loop, data."""

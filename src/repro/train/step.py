@@ -1,0 +1,121 @@
+"""Step builders: train_step (fwd + bwd + AdamW), prefill_step, serve_step.
+
+These are the functions the launcher jits onto the production mesh and the
+dry-run lowers; they are mesh-agnostic pure functions of (state, batch).
+
+train_step supports microbatch gradient accumulation (a lax.scan over
+microbatches with averaged grads) and an optional int8 error-feedback
+gradient compression hook (distributed/compression.py) applied before the
+optimizer — both are levers the §Perf hillclimb exercises.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (ModelConfig, forward_decode, forward_seq, lm_loss)
+from repro.models.layers import cast_params
+from repro.optim import AdamWConfig, adamw_update
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            aux_weight: float = 0.01, remat: bool = True,
+            act_sharding=None, logits_sharding=None, spmd=None):
+    logits, aux, _ = forward_seq(params, cfg, batch, remat=remat,
+                                 act_sharding=act_sharding,
+                                 logits_sharding=logits_sharding,
+                                 spmd=spmd)
+    ce = lm_loss(logits[:, :-1], batch["labels"][:, :-1], cfg.vocab_size)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1,
+                    grad_transform: Optional[Callable] = None,
+                    act_sharding=None, logits_sharding=None, spmd=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {params, opt}; batch = {tokens, labels, ...} with the global
+    batch leading.  microbatches > 1 splits the batch axis and accumulates
+    grads sequentially (same math, 1/m activation memory).
+    """
+
+    def single_grads(params, batch):
+        def cast_loss(p):
+            # bf16 cast OUTSIDE the layer scan: FSDP all-gathers then move
+            # bf16 (half the collective bytes vs gather-then-convert) and
+            # no f32 image of any gathered weight ever materializes.
+            bp = cast_params(p, jnp.bfloat16)
+            return loss_fn(bp, cfg, batch, act_sharding=act_sharding,
+                           logits_sharding=logits_sharding, spmd=spmd)
+        (loss, aux), grads = jax.value_and_grad(
+            cast_loss, has_aux=True)(params)
+        return grads, loss, aux
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches == 1:
+            grads, loss, aux = single_grads(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                g, l, _ = single_grads(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            def split_micro(path, x):
+                # batch axis is dim 0, except positions3 (3, B, S)
+                names = [str(getattr(p, "key", "")) for p in path]
+                ax = 1 if names and names[-1] == "positions3" else 0
+                shp = (x.shape[:ax] + (microbatches, x.shape[ax] //
+                       microbatches) + x.shape[ax + 1:])
+                return jnp.moveaxis(x.reshape(shp), ax, 0)
+
+            mb_batch = jax.tree_util.tree_map_with_path(split_micro, batch)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (g0, 0.0), mb_batch)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            aux = {"ce": loss, "aux": jnp.float32(0.0)}
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, om = adamw_update(opt_cfg, params, grads,
+                                               state["opt"])
+        metrics = {"loss": loss, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int,
+                      act_sharding=None, logits_sharding=None, spmd=None):
+    """prefill_step(params, batch) -> (last_logits, cache)."""
+
+    def prefill_step(params, batch):
+        logits, _, cache = forward_seq(params, cfg, batch, want_cache=True,
+                                       cache_len=cache_len, remat=False,
+                                       act_sharding=act_sharding,
+                                       logits_sharding=logits_sharding,
+                                       spmd=spmd)
+        return logits[:, -1:], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, greedy: bool = True, spmd=None):
+    """serve_step(params, token, cache, cur_len) -> (next_token, logits,
+    cache) — one decode step with a KV/state cache."""
+
+    def serve_step(params, token, cache, cur_len):
+        logits, new_cache = forward_decode(params, cfg, token, cache,
+                                           cur_len, spmd=spmd)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, new_cache
+
+    return serve_step

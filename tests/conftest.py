@@ -1,0 +1,16 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+single real CPU device; multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(12345)
+
+
+@pytest.fixture(scope="session")
+def walk_collection(rng):
+    """Small random-walk collection shared by search tests."""
+    return np.cumsum(rng.normal(size=(24, 192)), axis=-1).astype(np.float32)

@@ -1,0 +1,186 @@
+"""Hypothesis property tests on the system's core invariants:
+
+  P1  mindist_ULISSE(Q, uENV) <= ED(Q, W) for EVERY subsequence W the
+      envelope represents (paper Prop. 2) — raw and Z-normalized.
+  P2  LB_PaL(dtwENV(Q), uENV) <= DTW(Q, W) likewise (paper Lemma 3).
+  P3  the Z-normalized envelope CONTAINS every normalized subsequence's
+      PAA (Alg. 2 correctness — the fix for paper Lemma 2's negative
+      result).
+  P4  Lemma 1: master-series PAA prefixes equal equi-offset subsequence
+      PAA prefixes (non-normalized).
+  P5  block-hierarchy unions only widen: mindist(block) <= mindist(member).
+"""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounds, dtw, isax
+from repro.core.envelope import build_envelope_set
+from repro.core.paa import paa, znormalize
+from repro.core.types import Collection, EnvelopeParams
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _series(draw, n):
+    vals = draw(st.lists(st.floats(-50, 50, allow_nan=False,
+                                   width=32),
+                         min_size=n, max_size=n))
+    return np.asarray(vals, np.float32)
+
+
+@st.composite
+def search_case(draw):
+    n = draw(st.integers(48, 96))
+    series = _series(draw, n)
+    # degenerate flat series have zero variance: perturb deterministically
+    series = series + np.linspace(0, 1e-3, n).astype(np.float32)
+    seg = draw(st.sampled_from([4, 8]))
+    lmin = draw(st.integers(2 * seg, 3 * seg))
+    lmax = min(draw(st.integers(lmin, lmin + 24)), n)
+    gamma = draw(st.integers(0, 8))
+    qlen = draw(st.integers(lmin, lmax))
+    qlen = (qlen // seg) * seg
+    qlen = max(qlen, lmin - (lmin % seg) + (seg if lmin % seg else 0))
+    qlen = min(max(qlen, seg), lmax)
+    off = draw(st.integers(0, n - qlen))
+    znorm = draw(st.booleans())
+    return series, seg, lmin, lmax, gamma, qlen, off, znorm
+
+
+@given(search_case())
+@settings(**SETTINGS)
+def test_p1_mindist_lower_bounds_ed(case):
+    series, seg, lmin, lmax, gamma, qlen, off, znorm = case
+    if qlen < lmin or qlen > lmax:
+        return
+    p = EnvelopeParams(lmin=lmin, lmax=lmax, gamma=gamma, seg_len=seg,
+                       card=16, znorm=znorm)
+    coll = Collection.from_array(series[None])
+    bp = isax.gaussian_breakpoints(p.card) if znorm else \
+        isax.calibrate_breakpoints(p.card, paa(coll.data, seg))
+    env = build_envelope_set(coll, p, bp)
+    q = series[off:off + qlen] + np.float32(0.1)
+    qn = znormalize(jnp.asarray(q)) if znorm else jnp.asarray(q)
+    qp = paa(qn, seg)
+    nseg = qlen // seg
+    lbs = np.asarray(bounds.mindist_ulisse(qp, env, bp, seg, nseg))
+    # true ED against every represented subsequence of length qlen
+    n = len(series)
+    for e in range(env.size):
+        if not bool(env.valid[e]):
+            continue
+        a = int(env.anchor[e])
+        for j in range(int(env.n_master[e])):
+            o = a + j
+            if o + qlen > n:
+                continue
+            w = jnp.asarray(series[o:o + qlen])
+            wn = znormalize(w) if znorm else w
+            ed = float(jnp.sqrt(jnp.sum((wn - qn) ** 2)))
+            assert lbs[e] <= ed + 1e-2, (
+                f"env {e} lb {lbs[e]} > ED {ed} (o={o})")
+
+
+@given(search_case())
+@settings(max_examples=12, deadline=None)
+def test_p2_lbpal_lower_bounds_dtw(case):
+    series, seg, lmin, lmax, gamma, qlen, off, znorm = case
+    if qlen < lmin or qlen > lmax:
+        return
+    r = max(qlen // 10, 1)
+    p = EnvelopeParams(lmin=lmin, lmax=lmax, gamma=gamma, seg_len=seg,
+                       card=16, znorm=znorm)
+    coll = Collection.from_array(series[None])
+    bp = isax.gaussian_breakpoints(p.card) if znorm else \
+        isax.calibrate_breakpoints(p.card, paa(coll.data, seg))
+    env = build_envelope_set(coll, p, bp)
+    q = series[off:off + qlen] + np.float32(0.05)
+    qn = znormalize(jnp.asarray(q)) if znorm else jnp.asarray(q)
+    dlo, dhi = dtw.dtw_envelope(qn, r)
+    lbs = np.asarray(bounds.lb_pal(paa(dlo, seg), paa(dhi, seg), env, bp,
+                                   seg, qlen // seg))
+    n = len(series)
+    for e in range(env.size):
+        if not bool(env.valid[e]):
+            continue
+        a = int(env.anchor[e])
+        for j in range(int(env.n_master[e])):
+            o = a + j
+            if o + qlen > n:
+                continue
+            w = jnp.asarray(series[o:o + qlen])
+            wn = znormalize(w) if znorm else w
+            d = float(dtw.dtw_band(qn, wn, r))
+            assert lbs[e] <= d + 1e-2
+
+
+@given(search_case())
+@settings(**SETTINGS)
+def test_p3_znorm_envelope_containment(case):
+    series, seg, lmin, lmax, gamma, qlen, off, _ = case
+    p = EnvelopeParams(lmin=lmin, lmax=lmax, gamma=gamma, seg_len=seg,
+                       card=16, znorm=True)
+    coll = Collection.from_array(series[None])
+    env = build_envelope_set(coll, p,
+                             isax.gaussian_breakpoints(p.card))
+    n = len(series)
+    for e in range(env.size):
+        if not bool(env.valid[e]):
+            continue
+        a = int(env.anchor[e])
+        for j in range(int(env.n_master[e])):
+            o = a + j
+            for l in range(lmin, lmax + 1, max((lmax - lmin) // 3, 1)):
+                if o + l > n:
+                    continue
+                wn = znormalize(jnp.asarray(series[o:o + l]))
+                pw = np.asarray(paa(wn, seg))
+                lo = np.asarray(env.paa_lo[e][: len(pw)])
+                hi = np.asarray(env.paa_hi[e][: len(pw)])
+                assert (pw >= lo - 1e-3).all() and (pw <= hi + 1e-3).all()
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_p4_lemma1_master_prefixes(seed):
+    rng = np.random.default_rng(seed)
+    series = rng.normal(size=100).astype(np.float32).cumsum()
+    seg = 8
+    master = series[10:90]      # length 80 master at offset 10
+    for l in (40, 56, 64, 80):
+        sub = series[10:10 + l]
+        k = l // seg
+        np.testing.assert_allclose(
+            np.asarray(paa(jnp.asarray(master), seg))[:k],
+            np.asarray(paa(jnp.asarray(sub), seg)),
+            rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_p5_block_union_widens(seed):
+    from repro.core.index import build_index
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=(8, 96)).astype(np.float32).cumsum(axis=-1)
+    p = EnvelopeParams(lmin=32, lmax=64, gamma=4, seg_len=8, card=16,
+                       znorm=True)
+    idx = build_index(Collection.from_array(data), p, block_size=4,
+                      num_levels=2)
+    q = jnp.asarray(data[0, 5:53])
+    qp = paa(znormalize(q), 8)
+    # use_paa=True: the block level stores raw PAA unions, so the member
+    # bound must be computed on the same (unquantized) representation —
+    # breakpoint-widened member bounds can drop BELOW the block bound.
+    lbs = np.asarray(bounds.mindist_ulisse(qp, idx.envelopes,
+                                           idx.breakpoints, 8, 6,
+                                           use_paa=True))
+    fine = idx.levels[-1]
+    blk = np.asarray(bounds.interval_mindist(
+        qp, qp, fine.paa_lo, fine.paa_hi, 8, 6))
+    bs = idx.envelopes.size // fine.size
+    for b in range(fine.size):
+        members = lbs[b * bs:(b + 1) * bs]
+        finite = members[np.isfinite(members)]
+        if len(finite):
+            assert blk[b] <= finite.min() + 1e-3

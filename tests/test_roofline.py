@@ -1,0 +1,73 @@
+"""The loop-aware HLO cost parser against analytic ground truth."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from benchmarks import hlo_cost
+
+
+def test_parser_counts_while_trips():
+    """A scanned matmul chain's FLOPs must scale with trip count (the
+    blind spot of compiled.cost_analysis)."""
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        def f(x, ws):
+            y, _ = jax.lax.scan(body, x, ws)
+            return y
+        x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+        ws = jax.ShapeDtypeStruct((10, 256, 256), jnp.float32)
+        print(jax.jit(f).lower(x, ws).compile().as_text())
+    """)], capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = hlo_cost.analyze(out.stdout)
+    analytic = 10 * 2 * 128 * 256 * 256
+    assert 0.9 * analytic <= res["flops"] <= 1.3 * analytic, res["flops"]
+
+
+def test_parser_dot_flops():
+    hlo = """
+HloModule m
+
+ENTRY %main (a: f32[64,128], b: f32[128,32]) -> f32[64,32] {
+  %a = f32[64,128]{1,0} parameter(0)
+  %b = f32[128,32]{1,0} parameter(1)
+  ROOT %dot.1 = f32[64,32]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    res = hlo_cost.analyze(hlo)
+    assert res["flops"] == 2 * 64 * 32 * 128
+    # bytes: operands + output
+    assert res["bytes"] == (64 * 128 + 128 * 32 + 64 * 32) * 4
+
+
+def test_parser_collective_wire_model():
+    hlo = """
+HloModule m
+
+ENTRY %main (a: f32[16,8]) -> f32[64,8] {
+  %a = f32[16,8]{1,0} parameter(0)
+  ROOT %all-gather.1 = f32[64,8]{1,0} all-gather(%a), replica_groups=[4,4]<=[16], dimensions={0}
+}
+"""
+    res = hlo_cost.analyze(hlo)
+    operand = 16 * 8 * 4
+    assert res["collective_bytes"] == operand * 3      # (g-1) with g=4
+    assert res["collective_by_kind"]["all-gather"] == operand * 3
+
+
+def test_aliasing_ops_are_free():
+    hlo = """
+HloModule m
+
+ENTRY %main (a: f32[1024,1024]) -> f32[1024,1024] {
+  %a = f32[1024,1024]{1,0} parameter(0)
+  %t = (f32[1024,1024]{1,0}) tuple(%a)
+  ROOT %g = f32[1024,1024]{1,0} get-tuple-element(%t), index=0
+}
+"""
+    res = hlo_cost.analyze(hlo)
+    assert res["flops"] == 0 and res["bytes"] == 0

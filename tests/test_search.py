@@ -1,0 +1,108 @@
+"""Search correctness: exact k-NN / range results == brute-force oracle
+for ED + DTW, raw + Z-normalized; approximate-search quality sanity."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.index import build_index, index_stats
+from repro.core.search import (approx_knn, brute_force_knn, exact_knn,
+                               range_query)
+from repro.core.types import Collection, EnvelopeParams
+
+PARAMS = dict(lmin=64, lmax=128, seg_len=16, card=64)
+
+
+def _index(walk_collection, gamma, znorm):
+    coll = Collection.from_array(walk_collection)
+    p = EnvelopeParams(gamma=gamma, znorm=znorm, **PARAMS)
+    return build_index(coll, p, block_size=16, num_levels=2), coll, p
+
+
+@pytest.mark.parametrize("znorm", [True, False])
+@pytest.mark.parametrize("gamma", [0, 8, 64])
+@pytest.mark.parametrize("qlen", [64, 96, 128])
+def test_exact_knn_matches_brute_force(walk_collection, rng, znorm,
+                                       gamma, qlen):
+    idx, coll, p = _index(walk_collection, gamma, znorm)
+    q = walk_collection[3, 20:20 + qlen] \
+        + rng.normal(size=qlen).astype(np.float32) * 0.05
+    got = exact_knn(idx, q, k=5)
+    ref = brute_force_knn(coll, q, k=5, znorm=znorm)
+    np.testing.assert_allclose(got.dists, ref.dists, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("znorm", [True, False])
+def test_exact_knn_dtw_matches_brute_force(walk_collection, rng, znorm):
+    idx, coll, p = _index(walk_collection, 16, znorm)
+    q = walk_collection[7, 40:40 + 96] \
+        + rng.normal(size=96).astype(np.float32) * 0.05
+    got = exact_knn(idx, q, k=3, measure="dtw", r=9)
+    ref = brute_force_knn(coll, q, k=3, znorm=znorm, measure="dtw", r=9)
+    np.testing.assert_allclose(got.dists, ref.dists, rtol=1e-3, atol=1e-3)
+
+
+def test_range_query_matches_brute_force(walk_collection, rng):
+    idx, coll, p = _index(walk_collection, 16, True)
+    q = walk_collection[11, 10:10 + 96].copy()
+    ref = brute_force_knn(coll, q, k=20, znorm=True)
+    eps = float(ref.dists[9]) * 1.0001
+    got = range_query(idx, q, eps=eps)
+    expect = ref.dists[ref.dists <= eps]
+    assert len(got.dists) == len(expect)
+    np.testing.assert_allclose(np.sort(got.dists), np.sort(expect),
+                               rtol=1e-3, atol=1e-3)
+    # epsilon-range under DTW
+    refd = brute_force_knn(coll, q, k=5, znorm=True, measure="dtw", r=9)
+    gotd = range_query(idx, q, eps=float(refd.dists[-1]) * 1.0001,
+                       measure="dtw", r=9)
+    assert len(gotd.dists) >= 5
+
+
+def test_approx_search_quality(walk_collection, rng):
+    """Approximate answers must be close to the exact NN in distance
+    (paper Fig. 20/21 measures rank on realistic collections — that runs
+    in benchmarks/bench_approx.py; the unit test asserts the distance
+    ratio, robust on a 24-series toy index) and visit few leaves."""
+    idx, coll, p = _index(walk_collection, 8, True)
+    ratios = []
+    for i in range(6):
+        q = walk_collection[i, 15:15 + 96] \
+            + rng.normal(size=96).astype(np.float32) * 0.02
+        a = approx_knn(idx, q, k=1)
+        ref = brute_force_knn(coll, q, k=1, znorm=True)
+        ratios.append(a.dists[0] / max(ref.dists[0], 1e-6))
+        assert a.stats.leaves_visited <= 8
+    assert np.median(ratios) <= 5.0, ratios
+
+
+def test_exact_from_approx_shortcut(walk_collection):
+    """A query identical to an indexed subsequence must recover it.
+    (Tolerance 0.05: the MXU dot-product ED identity cancels
+    catastrophically at d ~ 0 — sqrt(f32 eps * 2L) ~ 5e-3.)"""
+    idx, coll, p = _index(walk_collection, 8, True)
+    q = walk_collection[2, 0:128].copy()
+    got = exact_knn(idx, q, k=1)
+    assert got.dists[0] < 0.05
+    assert got.series[0] == 2 and got.offsets[0] == 0
+
+
+def test_gamma_controls_index_size(walk_collection, rng):
+    """gamma=0 produces one envelope per master (maximal count, tight);
+    large gamma collapses them (paper Fig. 15e).  The pruning-vs-gamma
+    claim itself is validated at scale in benchmarks/bench_query_gamma."""
+    sizes = {}
+    for gamma in (0, 8, 64):
+        idx, coll, p = _index(walk_collection, gamma, True)
+        sizes[gamma] = int(np.asarray(idx.envelopes.valid).sum())
+        got = exact_knn(idx, q=walk_collection[5, 30:126], k=1)
+        assert 0.0 <= got.stats.pruning_power <= 1.0
+    assert sizes[0] > sizes[8] > sizes[64]
+
+
+def test_index_stats_envelope_count(walk_collection):
+    idx, coll, p = _index(walk_collection, 8, True)
+    stats = index_stats(idx, p)
+    n = walk_collection.shape[1]
+    expect = p.num_envelopes(n) * walk_collection.shape[0]
+    assert stats["num_envelopes"] == expect
+    assert stats["index_bytes"] < stats["raw_bytes"]
