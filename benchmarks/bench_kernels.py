@@ -91,5 +91,33 @@ def bench_envelope_build():
     emit("kernel_envelope_pallas", t_pal, "streams the length axis")
 
 
+def bench_engine_batched():
+    """Engine-level batched multi-query throughput: queries/sec at
+    B in {1, 8, 64} through one compiled (length-bucket, spec) program —
+    the batching win of the unified UlisseEngine serving path."""
+    import time
+    import jax
+    from repro.core import EnvelopeParams, QuerySpec, UlisseEngine
+
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    ns = 128 * jax.device_count()
+    data = np.cumsum(RNG.normal(size=(ns, 192)), -1).astype(np.float32)
+    p = EnvelopeParams(lmin=96, lmax=160, gamma=16, seg_len=16,
+                       znorm=True)
+    engine = UlisseEngine.distributed(mesh, p, data, max_batch=8)
+    spec = QuerySpec(k=5, verify_top=128)
+    qlen = 128
+    qs = [data[i % ns, 10:10 + qlen] for i in range(64)]
+    engine.search(qs[:1], spec)          # warm the 1-row batch shape
+    engine.search(qs[:8], spec)          # warm the full-batch shape
+    for B in (1, 8, 64):
+        reps = 3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            engine.search(qs[:B], spec)
+        dt = (time.perf_counter() - t0) / reps
+        emit(f"engine_batched_B{B}", dt / B, f"qps={B / dt:.1f}")
+
+
 ALL = [bench_mindist, bench_batch_ed, bench_lb_keogh, bench_dtw_band,
-       bench_envelope_build]
+       bench_envelope_build, bench_engine_batched]

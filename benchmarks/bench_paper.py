@@ -18,9 +18,9 @@ import jax.numpy as jnp
 
 from benchmarks.common import (CMRILite, IndIntLite, emit, mass_knn,
                                timer, ucr_scan_knn)
+from repro.core.engine import QuerySpec, UlisseEngine
 from repro.core.index import build_index, index_stats
-from repro.core.search import (approx_knn, brute_force_knn, exact_knn,
-                               range_query)
+from repro.core.search import brute_force_knn
 from repro.core.types import Collection, EnvelopeParams
 from repro.train.data import series_batches
 
@@ -76,12 +76,12 @@ def bench_query_vs_gamma():
         for gamma in (0, 16, 96):
             p = EnvelopeParams(lmin=LMIN, lmax=LMAX, gamma=gamma,
                                seg_len=SEG, znorm=znorm)
-            idx = build_index(coll, p)
+            eng = UlisseEngine.from_index(build_index(coll, p))
             qs = _queries(data, 192)
             t0 = time.perf_counter()
             prunes = []
             for q in qs:
-                r = exact_knn(idx, q, k=1)
+                r = eng.search(q, QuerySpec(k=1))
                 prunes.append(r.stats.pruning_power)
             dt = (time.perf_counter() - t0) / len(qs)
             emit(f"{tag}_query_gamma{gamma}", dt,
@@ -95,18 +95,18 @@ def bench_vs_serial_scans():
     coll = Collection.from_array(data)
     p = EnvelopeParams(lmin=LMIN, lmax=LMAX, gamma=48, seg_len=SEG,
                        znorm=True)
-    idx = build_index(coll, p)
+    eng = UlisseEngine.from_index(build_index(coll, p))
     speedups = []
     for qlen in (160, 192, 256):
         qs = _queries(data, qlen, m=3)
         # warm the jitted paths
-        exact_knn(idx, qs[0], k=1)
+        eng.search(qs[0], QuerySpec(k=1))
         ucr_scan_knn(data, qs[0], 1, True)
         mass_knn(data, qs[0], 1)
         t_u = t_s = t_m = 0.0
         for q in qs:
             t0 = time.perf_counter()
-            ru = exact_knn(idx, q, k=1)
+            ru = eng.search(q, QuerySpec(k=1))
             t_u += time.perf_counter() - t0
             t0 = time.perf_counter()
             rs = ucr_scan_knn(data, q, 1, True)
@@ -131,10 +131,11 @@ def bench_query_length_ranges():
         p = EnvelopeParams(lmin=lo, lmax=LMAX, gamma=32, seg_len=SEG,
                            znorm=True)
         idx = build_index(coll, p)
+        eng = UlisseEngine.from_index(idx)
         qs = _queries(data, (lo + LMAX) // 2 // SEG * SEG, m=3)
         t0 = time.perf_counter()
         for q in qs:
-            exact_knn(idx, q, k=1)
+            eng.search(q, QuerySpec(k=1))
         emit(f"fig18_range_{lo}_{LMAX}",
              (time.perf_counter() - t0) / 3,
              f"envs={index_stats(idx, p)['num_envelopes']}")
@@ -146,10 +147,10 @@ def bench_approx_quality():
     coll = Collection.from_array(data)
     p = EnvelopeParams(lmin=LMIN, lmax=LMAX, gamma=16, seg_len=SEG,
                        znorm=True)
-    idx = build_index(coll, p)
+    eng = UlisseEngine.from_index(build_index(coll, p))
     ranks, leaves = [], []
     for q in _queries(data, 192, m=10, noise=0.02):
-        a = approx_knn(idx, q, k=1)
+        a = eng.search(q, QuerySpec(mode="approx", k=1))
         ref = brute_force_knn(coll, q, k=100, znorm=True)
         key = (a.series[0], a.offsets[0])
         pairs = list(zip(ref.series, ref.offsets))
@@ -171,13 +172,13 @@ def bench_dtw():
     coll = Collection.from_array(data)
     p = EnvelopeParams(lmin=LMIN, lmax=LMAX, gamma=48, seg_len=SEG,
                        znorm=True)
-    idx = build_index(coll, p)
+    eng = UlisseEngine.from_index(build_index(coll, p))
     for wfrac in (0.05, 0.10):
         r = int(192 * wfrac)
         prunes, abandons, ts = [], [], []
         for q in _queries(data, 192, m=3):
             t0 = time.perf_counter()
-            res = exact_knn(idx, q, k=1, measure="dtw", r=r)
+            res = eng.search(q, QuerySpec(k=1, measure="dtw", r=r))
             ts.append(time.perf_counter() - t0)
             prunes.append(res.stats.pruning_power)
             abandons.append(res.stats.abandoning_power)
@@ -194,11 +195,11 @@ def bench_knn_scaling():
     coll = Collection.from_array(data)
     p = EnvelopeParams(lmin=LMIN, lmax=LMAX, gamma=48, seg_len=SEG,
                        znorm=True)
-    idx = build_index(coll, p)
+    eng = UlisseEngine.from_index(build_index(coll, p))
     q = _queries(data, LMIN, m=1)[0]
     for k in (1, 10, 50):
         t0 = time.perf_counter()
-        exact_knn(idx, q, k=k)
+        eng.search(q, QuerySpec(k=k))
         emit(f"fig27_knn_k{k}", time.perf_counter() - t0, "")
 
 
@@ -209,6 +210,7 @@ def bench_vs_indint():
     p = EnvelopeParams(lmin=128, lmax=256, gamma=64, seg_len=16,
                        znorm=False)
     idx = build_index(coll, p)
+    eng = UlisseEngine.from_index(idx)
     ii = IndIntLite(data, prefix_len=128)
     stats = index_stats(idx, p)
     emit("fig29_index_records_ulisse", 0.0,
@@ -218,7 +220,7 @@ def bench_vs_indint():
     for qlen in (128, 192, 256):
         q = _queries(data, qlen, m=1, noise=0.01)[0]
         t0 = time.perf_counter()
-        ru = exact_knn(idx, q, k=1)
+        ru = eng.search(q, QuerySpec(k=1))
         tu = time.perf_counter() - t0
         eps = float(ru.dists[0]) * 2 + 1e-3
         t0 = time.perf_counter()
@@ -235,13 +237,13 @@ def bench_range_queries():
     coll = Collection.from_array(data)
     p = EnvelopeParams(lmin=LMIN, lmax=LMAX, gamma=48, seg_len=SEG,
                        znorm=False)
-    idx = build_index(coll, p)
+    eng = UlisseEngine.from_index(build_index(coll, p))
     for qlen in (160, 256):
         q = _queries(data, qlen, m=1)[0]
-        nn = exact_knn(idx, q, k=1)
+        nn = eng.search(q, QuerySpec(k=1))
         eps = float(nn.dists[0]) * 2
         t0 = time.perf_counter()
-        res = range_query(idx, q, eps=eps)
+        res = eng.search(q, QuerySpec(eps=eps, chunk_size=2048))
         emit(f"fig30_range_q{qlen}", time.perf_counter() - t0,
              f"hits={len(res.dists)}")
         # selectivity check vs brute force
@@ -267,7 +269,7 @@ def bench_vs_cmri():
          f"records={sum(np.prod(v[0].shape[:2]) for v in cmri.tables.values())}")
     q = _queries(data, 192, m=1, noise=0.01)[0]
     t0 = time.perf_counter()
-    ru = exact_knn(idx, q, k=1)
+    ru = UlisseEngine.from_index(idx).search(q, QuerySpec(k=1))
     tu = time.perf_counter() - t0
     t0 = time.perf_counter()
     dc, checked = cmri.knn(q, 1)

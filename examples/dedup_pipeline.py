@@ -6,8 +6,8 @@ screens each incoming shard against everything already accepted).
 """
 import numpy as np
 
-from repro.core import (Collection, EnvelopeParams, build_index,
-                        exact_knn)
+from repro.core import (Collection, EnvelopeParams, QuerySpec,
+                        UlisseEngine)
 from repro.train.data import series_batches
 
 
@@ -22,12 +22,12 @@ def main():
 
     p = EnvelopeParams(lmin=192, lmax=256, gamma=32, seg_len=16,
                        znorm=True)
-    index = build_index(Collection.from_array(base), p)
+    engine = UlisseEngine.from_collection(Collection.from_array(base), p)
 
     kept, dropped = [], 0
     for row in incoming:
         probe = row[:224]          # variable-length probe, one index
-        r = exact_knn(index, probe, k=1)
+        r = engine.search(probe, QuerySpec(k=1))
         if r.dists[0] < 1.0:       # z-normalized near-duplicate
             dropped += 1
         else:

@@ -1,12 +1,14 @@
 """Quickstart: build a ULISSE index, answer variable-length queries.
 
+Every query shape — ED or DTW, k-NN or eps-range, approximate or exact —
+goes through one call: `engine.search(q, QuerySpec(...))`.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import (Collection, EnvelopeParams, build_index,
-                        exact_knn, approx_knn, range_query, index_stats)
+from repro.core import (Collection, EnvelopeParams, QuerySpec,
+                        UlisseEngine, index_stats)
 from repro.train.data import series_batches
 
 
@@ -15,11 +17,11 @@ def main():
     data = series_batches(500, 256, seed=0)
     coll = Collection.from_array(data)
 
-    # 2. ONE index answering every query length in [160, 256]
+    # 2. ONE engine answering every query length in [160, 256]
     p = EnvelopeParams(lmin=160, lmax=256, gamma=32, seg_len=16,
                        znorm=True)
-    index = build_index(coll, p)
-    stats = index_stats(index, p)
+    engine = UlisseEngine.from_collection(coll, p)
+    stats = index_stats(engine.index, p)
     print(f"index: {stats['num_envelopes']} envelopes summarizing "
           f"{stats['subsequences_represented']:,} subsequences "
           f"({stats['index_bytes'] / 1e6:.2f} MB vs "
@@ -32,7 +34,7 @@ def main():
         off = rng.integers(0, 256 - qlen + 1)
         q = data[src, off:off + qlen] \
             + rng.normal(size=qlen).astype(np.float32) * 0.05
-        r = exact_knn(index, q, k=3)
+        r = engine.search(q, QuerySpec(k=3))
         print(f"|Q|={qlen}: top-3 dists {np.round(r.dists, 3)} "
               f"(planted at series {src} offset {off}; found "
               f"series {r.series[0]} offset {r.offsets[0]}; "
@@ -40,14 +42,14 @@ def main():
 
     # 4. the same index under DTW, and an epsilon-range query
     q = data[7, 30:222].copy()
-    rd = exact_knn(index, q, k=2, measure="dtw", r=19)
+    rd = engine.search(q, QuerySpec(k=2, measure="dtw", r=19))
     print(f"DTW top-2: {np.round(rd.dists, 3)} "
           f"(abandoned {rd.stats.abandoning_power:.0%} of DTW DPs)")
-    rr = range_query(index, q, eps=float(rd.dists[-1]) * 2)
+    rr = engine.search(q, QuerySpec(eps=float(rd.dists[-1]) * 2))
     print(f"eps-range: {len(rr.dists)} hits")
 
     # 5. approximate search: a handful of leaf visits
-    ra = approx_knn(index, q, k=3)
+    ra = engine.search(q, QuerySpec(k=3, mode="approx"))
     print(f"approx top-3: {np.round(ra.dists, 3)} after "
           f"{ra.stats.leaves_visited} leaf visits")
 

@@ -1,21 +1,24 @@
 """ULISSE similarity-search service: batched, variable-length queries
 against a sharded collection (the paper's workload as a serving system).
 
+One `UlisseEngine` replaces the old per-length engine dict + manual
+exactness-escalation loop: the engine buckets query lengths to powers of
+two (masked padding), caches one compiled program per (bucket, spec),
+batches concurrent queries into one device program, and retries
+internally with doubled verify_top when an exactness certificate fails.
+
 Run with fake devices to exercise the distributed path:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
         PYTHONPATH=src python examples/serve_ulisse.py
 """
-import os
 import time
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro.core import Collection, EnvelopeParams, isax
+from repro.core import (Collection, EnvelopeParams, QuerySpec,
+                        UlisseEngine)
 from repro.core.search import brute_force_knn
-from repro.distributed.ulisse import (decode_id, make_distributed_query,
-                                      shard_collection)
 from repro.train.data import series_batches
 
 
@@ -27,47 +30,46 @@ def main():
     data = series_batches(256 * n_dev, 192, seed=3)
     p = EnvelopeParams(lmin=96, lmax=160, gamma=16, seg_len=16,
                        znorm=True)
-    bp = isax.gaussian_breakpoints(p.card)
-    sharded = shard_collection(mesh, jnp.asarray(data))
-
-    # one compiled query program per supported length bucket, plus a
-    # full-verification fallback for queries whose exactness certificate
-    # fails (the paper's exact-search guarantee, kept under batching)
-    engines = {qlen: make_distributed_query(mesh, p, bp, qlen=qlen, k=5,
-                                            verify_top=256)
-               for qlen in (96, 128, 160)}
-    n_env_dev = (256 // 1) * 6   # generous upper bound per shard
-    fallback = {qlen: make_distributed_query(mesh, p, bp, qlen=qlen, k=5,
-                                             verify_top=1536)
-                for qlen in (96, 128, 160)}
+    engine = UlisseEngine.distributed(mesh, p, data, max_batch=4)
+    spec = QuerySpec(k=5, verify_top=256)
 
     rng = np.random.default_rng(0)
+    coll = Collection.from_array(data)
     lat = []
     for i in range(12):
         qlen = [96, 128, 160][i % 3]
         src = rng.integers(0, data.shape[0])
         off = rng.integers(0, 192 - qlen + 1)
-        q = jnp.asarray(data[src, off:off + qlen]
-                        + rng.normal(size=qlen).astype(np.float32) * 0.02)
+        q = (data[src, off:off + qlen]
+             + rng.normal(size=qlen).astype(np.float32) * 0.02)
         t0 = time.perf_counter()
-        d, codes, exact = engines[qlen](sharded, q)
-        d.block_until_ready()
-        if not bool(exact):        # escalate: certificate not satisfied
-            d, codes, exact = fallback[qlen](sharded, q)
+        res = engine.search(q, spec)
         dt = time.perf_counter() - t0
         lat.append(dt)
-        sid, soff = decode_id(np.asarray(codes))
-        ref = brute_force_knn(Collection.from_array(data),
-                              np.asarray(q), k=5, znorm=p.znorm)
+        ref = brute_force_knn(coll, q, k=5, znorm=p.znorm)
         # 5e-3: near d=0 the baseline's dot-identity ED and the
         # service's direct ED differ by f32 cancellation noise
-        ok = np.allclose(np.asarray(d), ref.dists, atol=5e-3)
-        print(f"q{i:02d} |Q|={qlen} -> nn=(series {sid[0]}, off {soff[0]}) "
-              f"d={float(d[0]):.4f} exact={bool(exact)} "
+        ok = np.allclose(res.dists, ref.dists, atol=5e-3)
+        print(f"q{i:02d} |Q|={qlen} -> nn=(series {res.series[0]}, "
+              f"off {res.offsets[0]}) d={res.dists[0]:.4f} "
+              f"escalations={res.stats.escalations} "
               f"brute-match={ok} {dt * 1e3:.1f}ms")
         assert ok
     print(f"median latency {np.median(lat) * 1e3:.1f}ms "
-          f"(first call includes compile)")
+          f"(first call per length bucket includes compile)")
+
+    # batched serving: amortize dispatch across concurrent users
+    qlen = 128
+    batch = [data[rng.integers(0, data.shape[0]), o:o + qlen]
+             + rng.normal(size=qlen).astype(np.float32) * 0.02
+             for o in rng.integers(0, 192 - qlen + 1, size=8)]
+    engine.search(batch[:4], spec)   # warm the full-batch program shape
+    t0 = time.perf_counter()
+    results = engine.search(batch, spec)
+    dt = time.perf_counter() - t0
+    assert all(len(r.dists) == 5 for r in results)
+    print(f"batch of {len(batch)}: {dt * 1e3:.1f}ms total, "
+          f"{len(batch) / dt:.0f} queries/s")
 
 
 if __name__ == "__main__":

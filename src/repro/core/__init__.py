@@ -1,11 +1,15 @@
 """ULISSE core: the paper's contribution as composable JAX modules."""
 from repro.core.types import Collection, EnvelopeParams, EnvelopeSet
 from repro.core.index import UlisseIndex, build_index, index_stats
+from repro.core.engine import QuerySpec, UlisseEngine
+from repro.core.executor import SearchResult, SearchStats
+from repro.core.planner import PreparedQuery, prepare_query
 from repro.core.search import (approx_knn, brute_force_knn, exact_knn,
-                               prepare_query, range_query)
+                               range_query)
 
 __all__ = [
     "Collection", "EnvelopeParams", "EnvelopeSet", "UlisseIndex",
-    "build_index", "index_stats", "approx_knn", "exact_knn", "range_query",
-    "brute_force_knn", "prepare_query",
+    "build_index", "index_stats", "QuerySpec", "UlisseEngine",
+    "SearchResult", "SearchStats", "PreparedQuery", "prepare_query",
+    "approx_knn", "exact_knn", "range_query", "brute_force_knn",
 ]

@@ -47,6 +47,25 @@ def interval_mindist(q_lo: jnp.ndarray, q_hi: jnp.ndarray,
     return d2 if squared else jnp.sqrt(d2)
 
 
+def masked_interval_mindist(q_lo: jnp.ndarray, q_hi: jnp.ndarray,
+                            e_lo: jnp.ndarray, e_hi: jnp.ndarray,
+                            seg_len: int, seg_mask: jnp.ndarray,
+                            squared: bool = False):
+    """interval_mindist with a *traced* per-segment validity mask.
+
+    Used by bucket-padded query programs where the number of valid query
+    segments floor(|Q|/s) is a traced value: instead of slicing the first
+    nseg_q segments (a static shape), all w segments are computed and the
+    invalid ones contribute zero.  seg_mask: (w,) bool.
+    """
+    gap = jnp.maximum(jnp.maximum(e_lo - q_hi[..., None, :],
+                                  q_lo[..., None, :] - e_hi), 0.0)
+    gap = jnp.where(jnp.isfinite(gap), gap, 0.0)
+    gap = gap * seg_mask.astype(gap.dtype)
+    d2 = seg_len * jnp.sum(gap * gap, axis=-1)
+    return d2 if squared else jnp.sqrt(d2)
+
+
 def envelope_breakpoint_bounds(env: EnvelopeSet, breakpoints: jnp.ndarray):
     """[beta_l(iSAX(L)), beta_u(iSAX(U))] — what the paper's index stores."""
     return (isax.beta_lower(env.sym_lo, breakpoints),

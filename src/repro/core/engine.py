@@ -1,0 +1,412 @@
+"""`UlisseEngine`: one planner/executor surface over local, batched, and
+distributed ULISSE search.
+
+The paper's value proposition — a *single* index answering k-NN and
+eps-range queries of any length in [lmin, lmax], under ED or DTW, raw or
+Z-normalized (§6) — is exposed through a single call:
+
+    engine = UlisseEngine.from_collection(coll, params)      # local
+    engine = UlisseEngine.distributed(mesh, params, data)    # sharded
+    res = engine.search(q, QuerySpec(k=5))                   # one query
+    ress = engine.search(q_batch, QuerySpec(k=5))            # many queries
+
+`QuerySpec` absorbs the formerly scattered kwargs of approx_knn /
+exact_knn / range_query / make_distributed_query.  The local backend is
+the host-driven planner/executor pipeline (planner.py + executor.py);
+the distributed backend owns a compiled-program cache keyed by
+(length-bucket, spec) with power-of-two length bucketing + masked
+padding, so a mixed-length query stream compiles a handful of programs
+instead of one per distinct length, and batches up to `max_batch`
+queries into one device program.  The paper's exactness guarantee is
+kept by an internal escalation loop: when a query's exactness
+certificate fails, the engine retries it with doubled `verify_top`
+until the certificate holds or the whole shard is verified.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import executor, planner
+from repro.core.executor import SearchResult, SearchStats, TopK
+from repro.core.index import UlisseIndex, build_index
+from repro.core.types import Collection, EnvelopeParams
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """Everything about a query except its values.
+
+    measure: "ed" | "dtw" (DTW needs a warping window r > 0).
+    k:       neighbors returned (k-NN queries; ignored when eps is set).
+    eps:     when set, the query is an eps-range query (all subsequences
+             within eps), mode/k are ignored.
+    mode:    "exact" (paper Alg. 5 guarantee) | "approx" (Alg. 4 descent).
+    approx_first:   seed the exact scan with an approximate pass (Alg. 5
+                    line 1; disable to measure the pure scan).
+    chunk_size:     exact-scan verification chunk (envelopes per step).
+    verify_top:     distributed per-shard verification batch (initial
+                    value; the engine doubles it on certificate failure).
+    max_leaves:     approx-descent leaf budget.
+    use_paa_bounds: use raw L/U PAA bounds instead of the quantized iSAX
+                    breakpoints in the exact scan (tighter, beyond-paper).
+    """
+
+    measure: str = "ed"
+    r: int = 0
+    k: int = 1
+    eps: Optional[float] = None
+    mode: str = "exact"
+    approx_first: bool = True
+    chunk_size: int = 512
+    verify_top: int = 128
+    max_leaves: int = 8
+    use_paa_bounds: bool = False
+
+    def __post_init__(self):
+        if self.measure not in ("ed", "dtw"):
+            raise ValueError(f"unknown measure {self.measure!r}")
+        if self.mode not in ("exact", "approx"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        if self.measure == "dtw" and self.r <= 0:
+            raise ValueError("DTW search needs a warping window r > 0")
+        if self.k < 1:
+            raise ValueError("k must be >= 1")
+        if self.eps is not None and self.eps < 0:
+            raise ValueError("eps must be >= 0")
+        if self.chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+        if self.verify_top < 1:
+            raise ValueError("verify_top must be >= 1")
+
+    @property
+    def is_range(self) -> bool:
+        return self.eps is not None
+
+
+def _pow2_bucket(qlen: int, cap: int) -> int:
+    b = 1
+    while b < qlen:
+        b <<= 1
+    return min(b, cap)
+
+
+class UlisseEngine:
+    """Unified query facade over one ULISSE index (local or sharded)."""
+
+    def __init__(self, *, index: Optional[UlisseIndex] = None,
+                 params: Optional[EnvelopeParams] = None,
+                 mesh=None, sharded_data=None,
+                 breakpoints=None, axes=("data",),
+                 num_series: int = 0, series_len: int = 0,
+                 max_batch: int = 8):
+        self._index = index
+        self.params = params if params is not None else index.params
+        self._mesh = mesh
+        self._sharded = sharded_data
+        self._breakpoints = breakpoints
+        self._axes = tuple(axes)
+        self._num_series = num_series
+        self._series_len = series_len
+        self.max_batch = max_batch
+        self._programs = {}           # (bucket, k, verify_top) -> compiled fn
+        if mesh is not None:
+            shards = 1
+            for a in self._axes:
+                shards *= mesh.shape[a]
+            self._shards = shards
+            self._env_rows_per_shard = (
+                self.params.num_envelopes(series_len)
+                * (num_series // shards))
+            if series_len < self.params.lmax:
+                raise ValueError("series shorter than lmax")
+
+    # ------------------------------------------------------------------
+    # constructors
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_index(cls, index: UlisseIndex) -> "UlisseEngine":
+        """Wrap an already-built local index."""
+        return cls(index=index)
+
+    @classmethod
+    def from_collection(cls, collection: Collection, params: EnvelopeParams,
+                        breakpoints=None, block_size: int = 64,
+                        num_levels: int = 2) -> "UlisseEngine":
+        """Build the index and the engine in one step (local backend)."""
+        return cls(index=build_index(collection, params, breakpoints,
+                                     block_size=block_size,
+                                     num_levels=num_levels))
+
+    @classmethod
+    def distributed(cls, mesh, params: EnvelopeParams, data,
+                    breakpoints=None, axes=("data",),
+                    max_batch: int = 8) -> "UlisseEngine":
+        """Shard `data` (S, n) over the mesh and serve queries from it."""
+        from repro.core.index import default_breakpoints
+        from repro.distributed.ulisse import shard_collection
+
+        data = jnp.asarray(data, jnp.float32)
+        if breakpoints is None:
+            breakpoints = default_breakpoints(params, data)
+        return cls(params=params, mesh=mesh,
+                   sharded_data=shard_collection(mesh, data, axes),
+                   breakpoints=breakpoints, axes=axes,
+                   num_series=int(data.shape[0]),
+                   series_len=int(data.shape[1]), max_batch=max_batch)
+
+    @property
+    def is_distributed(self) -> bool:
+        return self._mesh is not None
+
+    @property
+    def index(self) -> Optional[UlisseIndex]:
+        """The local index (None for the distributed backend)."""
+        return self._index
+
+    # ------------------------------------------------------------------
+    # the one entry point
+    # ------------------------------------------------------------------
+
+    def search(self, queries, spec: QuerySpec = QuerySpec()
+               ) -> Union[SearchResult, List[SearchResult]]:
+        """Answer one query (1-D input -> SearchResult) or a batch (2-D
+        array or sequence of 1-D arrays -> list of SearchResult), under
+        any measure/mode/shape the spec describes."""
+        single, qs = self._normalize_queries(queries)
+        if self.is_distributed:
+            results = self._search_distributed(qs, spec)
+        else:
+            results = [self._search_local(q, spec) for q in qs]
+        return results[0] if single else results
+
+    def _normalize_queries(self, queries):
+        if isinstance(queries, (list, tuple)):
+            qs = [np.asarray(q, np.float32) for q in queries]
+        else:
+            arr = np.asarray(queries, np.float32)
+            if arr.ndim == 1:
+                return True, [arr]
+            qs = [arr[i] for i in range(arr.shape[0])]
+        return False, qs
+
+    # ------------------------------------------------------------------
+    # local backend (host-driven planner/executor pipeline)
+    # ------------------------------------------------------------------
+
+    def _search_local(self, q, spec: QuerySpec) -> SearchResult:
+        if spec.is_range:
+            return self._local_range(q, spec)
+        if spec.mode == "approx":
+            return self._local_approx(q, spec)
+        return self._local_exact(q, spec)
+
+    def _local_approx(self, q, spec: QuerySpec) -> SearchResult:
+        """Best-first descent over the block hierarchy (paper Alg. 4).
+
+        Visits fine blocks ("leaves") in lower-bound order; stops when a
+        leaf's lower bound exceeds the k-th bsf (=> answer already exact),
+        capped at max_leaves.
+        """
+        index = self._index
+        pq = planner.prepare_query(q, self.params, spec.measure, spec.r)
+        stats = SearchStats(envelopes_total=int(index.envelopes.size))
+        pool = TopK(spec.k)
+
+        order, blk_lb = planner.plan_leaf_order(index, pq)
+        stats.lb_computations += index.levels[-1].size
+        block_size = index.envelopes.size // index.levels[-1].size
+
+        for leaf_rank in range(min(spec.max_leaves, len(order))):
+            b = int(order[leaf_rank])
+            if not np.isfinite(blk_lb[b]):
+                break
+            if blk_lb[b] ** 2 >= pool.kth:
+                stats.exact_from_approx = True
+                break
+            env_idx = np.arange(b * block_size, (b + 1) * block_size)
+            valid = np.asarray(index.envelopes.valid)[env_idx]
+            executor.verify_envelopes(index, pq, env_idx[valid], pool, stats)
+            stats.leaves_visited += 1
+            # NOTE deviation from Alg. 4 line 22: the paper stops after the
+            # first non-improving leaf to save random disk I/O.  Batched
+            # device leaves are cheap and the quantized block bounds tie at
+            # zero often, so we keep visiting up to max_leaves — strictly
+            # better answers for the same asymptotics (see DESIGN.md §3).
+        return pool.result(stats)
+
+    def _local_exact(self, q, spec: QuerySpec) -> SearchResult:
+        """Exact k-NN: approximate pass for a bsf, then the LB-sorted
+        chunked scan over the flat envelope list with bsf pruning
+        (paper Alg. 5)."""
+        index = self._index
+        pq = planner.prepare_query(q, self.params, spec.measure, spec.r)
+        stats = SearchStats(envelopes_total=int(index.envelopes.size))
+        pool = TopK(spec.k)
+
+        if spec.approx_first:
+            a = self._local_approx(q, spec)
+            stats.leaves_visited = a.stats.leaves_visited
+            stats.envelopes_checked = a.stats.envelopes_checked
+            stats.true_dist_computations = a.stats.true_dist_computations
+            stats.dtw_lb_keogh = a.stats.dtw_lb_keogh
+            stats.dtw_full = a.stats.dtw_full
+            stats.lb_computations = a.stats.lb_computations
+            pool.push(a.dists ** 2, a.series, a.offsets)
+            if a.stats.exact_from_approx:
+                stats.exact_from_approx = True
+                return pool.result(stats)
+
+        order, lbs_sorted = planner.plan_scan_order(index, pq,
+                                                    spec.use_paa_bounds)
+        stats.lb_computations += index.envelopes.size
+
+        pos = 0
+        n = index.envelopes.size
+        while pos < n:
+            if not np.isfinite(lbs_sorted[pos]):
+                break
+            if lbs_sorted[pos] ** 2 >= pool.kth:
+                break  # every remaining envelope is pruned
+            end = min(pos + spec.chunk_size, n)
+            sel = order[pos:end]
+            keep = (lbs_sorted[pos:end] ** 2) < pool.kth
+            keep &= np.isfinite(lbs_sorted[pos:end])
+            if keep.any():
+                executor.verify_envelopes(index, pq, sel[keep], pool, stats)
+            stats.chunks_visited += 1
+            pos = end
+        return pool.result(stats)
+
+    def _local_range(self, q, spec: QuerySpec) -> SearchResult:
+        """All subsequences within eps of Q (Alg. 5 with bsf := eps)."""
+        index = self._index
+        pq = planner.prepare_query(q, self.params, spec.measure, spec.r)
+        stats = SearchStats(envelopes_total=int(index.envelopes.size))
+        eps2 = float(spec.eps) ** 2
+
+        lbs = np.asarray(planner.env_lower_bounds(
+            pq.paa_lo, pq.paa_hi, index.envelopes, index.breakpoints,
+            self.params.seg_len, pq.nseg, spec.use_paa_bounds), np.float64)
+        stats.lb_computations += index.envelopes.size
+        cand = np.nonzero((lbs ** 2) <= eps2)[0]
+        rows: list = []
+        pool = TopK(1)  # unused sink for API symmetry
+        for start in range(0, len(cand), spec.chunk_size):
+            executor.verify_envelopes(
+                index, pq, cand[start:start + spec.chunk_size], pool,
+                stats, eps2=eps2, collector=rows)
+            stats.chunks_visited += 1
+        if rows:
+            out = np.concatenate(rows, axis=0)
+            out = out[np.argsort(out[:, 2], kind="stable")]
+            return SearchResult(dists=np.sqrt(np.maximum(out[:, 2], 0.0)),
+                                series=out[:, 0].astype(np.int64),
+                                offsets=out[:, 1].astype(np.int64),
+                                stats=stats)
+        return SearchResult(dists=np.zeros((0,)),
+                            series=np.zeros((0,), np.int64),
+                            offsets=np.zeros((0,), np.int64), stats=stats)
+
+    # ------------------------------------------------------------------
+    # distributed backend (batched shard_map programs + escalation)
+    # ------------------------------------------------------------------
+
+    def _bucket(self, qlen: int) -> int:
+        p = self.params
+        if not (p.lmin <= qlen <= p.lmax):
+            raise ValueError(
+                f"query length {qlen} outside [{p.lmin}, {p.lmax}]")
+        return _pow2_bucket(qlen, p.lmax)
+
+    def _program(self, bucket: int, k: int, verify_top: int):
+        key = (bucket, k, verify_top)
+        fn = self._programs.get(key)
+        if fn is None:
+            from repro.distributed.ulisse import \
+                make_batched_distributed_query
+            fn = make_batched_distributed_query(
+                self._mesh, self.params, self._breakpoints, bucket=bucket,
+                k=k, axes=self._axes, verify_top=verify_top)
+            self._programs[key] = fn
+        return fn
+
+    def _search_distributed(self, qs: List[np.ndarray],
+                            spec: QuerySpec) -> List[SearchResult]:
+        if (spec.measure != "ed" or spec.is_range or spec.mode != "exact"
+                or spec.use_paa_bounds):
+            raise NotImplementedError(
+                "the distributed backend answers exact ED k-NN with "
+                "quantized breakpoint bounds; use a local UlisseEngine "
+                "for DTW / range / approximate / use_paa_bounds queries")
+        results: List[Optional[SearchResult]] = [None] * len(qs)
+        by_bucket = {}
+        for i, q in enumerate(qs):
+            by_bucket.setdefault(self._bucket(len(q)), []).append(i)
+        for bucket, idxs in sorted(by_bucket.items()):
+            for start in range(0, len(idxs), self.max_batch):
+                chunk = idxs[start:start + self.max_batch]
+                for i, res in zip(chunk,
+                                  self._run_chunk(qs, chunk, bucket, spec)):
+                    results[i] = res
+        return results
+
+    def _run_chunk(self, qs, chunk, bucket: int,
+                   spec: QuerySpec) -> List[SearchResult]:
+        """One padded device batch, with internal exactness escalation:
+        queries whose certificate fails are re-packed into a (smaller)
+        batch and retried with doubled verify_top until the certificate
+        holds or the whole shard is verified.
+
+        The batch dimension pads to the next power of two (capped at
+        max_batch) so a lone query runs a 1-row program instead of
+        paying for max_batch rows; jit re-specializes per batch shape,
+        bounding compiles at log2(max_batch)+1 per (bucket, spec)."""
+        out: List[Optional[SearchResult]] = [None] * len(chunk)
+        pending = list(range(len(chunk)))          # rows into `chunk`
+        vt = spec.verify_top
+        escalations = 0
+        cap = self._env_rows_per_shard
+        while pending:
+            B = min(_pow2_bucket(len(pending), self.max_batch),
+                    self.max_batch)
+            qpad = np.zeros((B, bucket), np.float32)
+            qlens = np.full((B,), self.params.lmin, np.int32)
+            for row, ci in enumerate(pending):
+                q = qs[chunk[ci]]
+                qpad[row, : len(q)] = q
+                qlens[row] = len(q)
+            fn = self._program(bucket, spec.k, min(vt, cap))
+            d, codes, exact = fn(self._sharded, jnp.asarray(qpad),
+                                 jnp.asarray(qlens))
+            d = np.asarray(d)
+            codes = np.asarray(codes)
+            exact_np = np.asarray(exact) | (vt >= cap)
+            still = []
+            for row, ci in enumerate(pending):
+                if exact_np[row]:
+                    out[ci] = self._distributed_result(
+                        d[row], codes[row], escalations, min(vt, cap))
+                else:
+                    still.append(ci)
+            pending = still
+            if pending:
+                vt *= 2
+                escalations += 1
+        return out
+
+    def _distributed_result(self, d, codes, escalations: int,
+                            verified_rows: int) -> SearchResult:
+        stats = SearchStats(
+            envelopes_total=(self.params.num_envelopes(self._series_len)
+                             * self._num_series),
+            envelopes_checked=verified_rows * self._shards,
+            escalations=escalations)
+        return SearchResult(dists=np.asarray(d, np.float64),
+                            series=codes[:, 0].astype(np.int64),
+                            offsets=codes[:, 1].astype(np.int64),
+                            stats=stats)

@@ -1,0 +1,268 @@
+"""Verification kernels for ULISSE search (the *executor* half).
+
+Everything that touches raw series data lives here: candidate-window
+gathers, batched true-distance kernels (ED on the MXU via the dot-product
+identity, the LB_Keogh -> banded-DP DTW cascade), the host-side k-best
+pool, and the result/stats containers.  The planner half (planner.py)
+decides *which* envelopes to verify; this module computes the distances.
+
+Like the planner, two shape regimes coexist:
+
+  * static qlen (`gather_windows`, `ed_batch`, ...) — the host-driven
+    local backend, jitted once per query length;
+  * bucket-padded traced qlen (`gather_bucket_windows`, `masked_ed`) —
+    pure traceable functions called inside the batched distributed
+    shard_map programs, one executable per length bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dtw
+from repro.core.paa import masked_znormalize, znormalize
+
+
+# --------------------------------------------------------------------------
+# results + stats
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SearchStats:
+    envelopes_total: int = 0
+    envelopes_checked: int = 0       # envelopes whose raw data was read
+    lb_computations: int = 0
+    true_dist_computations: int = 0  # ED or DTW on raw windows
+    dtw_lb_keogh: int = 0            # second-tier LB computations
+    dtw_full: int = 0                # full banded DPs executed
+    leaves_visited: int = 0
+    chunks_visited: int = 0
+    exact_from_approx: bool = False
+    escalations: int = 0             # exactness-certificate retries
+
+    @property
+    def pruning_power(self) -> float:
+        if self.envelopes_total == 0:
+            return 0.0
+        return 1.0 - self.envelopes_checked / self.envelopes_total
+
+    @property
+    def abandoning_power(self) -> float:
+        """Fraction of candidate true-distance computations avoided."""
+        if self.dtw_lb_keogh > 0:
+            return 1.0 - self.dtw_full / max(self.dtw_lb_keogh, 1)
+        return 0.0
+
+
+@dataclasses.dataclass
+class SearchResult:
+    dists: np.ndarray      # (k,) sorted true distances
+    series: np.ndarray     # (k,) series ids
+    offsets: np.ndarray    # (k,) window offsets
+    stats: SearchStats
+
+
+class TopK:
+    """Host-side k-best pool over (dist, sid, off) triples."""
+
+    def __init__(self, k: int):
+        self.k = k
+        self.d = np.full((0,), np.inf, np.float64)
+        self.s = np.zeros((0,), np.int64)
+        self.o = np.zeros((0,), np.int64)
+
+    def push(self, d, s, o):
+        d = np.concatenate([self.d, np.asarray(d, np.float64)])
+        s = np.concatenate([self.s, np.asarray(s, np.int64)])
+        o = np.concatenate([self.o, np.asarray(o, np.int64)])
+        # dedup (sid, off): the approx phase and the exact scan may verify
+        # the same envelope; a subsequence must appear in the pool once
+        key = s * (1 << 32) + o
+        order = np.lexsort((d, key))
+        key, d, s, o = key[order], d[order], s[order], o[order]
+        first = np.ones(len(key), bool)
+        first[1:] = key[1:] != key[:-1]
+        d, s, o = d[first], s[first], o[first]
+        order = np.argsort(d, kind="stable")[: self.k]
+        self.d, self.s, self.o = d[order], s[order], o[order]
+
+    @property
+    def kth(self) -> float:
+        return float(self.d[-1]) if len(self.d) == self.k else np.inf
+
+    def result(self, stats: SearchStats) -> SearchResult:
+        return SearchResult(dists=np.sqrt(np.maximum(self.d, 0.0)),
+                            series=self.s, offsets=self.o, stats=stats)
+
+
+# --------------------------------------------------------------------------
+# jitted device steps (static qlen)
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("qlen", "g"))
+def gather_windows(data: jnp.ndarray, sids, anchors, n_master,
+                   qlen: int, g: int):
+    """Raw candidate windows for a batch of envelopes.
+
+    Each envelope contributes g = gamma+1 candidate offsets
+    anchor .. anchor + g - 1 (masked by n_master and by window fit).
+    Returns windows (B*g, qlen) and a validity mask (B*g,).
+    """
+    n = data.shape[1]
+    offs = anchors[:, None] + jnp.arange(g, dtype=jnp.int32)[None, :]  # (B,g)
+    ok = (jnp.arange(g)[None, :] < n_master[:, None]) & (offs + qlen <= n)
+    offs_c = jnp.clip(offs, 0, n - qlen)
+
+    def slice_one(sid, off):
+        return jax.lax.dynamic_slice(data, (sid, off), (1, qlen))[0]
+
+    windows = jax.vmap(jax.vmap(slice_one, in_axes=(None, 0)),
+                       in_axes=(0, 0))(sids, offs_c)
+    B = offs.shape[0]
+    return (windows.reshape(B * g, qlen), ok.reshape(B * g),
+            offs.reshape(B * g))
+
+
+@partial(jax.jit, static_argnames=("znorm",))
+def ed_batch(windows: jnp.ndarray, q: jnp.ndarray, znorm: bool):
+    """Batched ED (squared) via the dot-product identity (MXU-friendly).
+
+    Z-normalized: q is already normalized, so Qhat.What = (W @ q) / sigma_w
+    and ED^2 = 2l - 2 (W @ q) / sigma_w.
+    """
+    l = windows.shape[-1]
+    dots = windows @ q  # (M,)
+    if znorm:
+        mu = jnp.mean(windows, axis=-1)
+        var = jnp.mean(windows * windows, axis=-1) - mu * mu
+        sd = jnp.maximum(jnp.sqrt(jnp.maximum(var, 0.0)), 1e-8)
+        d2 = 2.0 * l - 2.0 * dots / sd
+    else:
+        d2 = (jnp.sum(windows * windows, axis=-1) - 2.0 * dots
+              + jnp.sum(q * q))
+    return jnp.maximum(d2, 0.0)
+
+
+@partial(jax.jit, static_argnames=("znorm",))
+def lb_keogh_batch(windows, dtw_lo, dtw_hi, znorm: bool):
+    if znorm:
+        windows = znormalize(windows)
+    return dtw.lb_keogh(dtw_lo, dtw_hi, windows, squared=True), windows
+
+
+@partial(jax.jit, static_argnames=("r", "znorm"))
+def dtw_batch(windows, q, r: int, znorm: bool):
+    if znorm:
+        windows = znormalize(windows)
+    return dtw.dtw_band(q, windows, r, squared=True)
+
+
+# --------------------------------------------------------------------------
+# bucket-padded primitives (traced qlen; used inside shard_map programs)
+# --------------------------------------------------------------------------
+
+def gather_bucket_windows(data: jnp.ndarray, sids, anchors, n_master,
+                          qlen: jnp.ndarray, bucket: int, g: int):
+    """gather_windows with a *traced* true length over a static bucket.
+
+    Slices `bucket`-length windows (clamped to fit the series, then rolled
+    so position 0 is the true window start); entries past qlen are
+    garbage and must be masked by the caller.  Returns
+    (windows (B*g, bucket), ok (B*g,), offs (B*g,)).
+    """
+    n = data.shape[1]
+    offs = anchors[:, None] + jnp.arange(g, dtype=jnp.int32)[None, :]
+    ok = (jnp.arange(g)[None, :] < n_master[:, None]) & (offs + qlen <= n)
+    offs_c = jnp.clip(offs, 0, n - bucket)
+
+    def slice_one(sid, off, off_c):
+        w = jax.lax.dynamic_slice(data, (sid, off_c), (1, bucket))[0]
+        return jnp.roll(w, off_c - off)   # left-shift by the clamp delta
+
+    windows = jax.vmap(jax.vmap(slice_one, in_axes=(None, 0, 0)),
+                       in_axes=(0, 0, 0))(sids, jnp.clip(offs, 0, n),
+                                          offs_c)
+    B = offs.shape[0]
+    return (windows.reshape(B * g, bucket), ok.reshape(B * g),
+            offs.reshape(B * g))
+
+
+def masked_ed(windows: jnp.ndarray, qn: jnp.ndarray, mask: jnp.ndarray,
+              qlen: jnp.ndarray, znorm: bool):
+    """Squared ED between bucket-padded windows and a prepared query.
+
+    qn must already be masked-normalized with a zero tail (see
+    planner.masked_prepare); windows are normalized here the same way, so
+    the direct sum of squared differences over the bucket equals the ED
+    over the true qlen-prefix.
+    """
+    if znorm:
+        wn = masked_znormalize(windows, mask[None, :], qlen)
+    else:
+        wn = jnp.where(mask[None, :], windows, 0.0)
+    return jnp.sum((wn - qn[None, :]) ** 2, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# verification of a batch of envelopes (host-driven local backend)
+# --------------------------------------------------------------------------
+
+def verify_envelopes(index, pq, env_idx: np.ndarray, pool: TopK,
+                     stats: SearchStats, eps2: Optional[float] = None,
+                     collector: Optional[list] = None):
+    """Compute true distances for all candidates of the given envelopes.
+
+    Updates the pool (k-NN) or appends (sid, off, d2) rows below eps2 to
+    `collector` (range query).  Distances are squared throughout.
+    """
+    p = index.params
+    env = index.envelopes
+    g = p.gamma + 1
+    idx = jnp.asarray(env_idx, jnp.int32)
+    sids = jnp.take(env.series_id, idx)
+    anchors = jnp.take(env.anchor, idx)
+    n_master = jnp.take(env.n_master, idx)
+
+    windows, ok, offs = gather_windows(index.collection.data, sids, anchors,
+                                       n_master, pq.qlen, g)
+    all_sids = np.repeat(np.asarray(sids), g)
+    offs_np = np.asarray(offs)
+    ok_np = np.asarray(ok)
+    stats.envelopes_checked += len(env_idx)
+
+    if pq.measure == "ed":
+        d2 = np.asarray(ed_batch(windows, pq.q, p.znorm), np.float64)
+        d2[~ok_np] = np.inf
+        stats.true_dist_computations += int(ok_np.sum())
+    else:
+        lb2, wn = lb_keogh_batch(windows, pq.dtw_lo, pq.dtw_hi, p.znorm)
+        lb2 = np.asarray(lb2, np.float64)
+        lb2[~ok_np] = np.inf
+        stats.dtw_lb_keogh += int(ok_np.sum())
+        cut = pool.kth if eps2 is None else eps2
+        survivors = np.nonzero(lb2 < cut)[0]
+        d2 = np.full(lb2.shape, np.inf)
+        if len(survivors) > 0:
+            # pad survivors to a pow2 bucket to bound recompilation
+            m = 1 << max(int(math.ceil(math.log2(len(survivors)))), 0)
+            pad = np.concatenate([survivors,
+                                  np.full(m - len(survivors), survivors[0])])
+            dd = np.asarray(dtw_batch(wn[jnp.asarray(pad)], pq.q, pq.r,
+                                      False), np.float64)
+            d2[survivors] = dd[: len(survivors)]
+            stats.dtw_full += len(survivors)
+        stats.true_dist_computations += len(survivors)
+
+    if collector is not None:
+        hit = np.nonzero(d2 <= eps2)[0]
+        if len(hit):
+            collector.append(np.stack([all_sids[hit], offs_np[hit],
+                                       d2[hit]], axis=1))
+    else:
+        pool.push(d2, all_sids, offs_np)

@@ -123,21 +123,26 @@ def _block_reduce(paa_lo, paa_hi, valid, block: int) -> BlockLevel:
     )
 
 
+def default_breakpoints(p: EnvelopeParams, data: jnp.ndarray) -> jnp.ndarray:
+    """Default iSAX breakpoints: N(0,1) quantiles (Z-normalized mode) or
+    quantiles calibrated on a PAA sample of the collection (raw mode) —
+    shared by the local and distributed backends so their quantization
+    never diverges."""
+    if p.znorm:
+        return isax.gaussian_breakpoints(p.card)
+    sample = paa(data[: min(1024, data.shape[0])], p.seg_len)
+    return isax.calibrate_breakpoints(p.card, sample)
+
+
 def build_index(collection: Collection, p: EnvelopeParams,
                 breakpoints: Optional[jnp.ndarray] = None,
                 block_size: int = 64, num_levels: int = 2) -> UlisseIndex:
     """ULISSE index computation (paper Alg. 3) on the whole collection.
 
-    breakpoints: defaults to N(0,1) quantiles (Z-normalized mode) or to
-    collection-calibrated quantiles (raw mode) — see isax.py.
+    breakpoints: defaults to `default_breakpoints` — see isax.py.
     """
     if breakpoints is None:
-        if p.znorm:
-            breakpoints = isax.gaussian_breakpoints(p.card)
-        else:
-            sample = paa(collection.data[: min(1024, collection.num_series)],
-                         p.seg_len)
-            breakpoints = isax.calibrate_breakpoints(p.card, sample)
+        breakpoints = default_breakpoints(p, collection.data)
 
     env = build_envelope_set(collection, p, breakpoints)
     env = _sort_envelopes(env)

@@ -26,6 +26,23 @@ def znormalize(x: jnp.ndarray, axis: int = -1, eps: float = 1e-8) -> jnp.ndarray
     return (x - mu) / jnp.maximum(sd, eps)
 
 
+def masked_znormalize(x: jnp.ndarray, mask: jnp.ndarray, length,
+                      eps: float = 1e-8) -> jnp.ndarray:
+    """Z-normalize the masked prefix of x; tail is zeroed.
+
+    x: (..., l) values; mask: (..., l) bool with `length` leading True
+    along the last axis; length: scalar or (...,) true element count
+    (may be a traced value — used by bucket-padded query programs).
+    """
+    xm = jnp.where(mask, x, 0.0)
+    length = jnp.asarray(length, x.dtype)[..., None]
+    mu = jnp.sum(xm, axis=-1, keepdims=True) / length
+    var = jnp.sum(jnp.where(mask, (x - mu) ** 2, 0.0), axis=-1,
+                  keepdims=True) / length
+    sd = jnp.maximum(jnp.sqrt(jnp.maximum(var, 0.0)), eps)
+    return jnp.where(mask, (x - mu) / sd, 0.0)
+
+
 def prefix_sums(x: jnp.ndarray):
     """(csum, csum2) with a leading zero along the last axis.
 

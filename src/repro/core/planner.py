@@ -1,0 +1,151 @@
+"""Query planning for ULISSE search (the *planner* half of the engine).
+
+A plan is everything derivable from (query, index params) before any raw
+data is touched: the (possibly Z-normalized) query, its PAA interval
+(degenerate for ED, [PAA(L_dtw), PAA(U_dtw)] for DTW — paper Alg. 4
+lines 1-2), and lower-bound orderings over blocks / envelopes.  Both the
+host-driven local backend and the shard_map distributed backend consume
+these primitives; the *executor* half (executor.py) owns everything that
+reads raw series data.
+
+Two flavors coexist:
+
+  * static-shape planning (`prepare_query`, `env_lower_bounds`,
+    `block_lower_bounds`) — host-driven search, one trace per qlen;
+  * masked planning (`masked_prepare`) — traced qlen over a padded
+    length bucket, used by the batched distributed programs so one
+    compiled executable serves every query length in the bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bounds, dtw
+from repro.core.paa import masked_znormalize, paa, znormalize
+from repro.core.types import EnvelopeParams, EnvelopeSet
+
+
+# --------------------------------------------------------------------------
+# static-shape query preparation (host-driven local backend)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PreparedQuery:
+    """Everything derived from Q once per query (paper Alg. 4 lines 1-2)."""
+
+    q: jnp.ndarray            # (possibly Z-normalized) query values (l,)
+    qlen: int
+    nseg: int                 # floor(|Q| / s)
+    paa_lo: jnp.ndarray       # (w,) query interval in PAA space
+    paa_hi: jnp.ndarray
+    dtw_lo: Optional[jnp.ndarray] = None   # (l,) dtwENV for LB_Keogh
+    dtw_hi: Optional[jnp.ndarray] = None
+    measure: str = "ed"
+    r: int = 0
+
+
+def prepare_query(q, p: EnvelopeParams, measure: str = "ed",
+                  r: int = 0) -> PreparedQuery:
+    q = jnp.asarray(q, jnp.float32)
+    qlen = int(q.shape[-1])
+    nseg = p.query_segments(qlen)
+    qn = znormalize(q) if p.znorm else q
+    if measure == "ed":
+        qp = paa(qn, p.seg_len)
+        return PreparedQuery(q=qn, qlen=qlen, nseg=nseg, paa_lo=qp, paa_hi=qp,
+                             measure="ed")
+    elif measure == "dtw":
+        if r <= 0:
+            raise ValueError("DTW search needs a warping window r > 0")
+        dlo, dhi = dtw.dtw_envelope(qn, r)
+        return PreparedQuery(
+            q=qn, qlen=qlen, nseg=nseg,
+            paa_lo=paa(dlo, p.seg_len), paa_hi=paa(dhi, p.seg_len),
+            dtw_lo=dlo, dtw_hi=dhi, measure="dtw", r=r)
+    raise ValueError(f"unknown measure {measure!r}")
+
+
+# --------------------------------------------------------------------------
+# jitted lower-bound kernels
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("seg_len", "nseg", "use_paa"))
+def env_lower_bounds(paa_lo, paa_hi, env: EnvelopeSet, breakpoints,
+                     seg_len: int, nseg: int, use_paa: bool):
+    """Lower bounds to every envelope (Eq. 5 / Eq. 8 unified)."""
+    if use_paa:
+        e_lo, e_hi = env.paa_lo, env.paa_hi
+    else:
+        e_lo, e_hi = bounds.envelope_breakpoint_bounds(env, breakpoints)
+    d = bounds.interval_mindist(paa_lo, paa_hi, e_lo, e_hi, seg_len, nseg)
+    return jnp.where(env.valid, d, jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("seg_len", "nseg"))
+def block_lower_bounds(paa_lo, paa_hi, blk_lo, blk_hi, blk_valid,
+                       seg_len: int, nseg: int):
+    """Lower bounds to block-level envelope unions (always PAA-valued —
+    block unions are built from raw L/U PAA bounds, there is no quantized
+    alternative at this level)."""
+    d = bounds.interval_mindist(paa_lo, paa_hi, blk_lo, blk_hi, seg_len, nseg)
+    return jnp.where(blk_valid, d, jnp.inf)
+
+
+# --------------------------------------------------------------------------
+# host-side orderings
+# --------------------------------------------------------------------------
+
+def plan_leaf_order(index, pq: PreparedQuery) -> Tuple[np.ndarray, np.ndarray]:
+    """Best-first order over the finest block level: (order, block_lbs)."""
+    fine = index.levels[-1]
+    blk_lb = np.asarray(block_lower_bounds(
+        pq.paa_lo, pq.paa_hi, fine.paa_lo, fine.paa_hi, fine.valid,
+        index.params.seg_len, pq.nseg), np.float64)
+    return np.argsort(blk_lb), blk_lb
+
+
+def plan_scan_order(index, pq: PreparedQuery,
+                    use_paa_bounds: bool = False
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """LB-sorted envelope order for the exact scan: (order, sorted_lbs)."""
+    lbs = np.asarray(env_lower_bounds(
+        pq.paa_lo, pq.paa_hi, index.envelopes, index.breakpoints,
+        index.params.seg_len, pq.nseg, use_paa_bounds), np.float64)
+    order = np.argsort(lbs)
+    return order, lbs[order]
+
+
+# --------------------------------------------------------------------------
+# masked planning (traced qlen over a padded length bucket)
+# --------------------------------------------------------------------------
+
+def masked_prepare(q_pad: jnp.ndarray, qlen: jnp.ndarray,
+                   p: EnvelopeParams):
+    """Prepare a bucket-padded ED query with a *traced* true length.
+
+    q_pad: (Lb,) query padded to the bucket length with arbitrary tail.
+    qlen:  () int32 true length, lmin <= qlen <= Lb.
+
+    Returns (qn, qp, seg_mask) where qn is the masked-(Z-)normalized query
+    with a zeroed tail, qp its PAA padded to `p.w` segments, and seg_mask
+    the (p.w,) validity of each PAA segment (floor(qlen/s) leading True).
+    One trace of the enclosing program serves every qlen in the bucket.
+    """
+    lb = q_pad.shape[-1]
+    mask = jnp.arange(lb) < qlen
+    if p.znorm:
+        qn = masked_znormalize(q_pad, mask, qlen)
+    else:
+        qn = jnp.where(mask, q_pad, 0.0)
+    qp = paa(qn, p.seg_len)                       # (Lb // s,)
+    w = p.w
+    qp = jnp.pad(qp, (0, w - qp.shape[-1]))
+    nseg = qlen // p.seg_len
+    seg_mask = jnp.arange(w) < nseg
+    return qn, qp, seg_mask

@@ -1,427 +1,79 @@
-"""ULISSE similarity search (paper §6): approximate + exact k-NN, eps-range,
-under ED and DTW, for raw and Z-normalized collections.
+"""ULISSE similarity search — legacy free-function surface.
 
-Control flow is host-driven (the paper's Alg. 4/5 are inherently sequential
-over leaf visits / scan chunks); all heavy steps are jitted device kernels:
+.. deprecated::
+    `approx_knn` / `exact_knn` / `range_query` are thin wrappers over
+    `repro.core.engine.UlisseEngine`, kept so existing callers and tests
+    keep working.  New code should build one engine and describe queries
+    with `QuerySpec` (see DESIGN.md for the migration table):
 
-  1. lower bounds for every envelope in one streaming pass (kernels/mindist),
-  2. LB-sorted *chunked* verification with best-so-far tightening — the
-     TPU-native equivalent of the paper's sorted sequential scan, where
-     pruning skips the gather + verify of whole chunks,
-  3. verification on the MXU: ED via the dot-product identity (MASS's
-     insight re-targeted from FFT to the systolic array), DTW via the
-     LB_Keogh cascade then the banded DP.
+        engine = UlisseEngine.from_index(index)
+        engine.search(q, QuerySpec(k=5, measure="dtw", r=9))
 
-`SearchStats` mirrors the paper's metrics: pruning power (envelopes never
-verified) and abandoning power (true-distance computations skipped).
+The algorithms themselves (paper Alg. 4/5, the LB-sorted chunked scan,
+the MXU verification kernels) live in the planner/executor split:
+repro.core.planner (query prep + lower-bound ordering) and
+repro.core.executor (verification kernels, TopK pool, stats).
+
+`brute_force_knn` — the exhaustive oracle used by tests and benchmarks —
+is not deprecated and stays here.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from functools import partial
-from typing import Optional, Tuple
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bounds, dtw
-from repro.core.paa import paa, query_paa, znormalize
-from repro.core.types import Collection, EnvelopeParams, EnvelopeSet
+from repro.core import dtw
+from repro.core.engine import QuerySpec, UlisseEngine
+# re-exported for backwards compatibility (these used to be defined here)
+from repro.core.executor import (SearchResult, SearchStats,  # noqa: F401
+                                 TopK as _TopK, ed_batch as _ed_batch)
 from repro.core.index import UlisseIndex
+from repro.core.paa import znormalize
+from repro.core.planner import PreparedQuery, prepare_query  # noqa: F401
+from repro.core.types import Collection
 
 
-# --------------------------------------------------------------------------
-# query preparation
-# --------------------------------------------------------------------------
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"repro.core.search.{old} is deprecated; use UlisseEngine.search "
+        f"with {new}", DeprecationWarning, stacklevel=3)
 
-@dataclasses.dataclass
-class PreparedQuery:
-    """Everything derived from Q once per query (paper Alg. 4 lines 1-2)."""
-
-    q: jnp.ndarray            # (possibly Z-normalized) query values (l,)
-    qlen: int
-    nseg: int                 # floor(|Q| / s)
-    paa_lo: jnp.ndarray       # (w,) query interval in PAA space
-    paa_hi: jnp.ndarray
-    dtw_lo: Optional[jnp.ndarray] = None   # (l,) dtwENV for LB_Keogh
-    dtw_hi: Optional[jnp.ndarray] = None
-    measure: str = "ed"
-    r: int = 0
-
-
-def prepare_query(q, p: EnvelopeParams, measure: str = "ed",
-                  r: int = 0) -> PreparedQuery:
-    q = jnp.asarray(q, jnp.float32)
-    qlen = int(q.shape[-1])
-    nseg = p.query_segments(qlen)
-    qn = znormalize(q) if p.znorm else q
-    if measure == "ed":
-        qp = paa(qn, p.seg_len)
-        return PreparedQuery(q=qn, qlen=qlen, nseg=nseg, paa_lo=qp, paa_hi=qp,
-                             measure="ed")
-    elif measure == "dtw":
-        if r <= 0:
-            raise ValueError("DTW search needs a warping window r > 0")
-        dlo, dhi = dtw.dtw_envelope(qn, r)
-        return PreparedQuery(
-            q=qn, qlen=qlen, nseg=nseg,
-            paa_lo=paa(dlo, p.seg_len), paa_hi=paa(dhi, p.seg_len),
-            dtw_lo=dlo, dtw_hi=dhi, measure="dtw", r=r)
-    raise ValueError(f"unknown measure {measure!r}")
-
-
-# --------------------------------------------------------------------------
-# jitted device steps
-# --------------------------------------------------------------------------
-
-@partial(jax.jit, static_argnames=("seg_len", "nseg", "use_paa"))
-def _env_lower_bounds(paa_lo, paa_hi, env: EnvelopeSet, breakpoints,
-                      seg_len: int, nseg: int, use_paa: bool):
-    """Lower bounds to every envelope (Eq. 5 / Eq. 8 unified)."""
-    if use_paa:
-        e_lo, e_hi = env.paa_lo, env.paa_hi
-    else:
-        e_lo, e_hi = bounds.envelope_breakpoint_bounds(env, breakpoints)
-    d = bounds.interval_mindist(paa_lo, paa_hi, e_lo, e_hi, seg_len, nseg)
-    return jnp.where(env.valid, d, jnp.inf)
-
-
-@partial(jax.jit, static_argnames=("seg_len", "nseg"))
-def _block_lower_bounds(paa_lo, paa_hi, blk_lo, blk_hi, blk_valid,
-                        seg_len: int, nseg: int):
-    d = bounds.interval_mindist(paa_lo, paa_hi, blk_lo, blk_hi, seg_len, nseg)
-    return jnp.where(blk_valid, d, jnp.inf)
-
-
-@partial(jax.jit, static_argnames=("qlen", "g"))
-def _gather_windows(data: jnp.ndarray, sids, anchors, n_master,
-                    qlen: int, g: int):
-    """Raw candidate windows for a batch of envelopes.
-
-    Each envelope contributes g = gamma+1 candidate offsets
-    anchor .. anchor + g - 1 (masked by n_master and by window fit).
-    Returns windows (B*g, qlen) and a validity mask (B*g,).
-    """
-    n = data.shape[1]
-    offs = anchors[:, None] + jnp.arange(g, dtype=jnp.int32)[None, :]  # (B,g)
-    ok = (jnp.arange(g)[None, :] < n_master[:, None]) & (offs + qlen <= n)
-    offs_c = jnp.clip(offs, 0, n - qlen)
-
-    def slice_one(sid, off):
-        return jax.lax.dynamic_slice(data, (sid, off), (1, qlen))[0]
-
-    windows = jax.vmap(jax.vmap(slice_one, in_axes=(None, 0)),
-                       in_axes=(0, 0))(sids, offs_c)
-    B = offs.shape[0]
-    return (windows.reshape(B * g, qlen), ok.reshape(B * g),
-            offs.reshape(B * g))
-
-
-@partial(jax.jit, static_argnames=("znorm",))
-def _ed_batch(windows: jnp.ndarray, q: jnp.ndarray, znorm: bool):
-    """Batched ED (squared) via the dot-product identity (MXU-friendly).
-
-    Z-normalized: q is already normalized, so Qhat.What = (W @ q) / sigma_w
-    and ED^2 = 2l - 2 (W @ q) / sigma_w.
-    """
-    l = windows.shape[-1]
-    dots = windows @ q  # (M,)
-    if znorm:
-        mu = jnp.mean(windows, axis=-1)
-        var = jnp.mean(windows * windows, axis=-1) - mu * mu
-        sd = jnp.maximum(jnp.sqrt(jnp.maximum(var, 0.0)), 1e-8)
-        d2 = 2.0 * l - 2.0 * dots / sd
-    else:
-        d2 = (jnp.sum(windows * windows, axis=-1) - 2.0 * dots
-              + jnp.sum(q * q))
-    return jnp.maximum(d2, 0.0)
-
-
-@partial(jax.jit, static_argnames=("znorm",))
-def _lb_keogh_batch(windows, dtw_lo, dtw_hi, znorm: bool):
-    if znorm:
-        windows = znormalize(windows)
-    return dtw.lb_keogh(dtw_lo, dtw_hi, windows, squared=True), windows
-
-
-@partial(jax.jit, static_argnames=("r", "znorm"))
-def _dtw_batch(windows, q, r: int, znorm: bool):
-    if znorm:
-        windows = znormalize(windows)
-    return dtw.dtw_band(q, windows, r, squared=True)
-
-
-# --------------------------------------------------------------------------
-# results + stats
-# --------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class SearchStats:
-    envelopes_total: int = 0
-    envelopes_checked: int = 0       # envelopes whose raw data was read
-    lb_computations: int = 0
-    true_dist_computations: int = 0  # ED or DTW on raw windows
-    dtw_lb_keogh: int = 0            # second-tier LB computations
-    dtw_full: int = 0                # full banded DPs executed
-    leaves_visited: int = 0
-    chunks_visited: int = 0
-    exact_from_approx: bool = False
-
-    @property
-    def pruning_power(self) -> float:
-        if self.envelopes_total == 0:
-            return 0.0
-        return 1.0 - self.envelopes_checked / self.envelopes_total
-
-    @property
-    def abandoning_power(self) -> float:
-        """Fraction of candidate true-distance computations avoided."""
-        if self.dtw_lb_keogh > 0:
-            return 1.0 - self.dtw_full / max(self.dtw_lb_keogh, 1)
-        return 0.0
-
-
-@dataclasses.dataclass
-class SearchResult:
-    dists: np.ndarray      # (k,) sorted true distances
-    series: np.ndarray     # (k,) series ids
-    offsets: np.ndarray    # (k,) window offsets
-    stats: SearchStats
-
-
-class _TopK:
-    """Host-side k-best pool over (dist, sid, off) triples."""
-
-    def __init__(self, k: int):
-        self.k = k
-        self.d = np.full((0,), np.inf, np.float64)
-        self.s = np.zeros((0,), np.int64)
-        self.o = np.zeros((0,), np.int64)
-
-    def push(self, d, s, o):
-        d = np.concatenate([self.d, np.asarray(d, np.float64)])
-        s = np.concatenate([self.s, np.asarray(s, np.int64)])
-        o = np.concatenate([self.o, np.asarray(o, np.int64)])
-        # dedup (sid, off): the approx phase and the exact scan may verify
-        # the same envelope; a subsequence must appear in the pool once
-        key = s * (1 << 32) + o
-        order = np.lexsort((d, key))
-        key, d, s, o = key[order], d[order], s[order], o[order]
-        first = np.ones(len(key), bool)
-        first[1:] = key[1:] != key[:-1]
-        d, s, o = d[first], s[first], o[first]
-        order = np.argsort(d, kind="stable")[: self.k]
-        self.d, self.s, self.o = d[order], s[order], o[order]
-
-    @property
-    def kth(self) -> float:
-        return float(self.d[-1]) if len(self.d) == self.k else np.inf
-
-    def result(self, stats: SearchStats) -> SearchResult:
-        return SearchResult(dists=np.sqrt(np.maximum(self.d, 0.0)),
-                            series=self.s, offsets=self.o, stats=stats)
-
-
-# --------------------------------------------------------------------------
-# verification of a batch of envelopes
-# --------------------------------------------------------------------------
-
-def _verify_envelopes(index: UlisseIndex, pq: PreparedQuery,
-                      env_idx: np.ndarray, pool: _TopK, stats: SearchStats,
-                      eps2: Optional[float] = None,
-                      collector: Optional[list] = None):
-    """Compute true distances for all candidates of the given envelopes.
-
-    Updates the pool (k-NN) or appends (sid, off, d2) rows below eps2 to
-    `collector` (range query).  Distances are squared throughout.
-    """
-    p = index.params
-    env = index.envelopes
-    g = p.gamma + 1
-    idx = jnp.asarray(env_idx, jnp.int32)
-    sids = jnp.take(env.series_id, idx)
-    anchors = jnp.take(env.anchor, idx)
-    n_master = jnp.take(env.n_master, idx)
-
-    windows, ok, offs = _gather_windows(index.collection.data, sids, anchors,
-                                        n_master, pq.qlen, g)
-    all_sids = np.repeat(np.asarray(sids), g)
-    offs_np = np.asarray(offs)
-    ok_np = np.asarray(ok)
-    stats.envelopes_checked += len(env_idx)
-
-    if pq.measure == "ed":
-        d2 = np.asarray(_ed_batch(windows, pq.q, p.znorm), np.float64)
-        d2[~ok_np] = np.inf
-        stats.true_dist_computations += int(ok_np.sum())
-    else:
-        lb2, wn = _lb_keogh_batch(windows, pq.dtw_lo, pq.dtw_hi, p.znorm)
-        lb2 = np.asarray(lb2, np.float64)
-        lb2[~ok_np] = np.inf
-        stats.dtw_lb_keogh += int(ok_np.sum())
-        cut = pool.kth if eps2 is None else eps2
-        survivors = np.nonzero(lb2 < cut)[0]
-        d2 = np.full(lb2.shape, np.inf)
-        if len(survivors) > 0:
-            # pad survivors to a pow2 bucket to bound recompilation
-            m = 1 << max(int(math.ceil(math.log2(len(survivors)))), 0)
-            pad = np.concatenate([survivors,
-                                  np.full(m - len(survivors), survivors[0])])
-            dd = np.asarray(_dtw_batch(wn[jnp.asarray(pad)], pq.q, pq.r,
-                                       False), np.float64)
-            d2[survivors] = dd[: len(survivors)]
-            stats.dtw_full += len(survivors)
-        stats.true_dist_computations += len(survivors)
-
-    if collector is not None:
-        hit = np.nonzero(d2 <= eps2)[0]
-        if len(hit):
-            collector.append(np.stack([all_sids[hit], offs_np[hit],
-                                       d2[hit]], axis=1))
-    else:
-        pool.push(d2, all_sids, offs_np)
-
-
-# --------------------------------------------------------------------------
-# approximate search (paper Alg. 4)
-# --------------------------------------------------------------------------
 
 def approx_knn(index: UlisseIndex, q, k: int = 1, measure: str = "ed",
-               r: int = 0, max_leaves: int = 8,
-               use_paa_bounds: bool = False) -> SearchResult:
-    """Best-first descent over the block hierarchy (paper Alg. 4).
+               r: int = 0, max_leaves: int = 8) -> SearchResult:
+    """Deprecated wrapper: best-first approximate k-NN (paper Alg. 4)."""
+    _deprecated("approx_knn", "QuerySpec(mode='approx', ...)")
+    return UlisseEngine.from_index(index).search(
+        q, QuerySpec(mode="approx", k=k, measure=measure, r=r,
+                     max_leaves=max_leaves))
 
-    Visits fine blocks ("leaves") in lower-bound order; stops when a leaf's
-    lower bound exceeds the k-th bsf (=> answer already exact) or when a
-    leaf visit fails to improve the bsf (paper line 22), capped at
-    max_leaves.
-    """
-    p = index.params
-    pq = prepare_query(q, p, measure, r)
-    stats = SearchStats(envelopes_total=int(index.envelopes.size))
-    pool = _TopK(k)
-
-    fine = index.levels[-1]
-    blk_lb = np.asarray(_block_lower_bounds(
-        pq.paa_lo, pq.paa_hi, fine.paa_lo, fine.paa_hi, fine.valid,
-        p.seg_len, pq.nseg), np.float64)
-    stats.lb_computations += fine.size
-    order = np.argsort(blk_lb)
-    block_size = index.envelopes.size // fine.size
-
-    for leaf_rank in range(min(max_leaves, len(order))):
-        b = int(order[leaf_rank])
-        if not np.isfinite(blk_lb[b]):
-            break
-        if blk_lb[b] ** 2 >= pool.kth:
-            stats.exact_from_approx = True
-            break
-        env_idx = np.arange(b * block_size, (b + 1) * block_size)
-        valid = np.asarray(index.envelopes.valid)[env_idx]
-        _verify_envelopes(index, pq, env_idx[valid], pool, stats)
-        stats.leaves_visited += 1
-        # NOTE deviation from Alg. 4 line 22: the paper stops after the
-        # first non-improving leaf to save random disk I/O.  Batched
-        # device leaves are cheap and the quantized block bounds tie at
-        # zero often, so we keep visiting up to max_leaves — strictly
-        # better answers for the same asymptotics (see DESIGN.md §3).
-    return pool.result(stats)
-
-
-# --------------------------------------------------------------------------
-# exact search (paper Alg. 5)
-# --------------------------------------------------------------------------
 
 def exact_knn(index: UlisseIndex, q, k: int = 1, measure: str = "ed",
               r: int = 0, chunk_size: int = 512,
               use_paa_bounds: bool = False,
               approx_first: bool = True) -> SearchResult:
-    """Exact k-NN: approximate pass for a bsf, then the LB-sorted chunked
-    scan over the flat envelope list with bsf pruning (paper Alg. 5)."""
-    p = index.params
-    pq = prepare_query(q, p, measure, r)
-    stats = SearchStats(envelopes_total=int(index.envelopes.size))
-    pool = _TopK(k)
+    """Deprecated wrapper: exact k-NN (paper Alg. 5)."""
+    _deprecated("exact_knn", "QuerySpec(mode='exact', ...)")
+    return UlisseEngine.from_index(index).search(
+        q, QuerySpec(mode="exact", k=k, measure=measure, r=r,
+                     chunk_size=chunk_size, use_paa_bounds=use_paa_bounds,
+                     approx_first=approx_first))
 
-    if approx_first:
-        a = approx_knn(index, q, k, measure, r,
-                       use_paa_bounds=use_paa_bounds)
-        stats.leaves_visited = a.stats.leaves_visited
-        stats.envelopes_checked = a.stats.envelopes_checked
-        stats.true_dist_computations = a.stats.true_dist_computations
-        stats.dtw_lb_keogh = a.stats.dtw_lb_keogh
-        stats.dtw_full = a.stats.dtw_full
-        stats.lb_computations = a.stats.lb_computations
-        pool.push(a.dists ** 2, a.series, a.offsets)
-        if a.stats.exact_from_approx:
-            stats.exact_from_approx = True
-            return pool.result(stats)
-
-    env = index.envelopes
-    lbs = np.asarray(_env_lower_bounds(
-        pq.paa_lo, pq.paa_hi, env, index.breakpoints, p.seg_len, pq.nseg,
-        use_paa_bounds), np.float64)
-    stats.lb_computations += env.size
-    order = np.argsort(lbs)
-    lbs_sorted = lbs[order]
-
-    pos = 0
-    n = env.size
-    while pos < n:
-        if not np.isfinite(lbs_sorted[pos]):
-            break
-        if lbs_sorted[pos] ** 2 >= pool.kth:
-            break  # every remaining envelope is pruned
-        end = min(pos + chunk_size, n)
-        sel = order[pos:end]
-        keep = (lbs_sorted[pos:end] ** 2) < pool.kth
-        keep &= np.isfinite(lbs_sorted[pos:end])
-        if keep.any():
-            _verify_envelopes(index, pq, sel[keep], pool, stats)
-        stats.chunks_visited += 1
-        pos = end
-    return pool.result(stats)
-
-
-# --------------------------------------------------------------------------
-# eps-range search (paper §6.5 / §7.6)
-# --------------------------------------------------------------------------
 
 def range_query(index: UlisseIndex, q, eps: float, measure: str = "ed",
                 r: int = 0, chunk_size: int = 2048) -> SearchResult:
-    """All subsequences within eps of Q (Alg. 5 with bsf := eps)."""
-    p = index.params
-    pq = prepare_query(q, p, measure, r)
-    stats = SearchStats(envelopes_total=int(index.envelopes.size))
-    env = index.envelopes
-    eps2 = float(eps) ** 2
-
-    lbs = np.asarray(_env_lower_bounds(
-        pq.paa_lo, pq.paa_hi, env, index.breakpoints, p.seg_len, pq.nseg,
-        False), np.float64)
-    stats.lb_computations += env.size
-    cand = np.nonzero((lbs ** 2) <= eps2)[0]
-    rows: list = []
-    pool = _TopK(1)  # unused sink for API symmetry
-    for start in range(0, len(cand), chunk_size):
-        _verify_envelopes(index, pq, cand[start:start + chunk_size], pool,
-                          stats, eps2=eps2, collector=rows)
-        stats.chunks_visited += 1
-    if rows:
-        out = np.concatenate(rows, axis=0)
-        order = np.argsort(out[:, 2], kind="stable")
-        out = out[order]
-        return SearchResult(dists=np.sqrt(np.maximum(out[:, 2], 0.0)),
-                            series=out[:, 0].astype(np.int64),
-                            offsets=out[:, 1].astype(np.int64), stats=stats)
-    return SearchResult(dists=np.zeros((0,)), series=np.zeros((0,), np.int64),
-                        offsets=np.zeros((0,), np.int64), stats=stats)
+    """Deprecated wrapper: eps-range query (Alg. 5 with bsf := eps)."""
+    _deprecated("range_query", "QuerySpec(eps=...)")
+    return UlisseEngine.from_index(index).search(
+        q, QuerySpec(eps=float(eps), measure=measure, r=r,
+                     chunk_size=chunk_size))
 
 
 # --------------------------------------------------------------------------
-# brute-force oracles (ground truth for tests/benchmarks)
+# brute-force oracle (ground truth for tests/benchmarks)
 # --------------------------------------------------------------------------
 
 def brute_force_knn(collection: Collection, q, k: int, znorm: bool,

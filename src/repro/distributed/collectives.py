@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 
 # --------------------------------------------------------------------------
 # distributed top-k merge (the ULISSE k-NN reduction)
@@ -84,8 +86,8 @@ def make_compressed_grad_transform(mesh, axes=("data",)):
             return jax.tree_util.tree_unflatten(tree, out)
 
         specs = jax.tree_util.tree_map(lambda _: P(), grads)
-        return jax.shard_map(local, mesh=mesh, in_specs=(specs,),
-                             out_specs=specs)(grads)
+        return shard_map(local, mesh=mesh, in_specs=(specs,),
+                         out_specs=specs)(grads)
 
     return transform
 

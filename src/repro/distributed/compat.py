@@ -1,0 +1,20 @@
+"""JAX API compatibility shims.
+
+`shard_map` moved from `jax.experimental.shard_map` (check_rep=) to
+`jax.shard_map` (check_vma=) across jax releases; every shard_map in this
+repo goes through this wrapper so both spellings work.  `check=False`
+maps to check_vma/check_rep=False — needed by programs the checker can't
+type (e.g. axis_index-dependent outputs declared replicated).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)

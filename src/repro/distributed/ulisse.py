@@ -10,24 +10,25 @@ two-phase protocol: phase 1 a cheap local approximate pass + global bsf
 min-reduce; phase 2 the LB-sorted verification where every shard prunes
 with the *global* bsf.
 
-Everything below is shard_map over jax.lax collectives — one program,
-any mesh size; the same code runs the 4-device test and the 512-chip
-dry-run.
+The per-shard algorithm is assembled from the same planner/executor
+halves as the local backend (core/planner.py masked_prepare for query
+prep, core/executor.py gather_bucket_windows + masked_ed for
+verification) — the distributed program is the local search's inner loop
+vmapped over a (B, bucket) query batch inside shard_map, so one compiled
+executable serves every query length in a bucket and every concurrent
+user in a batch.  One program, any mesh size; the same code runs the
+4-device test and the 512-chip dry-run.
 """
 from __future__ import annotations
-
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import bounds
+from repro.core import bounds, executor, planner
 from repro.core.envelope import build_envelope_set
-from repro.core.paa import paa, znormalize
 from repro.core.types import Collection, EnvelopeParams
-from repro.distributed.collectives import topk_merge
+from repro.distributed.compat import shard_map
 
 
 def shard_collection(mesh, data: jnp.ndarray, axes=("data",)):
@@ -41,91 +42,112 @@ def decode_id(code):
     return code[..., 0], code[..., 1]
 
 
-def make_distributed_query(mesh, p: EnvelopeParams, breakpoints,
-                           qlen: int, k: int, axes=("data",),
-                           verify_top: int = 128):
-    """Build a jitted exact k-NN over a sharded collection.
+def make_batched_distributed_query(mesh, p: EnvelopeParams, breakpoints,
+                                   bucket: int, k: int,
+                                   axes=("data",), verify_top: int = 128):
+    """Build a jitted exact k-NN over a sharded collection, batched over
+    queries and generic over query length within a padded bucket.
 
-    Returns query_fn(data_sharded, q) -> (dists (k,), codes (k, 2)).
-    codes are (global series_id, offset) int32 pairs.
+    Returns query_fn(data_sharded, qs, qlens) -> (dists, codes, exact):
+      qs    (batch, bucket) float32 — queries right-padded to the bucket,
+      qlens (batch,)        int32   — true lengths (lmin <= qlen <= bucket),
+      dists (batch, k), codes (batch, k, 2) int32 (global series_id,
+      offset) pairs, exact (batch,) bool exactness certificates.
 
-    The per-shard algorithm is the TPU-native exact search (bounds for
-    every local envelope -> top-`verify_top` candidates verified on the
-    MXU) followed by the global top-k merge; `verify_top` bounds the
-    verification batch, with correctness kept by comparing the k-th
-    verified distance against the tightest unverified lower bound (the
-    returned `exact` flag — callers can escalate verify_top; in all
-    benchmark workloads top-128 suffices).
+    The per-shard algorithm is the TPU-native exact search (masked lower
+    bounds for every local envelope -> top-`verify_top` candidates
+    verified on the MXU) followed by a global per-query top-k merge;
+    `verify_top` bounds the verification batch, with correctness kept by
+    comparing the k-th verified distance against the tightest unverified
+    lower bound (the returned `exact` flags — UlisseEngine escalates
+    verify_top internally when a certificate fails).
     """
-    axis = axes[0] if len(axes) == 1 else axes
-    nseg = qlen // p.seg_len
+    axis = axes if len(axes) > 1 else axes[0]
     g = p.gamma + 1
 
-    def local_search(data_shard: jnp.ndarray, q: jnp.ndarray):
+    def local_search(data_shard: jnp.ndarray, qs: jnp.ndarray,
+                     qlens: jnp.ndarray):
         coll = Collection.from_array(data_shard)
         env = build_envelope_set(coll, p, breakpoints)
-        qn = znormalize(q) if p.znorm else q
-        qp = paa(qn, p.seg_len)
-        lbs = bounds.mindist_ulisse(qp, env, breakpoints, p.seg_len, nseg)
-
-        neg, cand = jax.lax.top_k(-lbs, min(verify_top, lbs.shape[0]))
-        cand_lb = -neg
-        sids = jnp.take(env.series_id, cand)
-        anchors = jnp.take(env.anchor, cand)
-        n_master = jnp.take(env.n_master, cand)
+        e_lo, e_hi = bounds.envelope_breakpoint_bounds(env, breakpoints)
         n = data_shard.shape[1]
-        offs = anchors[:, None] + jnp.arange(g)[None, :]
-        ok = (jnp.arange(g)[None, :] < n_master[:, None]) \
-            & (offs + qlen <= n)
-        offs_c = jnp.clip(offs, 0, n - qlen)
+        vt = min(verify_top, env.size)
+        kk = min(k, vt * g)
 
-        def window(sid, off):
-            return jax.lax.dynamic_slice(data_shard, (sid, off),
-                                         (1, qlen))[0]
+        shard_idx = jax.lax.axis_index(axes[0])
+        for a in axes[1:]:
+            shard_idx = shard_idx * mesh.shape[a] + jax.lax.axis_index(a)
 
-        wins = jax.vmap(jax.vmap(window, in_axes=(None, 0)),
-                        in_axes=(0, 0))(sids, offs_c)
-        wins = wins.reshape(-1, qlen)
-        if p.znorm:
-            wn = znormalize(wins)
-            d2 = jnp.sum((wn - qn[None, :]) ** 2, axis=-1)
-        else:
-            d2 = jnp.sum((wins - qn[None, :]) ** 2, axis=-1)
-        d2 = jnp.where(ok.reshape(-1), d2, jnp.inf)
-        d = jnp.sqrt(jnp.maximum(d2, 0.0))
+        def one_query(q_pad, qlen):
+            qn, qp, seg_mask = planner.masked_prepare(q_pad, qlen, p)
+            lbs = bounds.masked_interval_mindist(qp, qp, e_lo, e_hi,
+                                                 p.seg_len, seg_mask)
+            lbs = jnp.where(env.valid, lbs, jnp.inf)
 
-        # global series ids: offset by shard start
-        shard_idx = jax.lax.axis_index(axis if isinstance(axis, str)
-                                       else axes[0])
-        if not isinstance(axis, str):
-            # flatten multi-axis index
-            sizes = [mesh.shape[a] for a in axes]
-            shard_idx = jax.lax.axis_index(axes[0])
-            for a in axes[1:]:
-                shard_idx = shard_idx * mesh.shape[a] + jax.lax.axis_index(a)
-        gsid = (sids + shard_idx * data_shard.shape[0]).astype(jnp.int32)
-        codes = jnp.stack([jnp.repeat(gsid, g),
-                           offs.reshape(-1).astype(jnp.int32)], axis=-1)
+            neg, cand = jax.lax.top_k(-lbs, vt)
+            cand_lb = -neg
+            sids = jnp.take(env.series_id, cand)
+            anchors = jnp.take(env.anchor, cand)
+            n_master = jnp.take(env.n_master, cand)
+            windows, ok, offs = executor.gather_bucket_windows(
+                data_shard, sids, anchors, n_master, qlen, bucket, g)
+            mask = jnp.arange(bucket) < qlen
+            d2 = executor.masked_ed(windows, qn, mask, qlen, p.znorm)
+            d2 = jnp.where(ok, d2, jnp.inf)
+            d = jnp.sqrt(jnp.maximum(d2, 0.0))
 
-        kk = min(k, d.shape[0])
-        negd, sel = jax.lax.top_k(-d, kk)
-        local_d, local_codes = -negd, jnp.take(codes, sel, axis=0)
-        # exactness certificate: kth verified <= smallest unverified LB
-        unverified_lb = jnp.where(
-            cand_lb.shape[0] > 0, jnp.max(cand_lb), jnp.inf)
-        merged_d, merged_c = topk_merge(
-            local_d, local_codes, k,
-            axes if len(axes) > 1 else axes[0])
-        exact = merged_d[-1] <= jax.lax.pmin(
-            unverified_lb, axes if len(axes) > 1 else axes[0])
+            gsid = (sids + shard_idx * data_shard.shape[0]).astype(jnp.int32)
+            codes = jnp.stack([jnp.repeat(gsid, g),
+                               offs.astype(jnp.int32)], axis=-1)
+            negd, sel = jax.lax.top_k(-d, kk)
+            # exactness certificate: kth verified <= smallest unverified LB
+            return -negd, jnp.take(codes, sel, axis=0), jnp.max(cand_lb)
+
+        local_d, local_codes, unverified_lb = jax.vmap(one_query)(qs, qlens)
+        all_d = jax.lax.all_gather(local_d, axis, axis=1, tiled=True)
+        all_c = jax.lax.all_gather(local_codes, axis, axis=1, tiled=True)
+        # fewer gathered candidates than k (k > verify_top * g * shards):
+        # pad with +inf rows, which fail the certificate and escalate
+        km = min(k, all_d.shape[1])
+        negm, idx = jax.lax.top_k(-all_d, km)                   # (B, km)
+        merged_d = -negm
+        merged_c = jnp.take_along_axis(all_c, idx[..., None], axis=1)
+        if km < k:
+            b = merged_d.shape[0]
+            merged_d = jnp.concatenate(
+                [merged_d, jnp.full((b, k - km), jnp.inf)], axis=1)
+            merged_c = jnp.concatenate(
+                [merged_c, jnp.zeros((b, k - km, 2), jnp.int32)], axis=1)
+        exact = merged_d[:, -1] <= jax.lax.pmin(unverified_lb, axis)
         return merged_d, merged_c, exact
 
     spec_data = P(axes if len(axes) > 1 else axes[0])
-    fn = jax.shard_map(local_search, mesh=mesh,
-                       in_specs=(spec_data, P()),
-                       out_specs=(P(), P(), P()),
-                       check_vma=False)
+    fn = shard_map(local_search, mesh=mesh,
+                   in_specs=(spec_data, P(), P()),
+                   out_specs=(P(), P(), P()), check=False)
     return jax.jit(fn)
+
+
+def make_distributed_query(mesh, p: EnvelopeParams, breakpoints,
+                           qlen: int, k: int, axes=("data",),
+                           verify_top: int = 128):
+    """Single-query exact k-NN (legacy surface, kept for callers that
+    manage their own per-length programs — prefer core.engine.UlisseEngine).
+
+    Returns query_fn(data_sharded, q) -> (dists (k,), codes (k, 2), exact).
+    Implemented as the B=1, bucket=qlen case of the batched program.
+    """
+    batched = make_batched_distributed_query(
+        mesh, p, breakpoints, bucket=qlen, k=k, axes=axes,
+        verify_top=verify_top)
+
+    def query_fn(data_sharded, q):
+        qs = jnp.asarray(q, jnp.float32)[None, :]
+        qlens = jnp.full((1,), qlen, jnp.int32)
+        d, codes, exact = batched(data_sharded, qs, qlens)
+        return d[0], codes[0], exact[0]
+
+    return query_fn
 
 
 def distributed_index_stats(mesh, p: EnvelopeParams, num_series: int,

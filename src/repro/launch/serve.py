@@ -2,8 +2,10 @@
 
     python -m repro.launch.serve --devices 8 --series 2048 --queries 20
 
-Builds a sharded collection + compiled per-length query engines and
-answers a mixed-length stream, reporting latency and exactness.
+Builds a sharded collection behind one `UlisseEngine` and answers a
+mixed-length query stream, reporting latency and escalations.  The
+engine buckets query lengths (one compiled program per power-of-two
+bucket) and batches up to --batch queries per device program.
 """
 import argparse
 import os
@@ -18,6 +20,8 @@ def main(argv=None):
     ap.add_argument("--series-len", type=int, default=256)
     ap.add_argument("--queries", type=int, default=12)
     ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="max queries fused into one device program")
     args = ap.parse_args(argv)
 
     if args.devices:
@@ -25,12 +29,8 @@ def main(argv=None):
             f"--xla_force_host_platform_device_count={args.devices}")
     import numpy as np
     import jax
-    import jax.numpy as jnp
 
-    from repro.core import EnvelopeParams, isax
-    from repro.distributed.ulisse import (decode_id,
-                                          make_distributed_query,
-                                          shard_collection)
+    from repro.core import EnvelopeParams, QuerySpec, UlisseEngine
     from repro.train.data import series_batches
 
     n_dev = jax.device_count()
@@ -40,11 +40,10 @@ def main(argv=None):
     p = EnvelopeParams(lmin=args.series_len // 2,
                        lmax=args.series_len, gamma=16, seg_len=16,
                        znorm=True)
-    bp = isax.gaussian_breakpoints(p.card)
-    sharded = shard_collection(mesh, jnp.asarray(data))
+    engine = UlisseEngine.distributed(mesh, p, data,
+                                      max_batch=args.batch)
+    spec = QuerySpec(k=args.k, verify_top=128)
     lengths = sorted({p.lmin, (p.lmin + p.lmax) // 2 // 16 * 16, p.lmax})
-    engines = {l: make_distributed_query(mesh, p, bp, qlen=l, k=args.k)
-               for l in lengths}
     print(f"serving {ns} series x {args.series_len} over {n_dev} "
           f"devices; query lengths {lengths}")
 
@@ -54,15 +53,15 @@ def main(argv=None):
         qlen = lengths[i % len(lengths)]
         s = rng.integers(0, ns)
         o = rng.integers(0, args.series_len - qlen + 1)
-        q = jnp.asarray(data[s, o:o + qlen]
-                        + rng.normal(size=qlen).astype(np.float32) * .02)
+        q = (data[s, o:o + qlen]
+             + rng.normal(size=qlen).astype(np.float32) * .02)
         t0 = time.perf_counter()
-        d, codes, exact = engines[qlen](sharded, q)
-        d.block_until_ready()
+        res = engine.search(q, spec)
         lats.append(time.perf_counter() - t0)
-        sid, off = decode_id(np.asarray(codes))
-        print(f"  |Q|={qlen} nn=({sid[0]},{off[0]}) d={float(d[0]):.4f} "
-              f"exact={bool(exact)} {lats[-1] * 1e3:.1f}ms")
+        print(f"  |Q|={qlen} nn=({res.series[0]},{res.offsets[0]}) "
+              f"d={res.dists[0]:.4f} "
+              f"escalations={res.stats.escalations} "
+              f"{lats[-1] * 1e3:.1f}ms")
     print(f"median latency {np.median(lats[1:]) * 1e3:.1f}ms")
     return 0
 

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 from repro.core.paa import paa, znormalize
 
 # workload constants
@@ -91,10 +93,10 @@ def make_query_step(mesh, *, bounds_dtype=jnp.float32, verify_top=128,
 
     n_env = SERIES_PER_DEV * _env_per_series()
     espec = P(dp)
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(espec, espec, espec, espec, espec, P()),
-        out_specs=P(), check_vma=False)
+        out_specs=P(), check=False)
 
     def step(env_lo, env_hi, anchors, sids, data, qs):
         return fn(env_lo, env_hi, anchors, sids, data, qs)

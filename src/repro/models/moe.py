@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 from repro.models.layers import dense_init
 
 
@@ -142,15 +144,14 @@ def moe_ffn_spmd(p: dict, x: jnp.ndarray, *, num_experts: int, topk: int,
                         "up": P(None, None, "model"),
                         "gate": P(None, None, "model"),
                         "down": P(None, "model", None)}
-        fn = jax.shard_map(local_ff_tp, mesh=mesh,
-                           in_specs=(weight_specs, x_spec),
-                           out_specs=(x_spec, P()),
-                           check_vma=False)
+        fn = shard_map(local_ff_tp, mesh=mesh,
+                       in_specs=(weight_specs, x_spec),
+                       out_specs=(x_spec, P()), check=False)
         return fn(p, x)
 
     weight_specs = jax.tree_util.tree_map(lambda _: P(), p)
-    fn = jax.shard_map(local_gather, mesh=mesh,
-                       in_specs=(weight_specs, x_spec),
-                       out_specs=(x_spec, P()),
-                       check_vma=False)   # aux varies on a subset of axes
+    fn = shard_map(local_gather, mesh=mesh,
+                   in_specs=(weight_specs, x_spec),
+                   out_specs=(x_spec, P()),
+                   check=False)   # aux varies on a subset of axes
     return fn(p, x)

@@ -12,7 +12,11 @@
 """
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the [test] extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import bounds, dtw, isax
 from repro.core.envelope import build_envelope_set

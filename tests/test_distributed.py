@@ -54,20 +54,54 @@ def test_distributed_query_exactness():
     """)
 
 
+def test_distributed_engine_batched_mixed_lengths():
+    """UlisseEngine distributed backend: one batched bucket-padded program
+    per (length-bucket, spec); every exact answer matches brute force."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import (Collection, EnvelopeParams, QuerySpec,
+                                UlisseEngine)
+        from repro.core.search import brute_force_knn
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(7)
+        data = np.cumsum(rng.normal(size=(64, 128)), -1).astype(np.float32)
+        p = EnvelopeParams(lmin=48, lmax=96, gamma=8, seg_len=16,
+                           card=64, znorm=True)
+        eng = UlisseEngine.distributed(mesh, p, data, max_batch=4)
+        qs = []
+        for qi, ql in ((3, 64), (20, 96), (41, 64), (11, 80), (5, 96)):
+            o = rng.integers(0, 128 - ql + 1)
+            qs.append(data[qi, o:o + ql]
+                      + rng.normal(size=ql).astype(np.float32) * .02)
+        out = eng.search(qs, QuerySpec(k=5, verify_top=256))
+        coll = Collection.from_array(data)
+        for q, r in zip(qs, out):
+            ref = brute_force_knn(coll, q, k=5, znorm=True)
+            # 5e-3: dot-identity ED (brute oracle) cancels near d=0
+            assert np.allclose(r.dists, ref.dists, atol=5e-3), \\
+                (r.dists, ref.dists)
+        # lengths {64, 80, 96} bucket to {64, 96}: 2 compiled programs
+        assert sorted(b for (b, _, _) in eng._programs) == [64, 96], \\
+            sorted(eng._programs)
+        print("ok")
+    """)
+
+
 def test_topk_merge_and_bsf():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.distributed.collectives import topk_merge, bsf_allreduce
+        from repro.distributed.compat import shard_map
         mesh = jax.make_mesh((8,), ("x",))
         def local(d, i):
             md, mi = topk_merge(d, i, 3, "x")
             return md, mi, bsf_allreduce(jnp.min(d), "x")
         d = jnp.arange(24, dtype=jnp.float32)[::-1].reshape(8, 3) / 10
         i = jnp.arange(24, dtype=jnp.int32).reshape(8, 3)
-        f = jax.shard_map(local, mesh=mesh,
-                          in_specs=(P("x"), P("x")),
-                          out_specs=(P(), P(), P()), check_vma=False)
+        f = shard_map(local, mesh=mesh,
+                      in_specs=(P("x"), P("x")),
+                      out_specs=(P(), P(), P()), check=False)
         md, mi, bsf = f(d.reshape(24), i.reshape(24))
         np.testing.assert_allclose(np.asarray(md), [0.0, 0.1, 0.2])
         assert float(bsf) == 0.0
@@ -80,14 +114,15 @@ def test_ef_int8_allreduce_error_feedback():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.distributed.collectives import ef_int8_allreduce
+        from repro.distributed.compat import shard_map
         mesh = jax.make_mesh((8,), ("x",))
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
         def local(xs):
             red, err = ef_int8_allreduce(xs[0], jnp.zeros_like(xs[0]), "x")
             return red[None], err[None]
-        f = jax.shard_map(local, mesh=mesh, in_specs=(P("x"),),
-                          out_specs=(P("x"), P("x")), check_vma=False)
+        f = shard_map(local, mesh=mesh, in_specs=(P("x"),),
+                      out_specs=(P("x"), P("x")), check=False)
         red, err = f(x)
         exact = np.mean(np.asarray(x), axis=0)
         got = np.asarray(red)[0]
@@ -103,14 +138,15 @@ def test_ring_allgather_matmul():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.distributed.collectives import ring_allgather_matmul
+        from repro.distributed.compat import shard_map
         mesh = jax.make_mesh((8,), ("x",))
         rng = np.random.default_rng(1)
         x = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
         w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
         def local(xs, w):
             return ring_allgather_matmul(xs, w, "x", 8)[None]
-        f = jax.shard_map(local, mesh=mesh, in_specs=(P("x"), P()),
-                          out_specs=P("x"), check_vma=False)
+        f = shard_map(local, mesh=mesh, in_specs=(P("x"), P()),
+                      out_specs=P("x"), check=False)
         y = np.asarray(f(x, w))[0]
         np.testing.assert_allclose(y, np.asarray(x) @ np.asarray(w),
                                    rtol=1e-4, atol=1e-4)

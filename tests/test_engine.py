@@ -1,0 +1,134 @@
+"""UlisseEngine: the unified QuerySpec surface over every query shape,
+plus the internal exactness-certificate escalation of the distributed
+backend (runs on a 1-device mesh in-process — the 8-device variant lives
+in test_distributed.py)."""
+import numpy as np
+import pytest
+import jax
+
+from repro.core import (Collection, EnvelopeParams, QuerySpec,
+                        UlisseEngine)
+from repro.core.search import brute_force_knn
+
+PARAMS = dict(lmin=64, lmax=128, seg_len=16, card=64)
+
+
+@pytest.fixture(scope="module")
+def engine(walk_collection):
+    coll = Collection.from_array(walk_collection)
+    p = EnvelopeParams(gamma=8, znorm=True, **PARAMS)
+    return UlisseEngine.from_collection(coll, p, block_size=16,
+                                        num_levels=2)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        QuerySpec(measure="lcss")
+    with pytest.raises(ValueError):
+        QuerySpec(measure="dtw")        # needs r > 0
+    with pytest.raises(ValueError):
+        QuerySpec(mode="fuzzy")
+    with pytest.raises(ValueError):
+        QuerySpec(k=0)
+    with pytest.raises(ValueError):
+        QuerySpec(chunk_size=0)         # would spin the exact scan
+    with pytest.raises(ValueError):
+        QuerySpec(verify_top=0)
+    assert QuerySpec(eps=1.0).is_range and not QuerySpec().is_range
+
+
+def test_distributed_k_exceeds_verified_candidates(walk_collection):
+    """k > verify_top * (gamma+1) * shards must escalate (padded +inf
+    merge rows fail the certificate), not crash at trace time."""
+    mesh = jax.make_mesh((1,), ("data",))
+    p = EnvelopeParams(gamma=0, znorm=True, **PARAMS)
+    engine = UlisseEngine.distributed(mesh, p, walk_collection)
+    coll = Collection.from_array(walk_collection)
+    q = walk_collection[2, 5:69].astype(np.float32)
+    res = engine.search(q, QuerySpec(k=40, verify_top=2))
+    ref = brute_force_knn(coll, q, k=40, znorm=True)
+    assert res.stats.escalations >= 1
+    np.testing.assert_allclose(res.dists, ref.dists, atol=5e-3)
+
+
+@pytest.mark.parametrize("spec", [
+    QuerySpec(k=5),
+    QuerySpec(k=3, measure="dtw", r=9),
+    QuerySpec(k=2, use_paa_bounds=True),
+])
+def test_engine_exact_matches_brute_force(engine, walk_collection, rng,
+                                          spec):
+    coll = Collection.from_array(walk_collection)
+    q = walk_collection[3, 20:116] \
+        + rng.normal(size=96).astype(np.float32) * 0.05
+    got = engine.search(q, spec)
+    ref = brute_force_knn(coll, q, k=spec.k, znorm=True,
+                          measure=spec.measure, r=spec.r)
+    np.testing.assert_allclose(got.dists, ref.dists, rtol=1e-3, atol=1e-3)
+
+
+def test_engine_range_and_approx(engine, walk_collection):
+    coll = Collection.from_array(walk_collection)
+    q = walk_collection[11, 10:106].copy()
+    ref = brute_force_knn(coll, q, k=10, znorm=True)
+    eps = float(ref.dists[-1]) * 1.0001
+    got = engine.search(q, QuerySpec(eps=eps))
+    assert len(got.dists) == len(ref.dists)
+    a = engine.search(q, QuerySpec(k=1, mode="approx"))
+    assert a.stats.leaves_visited <= 8
+    assert a.dists[0] >= ref.dists[0] - 1e-3   # approx never beats exact
+
+
+def test_engine_batch_input_forms(engine, walk_collection):
+    q1 = walk_collection[0, 0:96]
+    q2 = walk_collection[1, 5:69]              # different length
+    out = engine.search([q1, q2], QuerySpec(k=2))
+    assert isinstance(out, list) and len(out) == 2
+    stacked = np.stack([q1, walk_collection[2, 0:96]])
+    out2 = engine.search(stacked, QuerySpec(k=2))
+    assert len(out2) == 2
+    single = engine.search(q1, QuerySpec(k=2))
+    np.testing.assert_allclose(single.dists, out[0].dists)
+
+
+def test_distributed_escalation_returns_exact(walk_collection):
+    """The exactness-certificate escalation path: verify_top too small to
+    certify on the first attempt -> the engine retries internally with
+    doubled verify_top and still returns the brute-force answer."""
+    mesh = jax.make_mesh((1,), ("data",))
+    p = EnvelopeParams(gamma=8, znorm=True, **PARAMS)
+    engine = UlisseEngine.distributed(mesh, p, walk_collection,
+                                      max_batch=2)
+    coll = Collection.from_array(walk_collection)
+    q = walk_collection[5, 30:94].astype(np.float32)
+    ref = brute_force_knn(coll, q, k=5, znorm=True)
+
+    res = engine.search(q, QuerySpec(k=5, verify_top=2))
+    assert res.stats.escalations >= 1, \
+        "verify_top=2 must fail the certificate at least once"
+    np.testing.assert_allclose(res.dists, ref.dists, atol=5e-3)
+
+    # a comfortable verify_top certifies without escalation
+    res2 = engine.search(q, QuerySpec(k=5, verify_top=256))
+    assert res2.stats.escalations == 0
+    np.testing.assert_allclose(res2.dists, ref.dists, atol=5e-3)
+
+
+def test_distributed_rejects_unsupported_shapes(walk_collection):
+    mesh = jax.make_mesh((1,), ("data",))
+    p = EnvelopeParams(gamma=8, znorm=True, **PARAMS)
+    engine = UlisseEngine.distributed(mesh, p, walk_collection)
+    q = walk_collection[0, 0:64]
+    with pytest.raises(NotImplementedError):
+        engine.search(q, QuerySpec(k=1, measure="dtw", r=5))
+    with pytest.raises(NotImplementedError):
+        engine.search(q, QuerySpec(eps=1.0))
+
+
+def test_legacy_wrappers_deprecated(engine, walk_collection):
+    from repro.core import search
+    q = walk_collection[2, 0:96]
+    with pytest.warns(DeprecationWarning):
+        r = search.exact_knn(engine.index, q, k=1)
+    direct = engine.search(q, QuerySpec(k=1))
+    np.testing.assert_allclose(r.dists, direct.dists)
