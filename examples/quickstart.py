@@ -1,33 +1,56 @@
-"""Quickstart: build a ULISSE index, answer variable-length queries.
+"""Quickstart: build a ULISSE index ONCE, answer variable-length
+queries forever after from the saved artifact.
 
-Every query shape — ED or DTW, k-NN or eps-range, approximate or exact —
-goes through one call: `engine.search(q, QuerySpec(...))`.
+Every query shape — ED or DTW, k-NN or eps-range, approximate or exact
+— goes through one call: `engine.search(q, QuerySpec(...))`.  The index
+is a durable directory (repro.storage): the first run builds and saves
+it; later runs cold-open it in milliseconds (raw series mmap lazily)
+instead of rebuilding.  New series can be appended live.
 
     PYTHONPATH=src python examples/quickstart.py
+    # run it twice to see the open-instead-of-rebuild path
+
+Set ULISSE_INDEX_DIR to choose where the index lives.
 """
+import os
+import tempfile
+
 import numpy as np
 
 from repro.core import (Collection, EnvelopeParams, QuerySpec,
                         UlisseEngine, index_stats)
+from repro.storage import IndexCompatibilityError, IndexFormatError
 from repro.train.data import series_batches
 
 
 def main():
-    # 1. a collection of 500 random-walk series of length 256
-    data = series_batches(500, 256, seed=0)
-    coll = Collection.from_array(data)
-
-    # 2. ONE engine answering every query length in [160, 256]
     p = EnvelopeParams(lmin=160, lmax=256, gamma=32, seg_len=16,
                        znorm=True)
-    engine = UlisseEngine.from_collection(coll, p)
+    data = series_batches(500, 256, seed=0)
+    path = os.environ.get(
+        "ULISSE_INDEX_DIR",
+        os.path.join(tempfile.gettempdir(), "ulisse_quickstart_index"))
+
+    # 1. open the saved index if one exists; build + save otherwise.
+    #    `params=p` makes a stale index (built under different
+    #    lmin/lmax/...) fail loudly instead of answering wrongly.
+    try:
+        engine = UlisseEngine.open(path, params=p)
+        print(f"opened saved index at {path} (no rebuild)")
+    except IndexCompatibilityError:
+        raise      # params mismatch must stay loud, never auto-rebuild
+    except IndexFormatError:
+        coll = Collection.from_array(data)
+        engine = UlisseEngine.from_collection(coll, p)
+        engine.save(path)
+        print(f"built index and saved it to {path}")
     stats = index_stats(engine.index, p)
     print(f"index: {stats['num_envelopes']} envelopes summarizing "
           f"{stats['subsequences_represented']:,} subsequences "
           f"({stats['index_bytes'] / 1e6:.2f} MB vs "
           f"{stats['raw_bytes'] / 1e6:.1f} MB raw)")
 
-    # 3. exact k-NN at three different lengths — one index, no rebuilds
+    # 2. exact k-NN at three different lengths — one index, no rebuilds
     rng = np.random.default_rng(1)
     for qlen in (160, 192, 256):
         src = rng.integers(0, 500)
@@ -40,7 +63,7 @@ def main():
               f"series {r.series[0]} offset {r.offsets[0]}; "
               f"pruned {r.stats.pruning_power:.0%} of envelopes)")
 
-    # 4. the same index under DTW, and an epsilon-range query
+    # 3. the same index under DTW, and an epsilon-range query
     q = data[7, 30:222].copy()
     rd = engine.search(q, QuerySpec(k=2, measure="dtw", r=19))
     print(f"DTW top-2: {np.round(rd.dists, 3)} "
@@ -48,10 +71,26 @@ def main():
     rr = engine.search(q, QuerySpec(eps=float(rd.dists[-1]) * 2))
     print(f"eps-range: {len(rr.dists)} hits")
 
-    # 5. approximate search: a handful of leaf visits
+    # 4. approximate search: a handful of leaf visits
     ra = engine.search(q, QuerySpec(k=3, mode="approx"))
     print(f"approx top-3: {np.round(ra.dists, 3)} after "
           f"{ra.stats.leaves_visited} leaf visits")
+
+    # 5. live ingestion: append new series -> searchable immediately
+    #    via the delta buffer; compact folds them into the sorted index
+    if engine.index.collection.num_series > 500:
+        print("appended batch already ingested on a previous run")
+        return
+    new = series_batches(8, 256, seed=42)
+    engine.append(new)
+    qn = new[3, 40:232]
+    rn = engine.search(qn, QuerySpec(k=1))
+    print(f"appended 8 series (delta={engine.delta_size} envelopes); "
+          f"query planted in new data -> found series {rn.series[0]} "
+          f"(>=500 means: in the appended batch)")
+    engine.compact()
+    engine.save(path)
+    print(f"compacted (delta={engine.delta_size}) and re-saved")
 
 
 if __name__ == "__main__":

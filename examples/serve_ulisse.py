@@ -7,10 +7,18 @@ two (masked padding), caches one compiled program per (bucket, spec),
 batches concurrent queries into one device program, and retries
 internally with doubled verify_top when an exactness certificate fails.
 
+The serving state is durable: the first run saves the shard payloads
+(`engine.save`); later runs — on ANY device count, restore re-shards —
+skip the data pipeline and open the saved shards.
+
 Run with fake devices to exercise the distributed path:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
         PYTHONPATH=src python examples/serve_ulisse.py
+
+Set ULISSE_SERVE_DIR to choose where the shards live.
 """
+import os
+import tempfile
 import time
 
 import numpy as np
@@ -19,6 +27,7 @@ import jax
 from repro.core import (Collection, EnvelopeParams, QuerySpec,
                         UlisseEngine)
 from repro.core.search import brute_force_knn
+from repro.storage import IndexCompatibilityError, IndexFormatError
 from repro.train.data import series_batches
 
 
@@ -27,10 +36,27 @@ def main():
     mesh = jax.make_mesh((n_dev,), ("data",))
     print(f"serving over {n_dev} device(s)")
 
-    data = series_batches(256 * n_dev, 192, seed=3)
     p = EnvelopeParams(lmin=96, lmax=160, gamma=16, seg_len=16,
                        znorm=True)
-    engine = UlisseEngine.distributed(mesh, p, data, max_batch=4)
+    # one fixed path regardless of device count: restore re-shards onto
+    # whatever mesh this run has (elastic, like checkpoint restore)
+    path = os.environ.get(
+        "ULISSE_SERVE_DIR",
+        os.path.join(tempfile.gettempdir(), "ulisse_serve_index"))
+    try:
+        engine = UlisseEngine.open(path, params=p, mesh=mesh,
+                                   max_batch=4)
+        data = engine.raw_data
+        print(f"restored {data.shape[0]} series from saved shards "
+              f"at {path} (re-sharded over {n_dev} device(s))")
+    except IndexCompatibilityError:
+        raise      # params mismatch must stay loud, never auto-rebuild
+    except IndexFormatError:
+        data = series_batches(256 * n_dev, 192, seed=3)
+        engine = UlisseEngine.distributed(mesh, p, data, max_batch=4)
+        engine.save(path)
+        print(f"sharded {data.shape[0]} fresh series and saved "
+              f"per-shard payloads to {path}")
     spec = QuerySpec(k=5, verify_top=256)
 
     rng = np.random.default_rng(0)

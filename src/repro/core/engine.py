@@ -159,6 +159,95 @@ class UlisseEngine:
                    num_series=int(data.shape[0]),
                    series_len=int(data.shape[1]), max_batch=max_batch)
 
+    # ------------------------------------------------------------------
+    # persistence (repro.storage) — open / save / from_writer
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def open(cls, path: str, *, params: Optional[EnvelopeParams] = None,
+             mesh=None, axes=("data",), max_batch: Optional[int] = None,
+             mmap: bool = True) -> "UlisseEngine":
+        """Open a saved index (see repro.storage, DESIGN.md §7).
+
+        Without `mesh`: the local backend over the stored sorted
+        envelopes + block levels; raw series are mmap'd lazily, so the
+        cold open reads O(index), not O(raw data).  With `mesh`: the
+        raw payload shards are re-sharded onto the mesh (elastic — any
+        mesh size, from either a local or a distributed save).
+
+        `params`: optional expected EnvelopeParams; a mismatch with the
+        stored ones raises IndexCompatibilityError instead of silently
+        returning wrong distances.
+        """
+        from repro.storage import store
+        if mesh is not None:
+            stored, bp, data, manifest = store.load_raw_data(path, params)
+            return cls.distributed(
+                mesh, stored, data, breakpoints=bp,
+                axes=tuple(manifest.get("axes", list(axes))),
+                max_batch=(manifest.get("max_batch", 8)
+                           if max_batch is None else max_batch))
+        return cls.from_index(store.open_index(path, params=params,
+                                               mmap=mmap))
+
+    def save(self, path: str) -> str:
+        """Persist this engine's index to `path` (atomic commit).
+
+        Local backend: sorted envelopes + levels + breakpoints + raw
+        shards (+ the delta buffer, if series were appended and not yet
+        compacted).  Distributed backend: per-shard raw payloads + the
+        shard table (envelopes are device-resident summaries there).
+        """
+        from repro.storage import store
+        if self.is_distributed:
+            from repro.distributed.ulisse import shard_host_arrays
+            return store.save_distributed(
+                path, self.params, self._breakpoints,
+                shard_host_arrays(self._sharded),
+                axes=self._axes, max_batch=self.max_batch)
+        return store.save_index(path, self._index)
+
+    @classmethod
+    def from_writer(cls, writer, *, mmap: bool = True,
+                    mesh=None) -> "UlisseEngine":
+        """Finalize a `repro.storage.Writer` bulk build and open it."""
+        return cls.open(writer.finalize(), mmap=mmap, mesh=mesh)
+
+    # ------------------------------------------------------------------
+    # incremental ingestion (delta + compaction, repro.storage.delta)
+    # ------------------------------------------------------------------
+
+    def append(self, series) -> None:
+        """Ingest new series: immediately searchable via the delta set.
+
+        O(new series) work — envelopes of the appended series land in
+        an unsorted delta buffer searched alongside the main sorted
+        set; no re-sort, no block rebuild.  Call `compact()` once a
+        batch of appends has accumulated.
+        """
+        if self.is_distributed:
+            raise NotImplementedError(
+                "append is a local-backend operation; save the shards, "
+                "extend the data, and reopen with UlisseEngine.open("
+                "path, mesh=...) to grow a distributed engine")
+        from repro.storage import delta as _delta
+        self._index = _delta.extend_index(self._index, series)
+
+    def compact(self) -> None:
+        """Merge the delta buffer into the main sorted set (rebuilds
+        block levels; bit-identical to a from-scratch build)."""
+        if self.is_distributed:
+            raise NotImplementedError("compact is a local-backend op")
+        from repro.storage import delta as _delta
+        self._index = _delta.compact_index(self._index)
+
+    @property
+    def delta_size(self) -> int:
+        """Envelopes waiting in the ingestion delta (0 when compacted)."""
+        if self.is_distributed or self._index.delta is None:
+            return 0
+        return self._index.delta.size
+
     @property
     def is_distributed(self) -> bool:
         return self._mesh is not None
@@ -167,6 +256,13 @@ class UlisseEngine:
     def index(self) -> Optional[UlisseIndex]:
         """The local index (None for the distributed backend)."""
         return self._index
+
+    @property
+    def raw_data(self) -> np.ndarray:
+        """The (S, n) raw series this engine serves (gathered to host)."""
+        if self.is_distributed:
+            return np.asarray(self._sharded)
+        return np.asarray(self._index.collection.data)
 
     # ------------------------------------------------------------------
     # the one entry point
@@ -214,8 +310,24 @@ class UlisseEngine:
         """
         index = self._index
         pq = planner.prepare_query(q, self.params, spec.measure, spec.r)
-        stats = SearchStats(envelopes_total=int(index.envelopes.size))
+        stats = SearchStats(
+            envelopes_total=int(index.search_envelopes().size))
         pool = TopK(spec.k)
+
+        # The ingestion delta has no block cover: sweep it exhaustively
+        # up front (it is small pre-compaction).  This primes the bsf
+        # for the descent and keeps the exact_from_approx certificate
+        # honest — every candidate outside the block hierarchy has been
+        # verified, so "leaf LB >= kth bsf" still implies exactness.
+        # Chunked like the exact scan so a huge uncompacted delta never
+        # gathers one unbounded window tensor.
+        if index.delta is not None:
+            dvalid = index.envelopes.size \
+                + np.nonzero(np.asarray(index.delta.valid))[0]
+            for start in range(0, len(dvalid), spec.chunk_size):
+                executor.verify_envelopes(
+                    index, pq, dvalid[start:start + spec.chunk_size],
+                    pool, stats)
 
         order, blk_lb = planner.plan_leaf_order(index, pq)
         stats.lb_computations += index.levels[-1].size
@@ -245,7 +357,8 @@ class UlisseEngine:
         (paper Alg. 5)."""
         index = self._index
         pq = planner.prepare_query(q, self.params, spec.measure, spec.r)
-        stats = SearchStats(envelopes_total=int(index.envelopes.size))
+        stats = SearchStats(
+            envelopes_total=int(index.search_envelopes().size))
         pool = TopK(spec.k)
 
         if spec.approx_first:
@@ -263,10 +376,10 @@ class UlisseEngine:
 
         order, lbs_sorted = planner.plan_scan_order(index, pq,
                                                     spec.use_paa_bounds)
-        stats.lb_computations += index.envelopes.size
+        n = index.search_envelopes().size   # main ++ ingestion delta
+        stats.lb_computations += n
 
         pos = 0
-        n = index.envelopes.size
         while pos < n:
             if not np.isfinite(lbs_sorted[pos]):
                 break
@@ -286,13 +399,14 @@ class UlisseEngine:
         """All subsequences within eps of Q (Alg. 5 with bsf := eps)."""
         index = self._index
         pq = planner.prepare_query(q, self.params, spec.measure, spec.r)
-        stats = SearchStats(envelopes_total=int(index.envelopes.size))
+        env = index.search_envelopes()      # main ++ ingestion delta
+        stats = SearchStats(envelopes_total=int(env.size))
         eps2 = float(spec.eps) ** 2
 
         lbs = np.asarray(planner.env_lower_bounds(
-            pq.paa_lo, pq.paa_hi, index.envelopes, index.breakpoints,
+            pq.paa_lo, pq.paa_hi, env, index.breakpoints,
             self.params.seg_len, pq.nseg, spec.use_paa_bounds), np.float64)
-        stats.lb_computations += index.envelopes.size
+        stats.lb_computations += env.size
         cand = np.nonzero((lbs ** 2) <= eps2)[0]
         rows: list = []
         pool = TopK(1)  # unused sink for API symmetry

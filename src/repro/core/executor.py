@@ -220,9 +220,13 @@ def verify_envelopes(index, pq, env_idx: np.ndarray, pool: TopK,
 
     Updates the pool (k-NN) or appends (sid, off, d2) rows below eps2 to
     `collector` (range query).  Distances are squared throughout.
+
+    `env_idx` indexes the combined candidate set (main ++ delta, see
+    UlisseIndex.search_envelopes) — the collection already holds the
+    raw rows of appended series, so the gather is uniform.
     """
     p = index.params
-    env = index.envelopes
+    env = index.search_envelopes()
     g = p.gamma + 1
     idx = jnp.asarray(env_idx, jnp.int32)
     sids = jnp.take(env.series_id, idx)

@@ -28,7 +28,8 @@ import numpy as np
 from repro.core import isax
 from repro.core.envelope import build_envelope_set
 from repro.core.paa import paa
-from repro.core.types import Collection, EnvelopeParams, EnvelopeSet
+from repro.core.types import (Collection, EnvelopeParams, EnvelopeSet,
+                              concat_envelope_sets)
 
 _NEG = jnp.float32(-jnp.inf)
 _POS = jnp.float32(jnp.inf)
@@ -58,25 +59,69 @@ class BlockLevel:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class UlisseIndex:
-    """Sorted envelope array + block hierarchy + the raw collection."""
+    """Sorted envelope array + block hierarchy + the raw collection.
+
+    `delta` is the unsorted ingestion buffer of the storage subsystem
+    (`repro.storage`): envelopes of series appended after the last build
+    or `compact`.  The search layer treats main + delta as one candidate
+    set (`search_envelopes`); the block hierarchy covers main only, so
+    the approximate descent sweeps the (small) delta exhaustively.
+    """
 
     envelopes: EnvelopeSet            # sorted by iSAX(L)
     levels: List[BlockLevel]          # coarse -> fine (levels[-1] is finest)
     collection: Collection
     breakpoints: jnp.ndarray          # (card-1,)
     params: EnvelopeParams = None     # static aux
+    delta: Optional[EnvelopeSet] = None   # unsorted ingestion buffer
 
     def tree_flatten(self):
         return (self.envelopes, self.levels, self.collection,
-                self.breakpoints), self.params
+                self.breakpoints, self.delta), self.params
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, params=aux)
+        return cls(*children[:4], params=aux, delta=children[4])
 
     @property
     def num_envelopes(self) -> int:
         return self.envelopes.size
+
+    @property
+    def block_size(self) -> int:
+        """Children per block (uniform across levels)."""
+        if not self.levels:
+            return self.envelopes.size
+        return self.envelopes.size // self.levels[-1].size
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.levels)
+
+    def search_envelopes(self) -> EnvelopeSet:
+        """The full candidate set: main sorted envelopes ++ delta buffer.
+
+        Rows [0, envelopes.size) are the sorted (padded) main set — block
+        b covers rows [b*block_size, (b+1)*block_size) of THIS set too —
+        and rows [envelopes.size, ...) are the unsorted delta.  The
+        concatenation is cached until the delta buffer is replaced.
+        """
+        if self.delta is None:
+            return self.envelopes
+        cached = getattr(self, "_combined_cache", None)
+        if cached is None or cached[0] is not self.delta:
+            combined = concat_envelope_sets([self.envelopes, self.delta])
+            self._combined_cache = cached = (self.delta, combined)
+        return cached[1]
+
+
+# Padding-row fill per EnvelopeSet field.  +inf lo / -inf hi make
+# padding rows unreachable by every lower bound.  The storage Writer
+# consumes this table too, so its on-disk padding is bit-identical to
+# an in-memory build's — keep it the single source of truth.
+PAD_FILL = {"paa_lo": jnp.inf, "paa_hi": -jnp.inf, "sym_lo": 0,
+            "sym_hi": 0, "series_id": 0, "anchor": 0, "n_master": 0,
+            "valid": False}
 
 
 def _pad_envelopes(env: EnvelopeSet, multiple: int) -> EnvelopeSet:
@@ -89,16 +134,9 @@ def _pad_envelopes(env: EnvelopeSet, multiple: int) -> EnvelopeSet:
         cfg = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
         return jnp.pad(x, cfg, constant_values=fill)
 
-    return EnvelopeSet(
-        paa_lo=pad_arr(env.paa_lo, jnp.inf),   # +inf lo => mindist = inf
-        paa_hi=pad_arr(env.paa_hi, -jnp.inf),
-        sym_lo=pad_arr(env.sym_lo, 0),
-        sym_hi=pad_arr(env.sym_hi, 0),
-        series_id=pad_arr(env.series_id, 0),
-        anchor=pad_arr(env.anchor, 0),
-        n_master=pad_arr(env.n_master, 0),
-        valid=pad_arr(env.valid, False),
-    )
+    return EnvelopeSet(**{
+        field: pad_arr(getattr(env, field), fill)
+        for field, fill in PAD_FILL.items()})
 
 
 def _sort_envelopes(env: EnvelopeSet) -> EnvelopeSet:
@@ -134,6 +172,39 @@ def default_breakpoints(p: EnvelopeParams, data: jnp.ndarray) -> jnp.ndarray:
     return isax.calibrate_breakpoints(p.card, sample)
 
 
+def build_block_levels(env: EnvelopeSet, block_size: int,
+                       num_levels: int) -> List[BlockLevel]:
+    """Dense block hierarchy (coarse -> fine) over a sorted, padded set."""
+    levels: List[BlockLevel] = []
+    lo, hi, valid = env.paa_lo, env.paa_hi, env.valid
+    for _ in range(num_levels):
+        lvl = _block_reduce(lo, hi, valid, block_size)
+        levels.append(lvl)
+        lo, hi, valid = lvl.paa_lo, lvl.paa_hi, lvl.valid
+    levels.reverse()  # coarse -> fine
+    return levels
+
+
+def index_from_envelopes(env: EnvelopeSet, collection: Collection,
+                         p: EnvelopeParams, breakpoints: jnp.ndarray,
+                         block_size: int = 64,
+                         num_levels: int = 2) -> UlisseIndex:
+    """Sort/pad an (unsorted) EnvelopeSet and build the block hierarchy.
+
+    The second half of `build_index`, exposed so the storage subsystem
+    (out-of-core builds, delta compaction) can produce indexes from
+    envelope sets it assembled itself.  The sort is *stable*, which is
+    what makes compaction reproduce a from-scratch build bit-for-bit:
+    equal iSAX keys stay in series order regardless of how the set was
+    assembled (see repro/storage/delta.py).
+    """
+    env = _sort_envelopes(env)
+    env = _pad_envelopes(env, block_size ** max(num_levels, 1))
+    levels = build_block_levels(env, block_size, num_levels)
+    return UlisseIndex(envelopes=env, levels=levels, collection=collection,
+                       breakpoints=breakpoints, params=p)
+
+
 def build_index(collection: Collection, p: EnvelopeParams,
                 breakpoints: Optional[jnp.ndarray] = None,
                 block_size: int = 64, num_levels: int = 2) -> UlisseIndex:
@@ -145,24 +216,14 @@ def build_index(collection: Collection, p: EnvelopeParams,
         breakpoints = default_breakpoints(p, collection.data)
 
     env = build_envelope_set(collection, p, breakpoints)
-    env = _sort_envelopes(env)
-    env = _pad_envelopes(env, block_size ** max(num_levels, 1))
-
-    levels: List[BlockLevel] = []
-    lo, hi, valid = env.paa_lo, env.paa_hi, env.valid
-    for _ in range(num_levels):
-        lvl = _block_reduce(lo, hi, valid, block_size)
-        levels.append(lvl)
-        lo, hi, valid = lvl.paa_lo, lvl.paa_hi, lvl.valid
-    levels.reverse()  # coarse -> fine
-
-    return UlisseIndex(envelopes=env, levels=levels, collection=collection,
-                       breakpoints=breakpoints, params=p)
+    return index_from_envelopes(env, collection, p, breakpoints,
+                                block_size=block_size,
+                                num_levels=num_levels)
 
 
 def index_stats(index: UlisseIndex, p: EnvelopeParams) -> dict:
     """Size accounting mirroring the paper's index-property tables."""
-    n_env = int(np.asarray(jnp.sum(index.envelopes.valid)))
+    n_env = int(np.asarray(jnp.sum(index.search_envelopes().valid)))
     # paper stores 2w 1-byte symbols + a disk pointer per Envelope
     paper_bytes = n_env * (2 * p.w + 8)
     n_sub = 0
@@ -173,6 +234,9 @@ def index_stats(index: UlisseIndex, p: EnvelopeParams) -> dict:
         "num_envelopes": n_env,
         "num_blocks": [lvl.size for lvl in index.levels],
         "index_bytes": paper_bytes,
-        "raw_bytes": index.collection.data.size * 4,
+        # computed from shape, not .data — stats on a freshly opened
+        # index must not materialize the lazily-mmap'd raw series
+        "raw_bytes": index.collection.num_series
+        * index.collection.series_len * 4,
         "subsequences_represented": n_sub,
     }

@@ -113,9 +113,14 @@ def plan_leaf_order(index, pq: PreparedQuery) -> Tuple[np.ndarray, np.ndarray]:
 def plan_scan_order(index, pq: PreparedQuery,
                     use_paa_bounds: bool = False
                     ) -> Tuple[np.ndarray, np.ndarray]:
-    """LB-sorted envelope order for the exact scan: (order, sorted_lbs)."""
+    """LB-sorted envelope order for the exact scan: (order, sorted_lbs).
+
+    Orders the FULL candidate set — the main sorted envelopes plus the
+    unsorted ingestion delta (`index.search_envelopes()`), so appended
+    series are scanned with the same bsf pruning as bulk-loaded ones.
+    """
     lbs = np.asarray(env_lower_bounds(
-        pq.paa_lo, pq.paa_hi, index.envelopes, index.breakpoints,
+        pq.paa_lo, pq.paa_hi, index.search_envelopes(), index.breakpoints,
         index.params.seg_len, pq.nseg, use_paa_bounds), np.float64)
     order = np.argsort(lbs)
     return order, lbs[order]

@@ -173,3 +173,22 @@ class EnvelopeSet:
 
 def concat_envelope_sets(sets) -> EnvelopeSet:
     return jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs, axis=0), *sets)
+
+
+def concat_collections(a: Collection, b: Collection) -> Collection:
+    """Stack two same-length collections along the series axis.
+
+    Every Collection field is per-series (row-wise), so concatenating the
+    precomputed fields equals `Collection.from_array` of the concatenated
+    raw data — the invariant incremental ingestion relies on.
+    """
+    if a.series_len != b.series_len:
+        raise ValueError(
+            f"cannot concat collections of series_len {a.series_len} "
+            f"and {b.series_len}")
+    return Collection(
+        data=jnp.concatenate([a.data, b.data], axis=0),
+        csum=jnp.concatenate([a.csum, b.csum], axis=0),
+        csum2=jnp.concatenate([a.csum2, b.csum2], axis=0),
+        center=jnp.concatenate([a.center, b.center], axis=0),
+    )

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import bounds, executor, planner
@@ -35,6 +36,24 @@ def shard_collection(mesh, data: jnp.ndarray, axes=("data",)):
     """Place a (S, n) series array sharded over the given mesh axes."""
     spec = P(axes if len(axes) > 1 else axes[0])
     return jax.device_put(data, NamedSharding(mesh, spec))
+
+
+def shard_host_arrays(sharded) -> list:
+    """Per-shard host copies of a sharded (S, n) array, in row order.
+
+    The persistence path (repro.storage.save_distributed) writes these
+    as the per-shard payloads: each host copies only its addressable
+    shards — no all-gather of the full collection through one host —
+    which is what lets the checkpoint-style save scale with the mesh.
+    Replicated copies (if an axis is unsharded) are deduplicated by
+    row offset.
+    """
+    by_start = {}
+    for s in sharded.addressable_shards:
+        start = s.index[0].start or 0
+        if start not in by_start:
+            by_start[start] = np.asarray(s.data)
+    return [by_start[k] for k in sorted(by_start)]
 
 
 def decode_id(code):

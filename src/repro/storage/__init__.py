@@ -1,0 +1,29 @@
+"""repro.storage — persistent index storage + streaming ingestion.
+
+The ULISSE index as a durable, growable artifact (DESIGN.md §7):
+
+  * `format`  — manifest schema, atomic `*.tmp/` -> rename commit,
+    format-version + EnvelopeParams compatibility validation;
+  * `store`   — `save_index` / `open_index` (lazy mmap raw series) and
+    the distributed per-shard save/restore;
+  * `writer`  — `Writer`: out-of-core bulk build via iSAX-sorted spill
+    runs merged at finalize (the paper's one-pass bulk loader);
+  * `delta`   — `extend_index` / `compact_index`: incremental ingestion
+    into an unsorted delta set searched alongside the main index.
+
+Engine-level surface: `UlisseEngine.open/save/from_writer/append/
+compact` (core/engine.py) — most callers never import this package
+directly.
+"""
+from repro.storage.delta import compact_index, extend_index
+from repro.storage.format import (FORMAT_VERSION, IndexCompatibilityError,
+                                  IndexFormatError)
+from repro.storage.store import (LazyCollection, load_raw_data, open_index,
+                                 save_distributed, save_index)
+from repro.storage.writer import Writer
+
+__all__ = [
+    "FORMAT_VERSION", "IndexFormatError", "IndexCompatibilityError",
+    "LazyCollection", "open_index", "save_index", "save_distributed",
+    "load_raw_data", "Writer", "extend_index", "compact_index",
+]

@@ -1,0 +1,80 @@
+"""Incremental ingestion: the delta + compaction model.
+
+The paper's index is bulk-loaded once; ours must also *grow* (ROADMAP:
+serve heavy live traffic).  New series land in two places:
+
+  * their raw rows extend the collection immediately (verification must
+    be able to gather their windows);
+  * their envelopes land in `index.delta`, an UNSORTED in-memory
+    EnvelopeSet appended with `concat_envelope_sets` — an O(new) op,
+    no re-sort, no block rebuild.  The engine searches main + delta as
+    one candidate set (`UlisseIndex.search_envelopes`), so appended
+    series are queryable the moment `append` returns.
+
+`compact_index` folds the delta into the main sorted set and rebuilds
+the block levels.  Because the main set was *stably* sorted (equal iSAX
+keys in (series, anchor) order) and delta series ids are strictly
+larger than main ids, re-sorting `main_valid ++ delta` stably is
+bit-identical to a from-scratch `build_index` over the concatenated
+collection — the LSM-style merge loses nothing (asserted in
+tests/test_storage.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.envelope import build_envelope_set
+from repro.core.index import UlisseIndex, index_from_envelopes
+from repro.core.types import (Collection, concat_collections,
+                              concat_envelope_sets)
+
+
+def extend_index(index: UlisseIndex, series) -> UlisseIndex:
+    """Append new series: extended collection + delta envelopes.
+
+    `series`: one (n,) series or a (S, n) batch; n must equal the
+    collection's series_len.  Returns a NEW UlisseIndex (main envelopes
+    and levels are shared, not copied); the input index is unchanged.
+    """
+    arr = np.asarray(series, np.float32)
+    if arr.ndim == 1:
+        arr = arr[None]
+    if arr.ndim != 2:
+        raise ValueError(f"expected (n,) or (S, n) series, got {arr.shape}")
+    if arr.shape[1] != index.collection.series_len:
+        raise ValueError(
+            f"appended series_len {arr.shape[1]} != index series_len "
+            f"{index.collection.series_len} (collections are fixed-width)")
+
+    new_part = Collection.from_array(arr)
+    env_new = build_envelope_set(new_part, index.params, index.breakpoints)
+    env_new = dataclasses.replace(
+        env_new,
+        series_id=env_new.series_id + index.collection.num_series)
+    delta = env_new if index.delta is None else \
+        concat_envelope_sets([index.delta, env_new])
+    return dataclasses.replace(
+        index,
+        collection=concat_collections(index.collection, new_part),
+        delta=delta)
+
+
+def compact_index(index: UlisseIndex) -> UlisseIndex:
+    """Merge the delta buffer into the main sorted set; rebuild levels.
+
+    A no-op when there is no delta.  The result is bit-identical to
+    `build_index` over the full collection (see module doc).
+    """
+    if index.delta is None:
+        return index
+    nvalid = int(np.asarray(index.envelopes.valid).sum())
+    # the stable sort pushed invalid/padding rows past the valid prefix
+    main = dataclasses.replace(index.envelopes, **{
+        f.name: getattr(index.envelopes, f.name)[:nvalid]
+        for f in dataclasses.fields(index.envelopes)})
+    env_all = concat_envelope_sets([main, index.delta])
+    return index_from_envelopes(
+        env_all, index.collection, index.params, index.breakpoints,
+        block_size=index.block_size, num_levels=index.num_levels)

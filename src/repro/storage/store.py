@@ -1,0 +1,243 @@
+"""Save / open whole indexes (the storage subsystem's reader half).
+
+`save_index` serializes a built `UlisseIndex` — main sorted envelopes,
+block levels, breakpoints, row-sharded raw series, and the delta buffer
+if one exists — under the atomic commit protocol of `format.py`.
+
+`open_index` is the cold-open path: it reads the manifest and the
+envelope/level payloads (they are needed by the very first lower-bound
+computation) but wraps the raw series in a `LazyCollection`, so opening
+an index costs O(index) I/O, not O(raw data); the series shards are
+mmap'd and materialized only when verification first gathers windows.
+
+The distributed backend stores no envelopes (its shard programs
+summarize raw series on device — see distributed/ulisse.py), so its
+on-disk form is just the shard table + per-shard raw payloads; restore
+re-shards onto ANY mesh, like train/checkpoint.py's elastic restore.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import BlockLevel, UlisseIndex
+from repro.core.types import Collection, EnvelopeParams, EnvelopeSet
+from repro.storage import format as fmt
+
+# struct-of-arrays fields of an EnvelopeSet, in constructor order
+ENV_FIELDS = ("paa_lo", "paa_hi", "sym_lo", "sym_hi",
+              "series_id", "anchor", "n_master", "valid")
+LEVEL_FIELDS = ("paa_lo", "paa_hi", "valid")
+SORT_ORDER = "isax_lo_lex_stable"   # (invalid, sym_lo[0..w)) stable lexsort
+
+
+class LazyCollection:
+    """Duck-typed `Collection` whose payload loads on first access.
+
+    Knows its shape from the manifest, so size queries (`num_series`,
+    `series_len`) stay cold; the first touch of `data`/`csum`/... reads
+    the mmap'd shards and builds the real Collection (prefix sums are
+    recomputed — they are derived state, cheaper to rebuild than to
+    store at 2x the raw payload).
+    """
+
+    def __init__(self, path: str, shards: List[dict], num_series: int,
+                 series_len: int):
+        self._path = path
+        self._shards = shards
+        self._num_series = num_series
+        self._series_len = series_len
+        self._coll: Optional[Collection] = None
+
+    @property
+    def num_series(self) -> int:
+        return self._num_series
+
+    @property
+    def series_len(self) -> int:
+        return self._series_len
+
+    @property
+    def is_materialized(self) -> bool:
+        return self._coll is not None
+
+    def materialize(self) -> Collection:
+        if self._coll is None:
+            parts = [fmt.load_array(self._path, e, mmap=True)
+                     for e in self._shards]
+            data = parts[0] if len(parts) == 1 else np.concatenate(parts)
+            self._coll = Collection.from_array(data)
+        return self._coll
+
+    @property
+    def data(self):
+        return self.materialize().data
+
+    @property
+    def csum(self):
+        return self.materialize().csum
+
+    @property
+    def csum2(self):
+        return self.materialize().csum2
+
+    @property
+    def center(self):
+        return self.materialize().center
+
+    def window_stats(self, sid, off, length):
+        return self.materialize().window_stats(sid, off, length)
+
+
+# --------------------------------------------------------------------------
+# local indexes
+# --------------------------------------------------------------------------
+
+def _save_envelope_set(tmp: str, group: str, env: EnvelopeSet,
+                       arrays: dict) -> None:
+    for field in ENV_FIELDS:
+        rel = f"{group}/{field}"
+        arrays[rel] = fmt.save_array(tmp, rel, getattr(env, field))
+
+
+def _load_envelope_set(path: str, group: str, arrays: dict) -> EnvelopeSet:
+    return EnvelopeSet(*(
+        jnp.asarray(fmt.load_array(path, arrays[f"{group}/{field}"]))
+        for field in ENV_FIELDS))
+
+
+def save_index(path: str, index: UlisseIndex,
+               shard_rows: int = 4096) -> str:
+    """Serialize a local index to `path` (atomically). Returns `path`."""
+    p: EnvelopeParams = index.params
+    tmp = fmt.stage_dir(path, "envelopes", "levels", "collection")
+    arrays: dict = {}
+
+    _save_envelope_set(tmp, "envelopes", index.envelopes, arrays)
+    for k, lvl in enumerate(index.levels):
+        for field in LEVEL_FIELDS:
+            rel = f"levels/L{k}_{field}"
+            arrays[rel] = fmt.save_array(tmp, rel, getattr(lvl, field))
+    arrays["breakpoints"] = fmt.save_array(tmp, "breakpoints",
+                                           index.breakpoints)
+    if index.delta is not None:
+        os.makedirs(os.path.join(tmp, "delta"), exist_ok=True)
+        _save_envelope_set(tmp, "delta", index.delta, arrays)
+
+    data = np.asarray(index.collection.data)
+    shards = []
+    for start in range(0, data.shape[0], shard_rows):
+        rel = f"collection/shard_{len(shards):05d}"
+        shards.append(fmt.save_array(tmp, rel, data[start:start + shard_rows]))
+
+    fmt.write_manifest(tmp, {
+        "kind": fmt.KIND_LOCAL,
+        "params": fmt.params_to_dict(p),
+        "sort_order": SORT_ORDER,
+        "block_size": index.block_size,
+        "num_levels": index.num_levels,
+        "num_envelopes": index.envelopes.size,
+        "num_series": int(data.shape[0]),
+        "series_len": int(data.shape[1]),
+        "has_delta": index.delta is not None,
+        "arrays": arrays,
+        "collection_shards": shards,
+    })
+    return fmt.commit(path)
+
+
+def open_index(path: str, params: Optional[EnvelopeParams] = None,
+               mmap: bool = True) -> UlisseIndex:
+    """Open a saved local index; raw series load lazily (see module doc).
+
+    params: when given, validated against the stored EnvelopeParams —
+    a mismatch raises IndexCompatibilityError instead of returning an
+    engine that computes wrong distances.
+    """
+    fmt.gc_stale_tmp(path)
+    manifest = fmt.read_manifest(path)
+    if manifest["kind"] != fmt.KIND_LOCAL:
+        raise fmt.IndexFormatError(
+            f"{path!r} holds a {manifest['kind']!r} index; open it with "
+            "UlisseEngine.open(path, mesh=...)")
+    stored = fmt.params_from_dict(manifest["params"])
+    fmt.validate_params(stored, params)
+    arrays = manifest["arrays"]
+
+    env = _load_envelope_set(path, "envelopes", arrays)
+    if env.w != stored.w:
+        raise fmt.IndexFormatError(
+            f"envelope payload has {env.w} PAA segments, params imply "
+            f"{stored.w} — index is corrupt")
+    levels = [
+        BlockLevel(*(jnp.asarray(
+            fmt.load_array(path, arrays[f"levels/L{k}_{field}"]))
+            for field in LEVEL_FIELDS))
+        for k in range(manifest["num_levels"])
+    ]
+    delta = (_load_envelope_set(path, "delta", arrays)
+             if manifest.get("has_delta") else None)
+    collection = LazyCollection(path, manifest["collection_shards"],
+                                manifest["num_series"],
+                                manifest["series_len"])
+    if not mmap:
+        collection = collection.materialize()
+    return UlisseIndex(
+        envelopes=env, levels=levels, collection=collection,
+        breakpoints=jnp.asarray(fmt.load_array(path, arrays["breakpoints"])),
+        params=stored, delta=delta)
+
+
+# --------------------------------------------------------------------------
+# distributed indexes (per-shard raw payloads)
+# --------------------------------------------------------------------------
+
+def save_distributed(path: str, params: EnvelopeParams, breakpoints,
+                     shard_arrays, axes=("data",),
+                     max_batch: int = 8) -> str:
+    """Serialize a distributed engine's state as per-shard raw payloads.
+
+    `shard_arrays`: per-shard (rows, n) host arrays in row order (see
+    distributed.ulisse.shard_host_arrays) — one payload file each, so
+    a multi-host deployment writes only its addressable shards.
+    """
+    shard_arrays = [np.asarray(s, np.float32) for s in shard_arrays]
+    tmp = fmt.stage_dir(path, "shards")
+    arrays = {"breakpoints": fmt.save_array(tmp, "breakpoints", breakpoints)}
+    shards = []
+    for s, rows in enumerate(shard_arrays):
+        rel = f"shards/shard_{s:05d}"
+        shards.append(fmt.save_array(tmp, rel, rows))
+    fmt.write_manifest(tmp, {
+        "kind": fmt.KIND_DISTRIBUTED,
+        "params": fmt.params_to_dict(params),
+        "num_series": int(sum(s.shape[0] for s in shard_arrays)),
+        "series_len": int(shard_arrays[0].shape[1]),
+        "axes": list(axes),
+        "max_batch": max_batch,
+        "arrays": arrays,
+        "collection_shards": shards,
+    })
+    return fmt.commit(path)
+
+
+def load_raw_data(path: str, params: Optional[EnvelopeParams] = None):
+    """Raw series + params + breakpoints from an index of EITHER kind.
+
+    The re-sharding entry point: a distributed engine can be restored on
+    any mesh size from these (the shard table is a layout hint, not a
+    constraint), and a local index can be promoted to a distributed one.
+    Returns (params, breakpoints, data, manifest).
+    """
+    fmt.gc_stale_tmp(path)
+    manifest = fmt.read_manifest(path)
+    stored = fmt.params_from_dict(manifest["params"])
+    fmt.validate_params(stored, params)
+    parts = [fmt.load_array(path, e, mmap=True)
+             for e in manifest["collection_shards"]]
+    data = parts[0] if len(parts) == 1 else np.concatenate(parts)
+    bp = fmt.load_array(path, manifest["arrays"]["breakpoints"])
+    return stored, jnp.asarray(bp), np.asarray(data), manifest

@@ -1,0 +1,122 @@
+"""iSAX symbolization edge geometry.
+
+The on-disk index sorts envelopes by their iSAX(L) word
+(repro.storage's SORT_ORDER), so the symbolization must be *stable
+geometry*: ±inf envelope segments (never-touched tails, see
+envelope._finalize) must land on the extreme symbols, and `symbolize`
+must be monotone in its input — otherwise the sorted layout, the block
+unions built over it, and the breakpoint lower bounds would disagree
+between builds.
+
+Deterministic edge cases run everywhere; the randomized monotonicity /
+inverse-consistency properties need the hypothesis extra (same
+convention as test_bounds_properties.py).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import isax
+
+CARDS = (2, 16, 64, 256)
+
+
+@pytest.mark.parametrize("card", CARDS)
+def test_infinite_values_land_on_extreme_symbols(card):
+    """-inf -> symbol 0, +inf -> symbol card-1, for both breakpoint
+    families — the invariant that keeps unconstrained (-inf, +inf)
+    envelope segments at the edges of the sort order."""
+    for bp in (isax.gaussian_breakpoints(card),
+               isax.calibrate_breakpoints(
+                   card, jnp.asarray([3.0, 5.0, 9.0, 11.0]))):
+        vals = jnp.asarray([-jnp.inf, jnp.inf], jnp.float32)
+        sym = np.asarray(isax.symbolize(vals, bp))
+        assert sym[0] == 0
+        assert sym[1] == card - 1
+        # and the extreme symbols' outer breakpoints are +-inf, so the
+        # symbol interval still contains the value (lower bound safety)
+        assert np.asarray(isax.beta_lower(sym[:1], bp))[0] == -np.inf
+        assert np.asarray(isax.beta_upper(sym[1:], bp))[0] == np.inf
+
+
+@pytest.mark.parametrize("card", CARDS)
+def test_symbolize_covers_every_symbol_and_boundaries(card):
+    bp = np.asarray(isax.gaussian_breakpoints(card))
+    mids = np.concatenate([[bp[0] - 1.0],
+                           (bp[:-1] + bp[1:]) / 2.0,
+                           [bp[-1] + 1.0]]).astype(np.float32)
+    sym = np.asarray(isax.symbolize(jnp.asarray(mids), bp))
+    np.testing.assert_array_equal(sym, np.arange(card))
+    # boundary values go RIGHT (side="right"): bp[k] belongs to symbol k+1
+    on_bp = np.asarray(isax.symbolize(jnp.asarray(bp), bp))
+    np.testing.assert_array_equal(on_bp, np.arange(1, card))
+
+
+def test_calibrated_breakpoints_are_sorted_and_finite():
+    sample = jnp.asarray(np.linspace(-4.0, 12.0, 64), jnp.float32)
+    for card in CARDS:
+        bp = np.asarray(isax.calibrate_breakpoints(card, sample))
+        assert np.isfinite(bp).all()
+        assert (np.diff(bp) >= 0).all()
+
+
+# --------------------------------------------------------------------------
+# randomized properties (hypothesis extra; deterministic tests above
+# must run even without it, so no module-level importorskip)
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised without extra
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(max_examples=50, deadline=None)
+
+    @st.composite
+    def values_and_breakpoints(draw):
+        card = draw(st.sampled_from(CARDS))
+        if draw(st.booleans()):
+            bp = isax.gaussian_breakpoints(card)
+        else:
+            sample = draw(st.lists(
+                st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                min_size=4, max_size=32))
+            bp = isax.calibrate_breakpoints(
+                card, jnp.asarray(sample, jnp.float32))
+        vals = draw(st.lists(
+            st.floats(allow_nan=False, allow_infinity=True, width=32),
+            min_size=2, max_size=64))
+        return card, bp, np.asarray(vals, np.float32)
+
+    @given(values_and_breakpoints())
+    @settings(**SETTINGS)
+    def test_symbolize_is_monotone(case):
+        """v1 <= v2  =>  symbolize(v1) <= symbolize(v2) — what makes
+        the on-disk iSAX sort order stable across runs and ingestion
+        orders."""
+        card, bp, vals = case
+        order = np.argsort(vals, kind="stable")
+        sym = np.asarray(isax.symbolize(jnp.asarray(vals), bp))
+        assert (np.diff(sym[order]) >= 0).all()
+        assert (sym >= 0).all() and (sym <= card - 1).all()
+
+    @given(values_and_breakpoints())
+    @settings(**SETTINGS)
+    def test_symbol_interval_contains_value(case):
+        """beta_lower(sym(v)) <= v <= beta_upper(sym(v)): quantization
+        only widens intervals (the safety direction of every lower
+        bound)."""
+        _, bp, vals = case
+        sym = isax.symbolize(jnp.asarray(vals), bp)
+        lo = np.asarray(isax.beta_lower(sym, bp), np.float64)
+        hi = np.asarray(isax.beta_upper(sym, bp), np.float64)
+        v = vals.astype(np.float64)
+        eps = 1e-5 * np.maximum(
+            1.0, np.abs(np.where(np.isfinite(v), v, 0.0)))
+        assert (lo <= v + eps).all()
+        assert (v <= hi + eps).all()
+else:
+    def test_hypothesis_missing():
+        pytest.skip("randomized iSAX properties need the [test] extra")

@@ -1,0 +1,296 @@
+"""repro.storage: persistence + ingestion invariants.
+
+  * save -> open returns BIT-IDENTICAL search results (ED and DTW,
+    k-NN and range, Z-norm and raw) — the acceptance bar of the
+    storage subsystem;
+  * the out-of-core Writer's merge of spill runs equals `build_index`
+    array-for-array;
+  * append -> search sees new series immediately; append -> compact is
+    bit-identical to a from-scratch build over the concatenated data;
+  * crash safety: a leftover `*.tmp/` is ignored and GC'd; version and
+    EnvelopeParams mismatches fail loudly;
+  * cold opens stay cold: raw series materialize only at verification.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core import (Collection, EnvelopeParams, QuerySpec, UlisseEngine)
+from repro.storage import (IndexCompatibilityError, IndexFormatError,
+                           Writer)
+from repro.storage.store import ENV_FIELDS
+
+PARAMS = dict(lmin=64, lmax=128, gamma=8, seg_len=16, card=64)
+BUILD = dict(block_size=16, num_levels=2)
+
+
+def _assert_same_result(a, b):
+    np.testing.assert_array_equal(a.dists, b.dists)
+    np.testing.assert_array_equal(a.series, b.series)
+    np.testing.assert_array_equal(a.offsets, b.offsets)
+
+
+def _assert_same_index(ia, ib):
+    for f in ENV_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ia.envelopes, f)),
+            np.asarray(getattr(ib.envelopes, f)), err_msg=f)
+    assert len(ia.levels) == len(ib.levels)
+    for la, lb in zip(ia.levels, ib.levels):
+        np.testing.assert_array_equal(np.asarray(la.paa_lo),
+                                      np.asarray(lb.paa_lo))
+        np.testing.assert_array_equal(np.asarray(la.paa_hi),
+                                      np.asarray(lb.paa_hi))
+        np.testing.assert_array_equal(np.asarray(la.valid),
+                                      np.asarray(lb.valid))
+
+
+@pytest.fixture(scope="module")
+def znorm_engine(walk_collection):
+    p = EnvelopeParams(znorm=True, **PARAMS)
+    return UlisseEngine.from_collection(
+        Collection.from_array(walk_collection), p, **BUILD)
+
+
+@pytest.mark.parametrize("spec", [
+    QuerySpec(k=5),                                  # ED k-NN
+    QuerySpec(k=3, measure="dtw", r=9),              # DTW k-NN
+])
+def test_save_open_bit_identical_knn(znorm_engine, walk_collection,
+                                     tmp_path, spec):
+    q = walk_collection[3, 20:116]
+    path = str(tmp_path / "idx")
+    znorm_engine.save(path)
+    reopened = UlisseEngine.open(path)
+    _assert_same_result(znorm_engine.search(q, spec),
+                        reopened.search(q, spec))
+
+
+def test_save_open_bit_identical_range_and_raw(walk_collection, tmp_path):
+    for znorm in (True, False):
+        p = EnvelopeParams(znorm=znorm, **PARAMS)
+        eng = UlisseEngine.from_collection(
+            Collection.from_array(walk_collection), p, **BUILD)
+        path = str(tmp_path / f"idx_{znorm}")
+        eng.save(path)
+        reopened = UlisseEngine.open(path)
+        q = walk_collection[11, 10:106]
+        ref = eng.search(q, QuerySpec(k=8))
+        eps = float(ref.dists[-1]) * 1.0001
+        _assert_same_result(eng.search(q, QuerySpec(eps=eps)),
+                            reopened.search(q, QuerySpec(eps=eps)))
+        _assert_same_result(eng.search(q, QuerySpec(k=8)),
+                            reopened.search(q, QuerySpec(k=8)))
+
+
+def test_open_is_lazy_until_verification(znorm_engine, walk_collection,
+                                         tmp_path):
+    path = str(tmp_path / "idx")
+    znorm_engine.save(path)
+    reopened = UlisseEngine.open(path)
+    coll = reopened.index.collection
+    assert not coll.is_materialized, "cold open must not read raw series"
+    assert coll.num_series == walk_collection.shape[0]   # manifest-served
+    assert coll.series_len == walk_collection.shape[1]
+    assert not coll.is_materialized
+    reopened.search(walk_collection[0, 0:96], QuerySpec(k=1))
+    assert coll.is_materialized, "verification gathers raw windows"
+
+
+def test_writer_streaming_matches_in_memory_build(walk_collection,
+                                                  tmp_path):
+    """Out-of-core build (multiple sorted spill runs, merged at
+    finalize) == build_index, array for array."""
+    p = EnvelopeParams(znorm=True, **PARAMS)
+    w = Writer(str(tmp_path / "bulk"), p, chunk_series=7, **BUILD)
+    for i in range(0, walk_collection.shape[0], 5):   # ragged chunks
+        w.append(walk_collection[i:i + 5])
+    streamed = UlisseEngine.from_writer(w)
+    ref = UlisseEngine.from_collection(
+        Collection.from_array(walk_collection), p, **BUILD)
+    _assert_same_index(streamed.index, ref.index)
+    q = walk_collection[7, 5:101]
+    _assert_same_result(streamed.search(q, QuerySpec(k=4)),
+                        ref.search(q, QuerySpec(k=4)))
+
+
+def test_writer_validates_input(tmp_path):
+    p = EnvelopeParams(znorm=True, **PARAMS)
+    w = Writer(str(tmp_path / "bad"), p)
+    with pytest.raises(ValueError, match="empty Writer"):
+        w.finalize()
+    w2 = Writer(str(tmp_path / "bad2"), p)
+    with pytest.raises(ValueError, match="shorter than"):
+        w2.append(np.zeros(32, np.float32))
+    w2.append(np.zeros((2, 192), np.float32))
+    with pytest.raises(ValueError, match="fixed-width"):
+        w2.append(np.zeros((2, 200), np.float32))
+
+
+def test_append_then_compact_matches_from_scratch(walk_collection, rng,
+                                                  tmp_path):
+    """The acceptance criterion: append of a second batch is searched
+    correctly pre-compaction, and compact() reproduces the from-scratch
+    index over the concatenated collection bit-for-bit."""
+    p = EnvelopeParams(znorm=True, **PARAMS)
+    first, second = walk_collection[:16], walk_collection[16:]
+    eng = UlisseEngine.from_collection(
+        Collection.from_array(first), p, **BUILD)
+    eng.append(second[:4])
+    eng.append(second[4:])
+    assert eng.delta_size > 0
+    ref = UlisseEngine.from_collection(
+        Collection.from_array(walk_collection), p, **BUILD)
+
+    q = walk_collection[18, 30:126]   # planted in the APPENDED batch
+    for spec in (QuerySpec(k=5), QuerySpec(k=2, measure="dtw", r=9),
+                 QuerySpec(k=3, mode="approx")):
+        got, want = eng.search(q, spec), ref.search(q, spec)
+        np.testing.assert_allclose(got.dists, want.dists, atol=1e-5)
+        np.testing.assert_array_equal(got.series, want.series)
+    assert int(eng.search(q, QuerySpec(k=1)).series[0]) == 18
+
+    eng.compact()
+    assert eng.delta_size == 0
+    _assert_same_index(eng.index, ref.index)
+    _assert_same_result(eng.search(q, QuerySpec(k=5)),
+                        ref.search(q, QuerySpec(k=5)))
+
+    # delta survives a save -> open round trip too
+    eng2 = UlisseEngine.from_collection(
+        Collection.from_array(first), p, **BUILD)
+    eng2.append(second)
+    path = str(tmp_path / "delta_idx")
+    eng2.save(path)
+    reopened = UlisseEngine.open(path)
+    assert reopened.delta_size == eng2.delta_size
+    _assert_same_result(eng2.search(q, QuerySpec(k=5)),
+                        reopened.search(q, QuerySpec(k=5)))
+    reopened.compact()
+    _assert_same_index(reopened.index, ref.index)
+
+
+def test_append_rejects_bad_width_and_distributed(walk_collection):
+    p = EnvelopeParams(znorm=True, **PARAMS)
+    eng = UlisseEngine.from_collection(
+        Collection.from_array(walk_collection), p, **BUILD)
+    with pytest.raises(ValueError, match="fixed-width"):
+        eng.append(np.zeros((1, 64), np.float32))
+    mesh = jax.make_mesh((1,), ("data",))
+    dist = UlisseEngine.distributed(mesh, p, walk_collection)
+    with pytest.raises(NotImplementedError):
+        dist.append(walk_collection[:1])
+    with pytest.raises(NotImplementedError):
+        dist.compact()
+
+
+def test_crash_safety_stale_tmp_ignored_and_gcd(znorm_engine,
+                                                walk_collection, tmp_path):
+    path = str(tmp_path / "idx")
+    znorm_engine.save(path)
+    stale = path + ".tmp"
+    os.makedirs(os.path.join(stale, "envelopes"))
+    with open(os.path.join(stale, "garbage.bin"), "w") as f:
+        f.write("crashed writer husk")
+    reopened = UlisseEngine.open(path)      # ignores the husk...
+    assert not os.path.exists(stale), "stale *.tmp must be GC'd on open"
+    _assert_same_result(
+        znorm_engine.search(walk_collection[2, 0:96], QuerySpec(k=3)),
+        reopened.search(walk_collection[2, 0:96], QuerySpec(k=3)))
+    # an unfinalized Writer leaves ONLY a tmp husk -> open fails loudly
+    p = EnvelopeParams(znorm=True, **PARAMS)
+    w = Writer(str(tmp_path / "never"), p, **BUILD)
+    w.append(walk_collection[:4])
+    with pytest.raises(IndexFormatError, match="finalized"):
+        UlisseEngine.open(str(tmp_path / "never"))
+
+
+def test_crash_in_commit_window_rolls_back(znorm_engine, walk_collection,
+                                           tmp_path):
+    """Re-saving over an existing index moves it aside, never deletes
+    it first: a crash between the two commit renames leaves
+    `<path>.old/` as the only complete index, and the next open rolls
+    it back instead of losing everything."""
+    path = str(tmp_path / "idx")
+    znorm_engine.save(path)
+    q = walk_collection[4, 8:104]
+    want = znorm_engine.search(q, QuerySpec(k=3))
+    # simulate the crash window: old moved aside, new never renamed in
+    os.rename(path, path + ".old")
+    reopened = UlisseEngine.open(path)          # rolls .old back
+    assert os.path.exists(path) and not os.path.exists(path + ".old")
+    _assert_same_result(want, reopened.search(q, QuerySpec(k=3)))
+    # superseded copy (commit completed, cleanup crashed): GC'd on open
+    znorm_engine.save(str(tmp_path / "idx_b"))
+    os.makedirs(path + ".old")
+    UlisseEngine.open(path)
+    assert not os.path.exists(path + ".old")
+
+
+def test_save_refuses_to_replace_non_index_dir(znorm_engine, tmp_path):
+    """A misconfigured target (existing dir that is NOT an index) must
+    never be rmtree'd by a save."""
+    target = tmp_path / "precious"
+    target.mkdir()
+    (target / "data.txt").write_text("user files, not an index")
+    with pytest.raises(IndexFormatError, match="refusing to replace"):
+        znorm_engine.save(str(target))
+    assert (target / "data.txt").read_text() == "user files, not an index"
+    assert not os.path.exists(str(target) + ".tmp")
+    # replacing a real index stays allowed
+    path = str(tmp_path / "idx")
+    znorm_engine.save(path)
+    znorm_engine.save(path)
+    assert os.path.exists(os.path.join(path, "manifest.json"))
+
+
+def test_open_validates_version_and_params(znorm_engine, tmp_path):
+    path = str(tmp_path / "idx")
+    znorm_engine.save(path)
+    # params mismatch: loud, names the differing fields
+    bad = EnvelopeParams(znorm=True, **{**PARAMS, "lmin": 48})
+    with pytest.raises(IndexCompatibilityError, match="lmin"):
+        UlisseEngine.open(path, params=bad)
+    # matching params pass
+    good = EnvelopeParams(znorm=True, **PARAMS)
+    assert UlisseEngine.open(path, params=good).params == good
+    # unknown format version: loud
+    mf = os.path.join(path, "manifest.json")
+    with open(mf) as f:
+        manifest = json.load(f)
+    manifest["format_version"] = 99
+    with open(mf, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(IndexFormatError, match="version"):
+        UlisseEngine.open(path)
+    # not an index at all
+    with pytest.raises(IndexFormatError, match="not a ULISSE index"):
+        UlisseEngine.open(str(tmp_path / "nowhere"))
+
+
+def test_distributed_shard_save_restore(walk_collection, tmp_path):
+    mesh = jax.make_mesh((1,), ("data",))
+    p = EnvelopeParams(znorm=True, **PARAMS)
+    eng = UlisseEngine.distributed(mesh, p, walk_collection, max_batch=2)
+    q = walk_collection[5, 30:94]
+    spec = QuerySpec(k=5, verify_top=256)
+    want = eng.search(q, spec)
+    path = str(tmp_path / "dist")
+    eng.save(path)
+    reopened = UlisseEngine.open(path, mesh=mesh)
+    assert reopened.max_batch == 2          # manifest-carried
+    _assert_same_result(want, reopened.search(q, spec))
+    # a local save can be promoted onto a mesh (re-shard from raw)
+    local = UlisseEngine.from_collection(
+        Collection.from_array(walk_collection), p, **BUILD)
+    lpath = str(tmp_path / "loc")
+    local.save(lpath)
+    promoted = UlisseEngine.open(lpath, mesh=mesh)
+    got = promoted.search(q, spec)
+    np.testing.assert_allclose(got.dists, want.dists, atol=5e-3)
+    # a distributed save cannot be opened locally by accident
+    with pytest.raises(IndexFormatError, match="mesh"):
+        UlisseEngine.open(path)
