@@ -119,6 +119,48 @@ def bench_engine_batched():
         emit(f"engine_batched_B{B}", dt / B, f"qps={B / dt:.1f}")
 
 
+def bench_exact_scan():
+    """The tentpole metric: exact ED k-NN queries/sec through the
+    host-driven chunked scan vs the device-resident scan (fused
+    gather+verify kernels, on-device pool, one host sync per batch).
+    approx_first is off so both sides run the full pruned scan."""
+    import time
+    from repro.core import Collection, EnvelopeParams, QuerySpec, \
+        UlisseEngine
+
+    ns, n = 64, 256
+    data = np.cumsum(RNG.normal(size=(ns, n)), -1).astype(np.float32)
+    p = EnvelopeParams(lmin=96, lmax=160, gamma=16, seg_len=16,
+                       znorm=True)
+    engine = UlisseEngine.from_collection(Collection.from_array(data), p)
+    qlen, k = 128, 10
+    qs = [data[i % ns, 7:7 + qlen]
+          + RNG.normal(size=qlen).astype(np.float32) * 0.05
+          for i in range(8)]
+    specs = {"host": QuerySpec(k=k, approx_first=False,
+                               scan_backend="host"),
+             "device": QuerySpec(k=k, approx_first=False,
+                                 scan_backend="device")}
+    times = {}
+    for name, spec in specs.items():
+        for B in (1, 8):
+            engine.search(qs[:B], spec)      # warm compile caches
+            samples = []
+            for _ in range(5):
+                t0 = time.perf_counter()
+                engine.search(qs[:B], spec)
+                samples.append(time.perf_counter() - t0)
+            dt = float(np.median(samples))   # host path is sync-noisy
+            times[(name, B)] = dt
+            emit(f"exact_scan_{name}_B{B}", dt / B, f"qps={B / dt:.1f}")
+    from benchmarks.common import RESULTS
+    for B in (1, 8):
+        ratio = times[("host", B)] / max(times[("device", B)], 1e-12)
+        RESULTS[f"exact_scan_speedup_B{B}"] = {
+            "device_vs_host": round(ratio, 2)}
+        print(f"# exact_scan_speedup_B{B} = {ratio:.2f}x", flush=True)
+
+
 def bench_storage():
     """Persistence cost in the perf trajectory: streaming ingest
     throughput through the out-of-core Writer, save latency, cold-open
@@ -189,4 +231,5 @@ def bench_storage():
 
 
 ALL = [bench_mindist, bench_batch_ed, bench_lb_keogh, bench_dtw_band,
-       bench_envelope_build, bench_engine_batched, bench_storage]
+       bench_envelope_build, bench_engine_batched, bench_exact_scan,
+       bench_storage]

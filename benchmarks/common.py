@@ -40,7 +40,14 @@ def timer(fn: Callable, *args, repeats: int = 3, warmup: int = 1):
     return float(np.median(ts))
 
 
+# every emit() lands here too, so run.py can dump the whole run as JSON
+# (BENCH_kernels.json — the recorded perf trajectory)
+RESULTS: Dict[str, dict] = {}
+
+
 def emit(name: str, seconds: float, derived: str = ""):
+    RESULTS[name] = {"us_per_call": round(seconds * 1e6, 1),
+                     "derived": derived}
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
 
 

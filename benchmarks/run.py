@@ -17,6 +17,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark names")
+    ap.add_argument("--json", default="BENCH_kernels.json",
+                    help="write every emitted row to this JSON file "
+                         "(the recorded perf trajectory); '' disables")
     args = ap.parse_args()
 
     sys.path.insert(0, "/root/repo/src")
@@ -36,6 +39,28 @@ def main() -> None:
             failures += 1
             print(f"# {fn.__name__} FAILED:", flush=True)
             traceback.print_exc()
+    if args.json:
+        import json
+        import os
+
+        import jax
+
+        from benchmarks.common import RESULTS
+        # merge into the existing trajectory so a --only'd run refreshes
+        # its own rows without wiping everyone else's
+        merged = {}
+        if os.path.exists(args.json):
+            try:
+                with open(args.json) as f:
+                    merged = json.load(f).get("results", {})
+            except (OSError, ValueError):
+                merged = {}
+        merged.update(RESULTS)
+        with open(args.json, "w") as f:
+            json.dump({"backend": jax.default_backend(),
+                       "results": merged}, f, indent=2, sort_keys=True)
+        print(f"# wrote {len(RESULTS)} rows to {args.json} "
+              f"({len(merged)} total)", flush=True)
     if failures:
         sys.exit(1)
 

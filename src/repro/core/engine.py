@@ -47,6 +47,11 @@ class QuerySpec:
     mode:    "exact" (paper Alg. 5 guarantee) | "approx" (Alg. 4 descent).
     approx_first:   seed the exact scan with an approximate pass (Alg. 5
                     line 1; disable to measure the pure scan).
+    scan_backend:   "device" (default) runs the exact scan as one device
+                    program (fused gather+verify kernels, on-device k-NN
+                    pool, one host sync per query/batch); "host" keeps
+                    the chunked host-driven loop — the reference path
+                    the device scan is asserted equal against.
     chunk_size:     exact-scan verification chunk (envelopes per step).
     verify_top:     distributed per-shard verification batch (initial
                     value; the engine doubles it on certificate failure).
@@ -61,6 +66,7 @@ class QuerySpec:
     eps: Optional[float] = None
     mode: str = "exact"
     approx_first: bool = True
+    scan_backend: str = "device"
     chunk_size: int = 512
     verify_top: int = 128
     max_leaves: int = 8
@@ -71,6 +77,9 @@ class QuerySpec:
             raise ValueError(f"unknown measure {self.measure!r}")
         if self.mode not in ("exact", "approx"):
             raise ValueError(f"unknown mode {self.mode!r}")
+        if self.scan_backend not in ("device", "host"):
+            raise ValueError(
+                f"unknown scan_backend {self.scan_backend!r}")
         if self.measure == "dtw" and self.r <= 0:
             raise ValueError("DTW search needs a warping window r > 0")
         if self.k < 1:
@@ -88,10 +97,7 @@ class QuerySpec:
 
 
 def _pow2_bucket(qlen: int, cap: int) -> int:
-    b = 1
-    while b < qlen:
-        b <<= 1
-    return min(b, cap)
+    return min(executor.pow2ceil(qlen), cap)
 
 
 class UlisseEngine:
@@ -276,6 +282,11 @@ class UlisseEngine:
         single, qs = self._normalize_queries(queries)
         if self.is_distributed:
             results = self._search_distributed(qs, spec)
+        elif (len(qs) > 1 and not spec.is_range and spec.mode == "exact"
+                and spec.scan_backend == "device"):
+            # batched multi-query path: shared plan + one batched scan
+            # program (see executor._device_scan_core)
+            results = self._local_exact_device(qs, spec)
         else:
             results = [self._search_local(q, spec) for q in qs]
         return results[0] if single else results
@@ -299,20 +310,36 @@ class UlisseEngine:
             return self._local_range(q, spec)
         if spec.mode == "approx":
             return self._local_approx(q, spec)
+        if spec.scan_backend == "device":
+            return self._local_exact_device([q], spec)[0]
         return self._local_exact(q, spec)
 
     def _local_approx(self, q, spec: QuerySpec) -> SearchResult:
+        pool, stats, _ = self._local_approx_impl(q, spec)
+        return pool.result(stats)
+
+    def _local_approx_impl(self, q, spec: QuerySpec,
+                           pq: Optional[planner.PreparedQuery] = None):
         """Best-first descent over the block hierarchy (paper Alg. 4).
 
         Visits fine blocks ("leaves") in lower-bound order; stops when a
         leaf's lower bound exceeds the k-th bsf (=> answer already exact),
         capped at max_leaves.
+
+        Returns (pool, stats, verified) — the squared-distance pool (the
+        exact scan seeds from it directly; a sqrt->square round-trip
+        would perturb pruning at exact-tie boundaries), and the combined
+        candidate-set indices of every envelope verified (the device
+        scan excludes them instead of deduplicating its pool).
         """
         index = self._index
-        pq = planner.prepare_query(q, self.params, spec.measure, spec.r)
+        if pq is None:
+            pq = planner.prepare_query(q, self.params, spec.measure,
+                                       spec.r)
         stats = SearchStats(
             envelopes_total=int(index.search_envelopes().size))
         pool = TopK(spec.k)
+        verified: list = []
 
         # The ingestion delta has no block cover: sweep it exhaustively
         # up front (it is small pre-compaction).  This primes the bsf
@@ -328,14 +355,20 @@ class UlisseEngine:
                 executor.verify_envelopes(
                     index, pq, dvalid[start:start + spec.chunk_size],
                     pool, stats)
+            verified.append(dvalid)
 
         order, blk_lb = planner.plan_leaf_order(index, pq)
         stats.lb_computations += index.levels[-1].size
         block_size = index.envelopes.size // index.levels[-1].size
 
-        for leaf_rank in range(min(spec.max_leaves, len(order))):
+        n_leaves = min(spec.max_leaves, len(order))
+        exhausted = False
+        for leaf_rank in range(n_leaves):
             b = int(order[leaf_rank])
             if not np.isfinite(blk_lb[b]):
+                # blocks are LB-sorted: everything left is invalid, so
+                # every finite-LB leaf has been verified
+                exhausted = True
                 break
             if blk_lb[b] ** 2 >= pool.kth:
                 stats.exact_from_approx = True
@@ -343,36 +376,41 @@ class UlisseEngine:
             env_idx = np.arange(b * block_size, (b + 1) * block_size)
             valid = np.asarray(index.envelopes.valid)[env_idx]
             executor.verify_envelopes(index, pq, env_idx[valid], pool, stats)
+            verified.append(env_idx[valid])
             stats.leaves_visited += 1
             # NOTE deviation from Alg. 4 line 22: the paper stops after the
             # first non-improving leaf to save random disk I/O.  Batched
             # device leaves are cheap and the quantized block bounds tie at
             # zero often, so we keep visiting up to max_leaves — strictly
             # better answers for the same asymptotics (see DESIGN.md §3).
-        return pool.result(stats)
+        else:
+            exhausted = (n_leaves == len(order)
+                         or not np.isfinite(blk_lb[int(order[n_leaves])]))
+        if exhausted:
+            # the descent ran out of finite-LB leaves: every valid block
+            # (and the delta) has been verified, so the answer is
+            # provably exact and the exact scan can be skipped entirely
+            stats.exact_from_approx = True
+        ver = (np.concatenate(verified).astype(np.int64) if verified
+               else np.zeros((0,), np.int64))
+        return pool, stats, ver
 
     def _local_exact(self, q, spec: QuerySpec) -> SearchResult:
         """Exact k-NN: approximate pass for a bsf, then the LB-sorted
         chunked scan over the flat envelope list with bsf pruning
-        (paper Alg. 5)."""
+        (paper Alg. 5) — the host-driven reference path."""
         index = self._index
         pq = planner.prepare_query(q, self.params, spec.measure, spec.r)
-        stats = SearchStats(
-            envelopes_total=int(index.search_envelopes().size))
-        pool = TopK(spec.k)
-
         if spec.approx_first:
-            a = self._local_approx(q, spec)
-            stats.leaves_visited = a.stats.leaves_visited
-            stats.envelopes_checked = a.stats.envelopes_checked
-            stats.true_dist_computations = a.stats.true_dist_computations
-            stats.dtw_lb_keogh = a.stats.dtw_lb_keogh
-            stats.dtw_full = a.stats.dtw_full
-            stats.lb_computations = a.stats.lb_computations
-            pool.push(a.dists ** 2, a.series, a.offsets)
-            if a.stats.exact_from_approx:
-                stats.exact_from_approx = True
+            # thread the approx pass's squared pool straight through —
+            # re-pushing sqrt(d2)**2 perturbs exact-tie pruning
+            pool, stats, _ = self._local_approx_impl(q, spec, pq)
+            if stats.exact_from_approx:
                 return pool.result(stats)
+        else:
+            stats = SearchStats(
+                envelopes_total=int(index.search_envelopes().size))
+            pool = TopK(spec.k)
 
         order, lbs_sorted = planner.plan_scan_order(index, pq,
                                                     spec.use_paa_bounds)
@@ -394,6 +432,84 @@ class UlisseEngine:
             stats.chunks_visited += 1
             pos = end
         return pool.result(stats)
+
+    def _local_exact_device(self, qs, spec: QuerySpec):
+        """Exact k-NN via the device-resident scan (one program, one
+        host sync per same-length batch; see executor.device_exact_scan).
+
+        The approximate pass still runs host-side per query (it is a
+        handful of leaves); its squared pool seeds the device pool and
+        its verified envelopes are excluded from the scan order, so the
+        dedup-free device pool never sees a subsequence twice.  Queries
+        whose certificate already proves exactness skip the scan.
+        """
+        index = self._index
+        k, g = spec.k, self.params.gamma + 1
+        results: List[Optional[SearchResult]] = [None] * len(qs)
+        by_len = {}
+        for i, q in enumerate(qs):
+            by_len.setdefault(len(q), []).append(i)
+        for qlen, idxs in sorted(by_len.items()):
+            rows = []      # (query index, pq, stats, seed pool, exclude)
+            for i in idxs:
+                pq = planner.prepare_query(qs[i], self.params,
+                                           spec.measure, spec.r)
+                if spec.approx_first:
+                    pool, stats, ver = self._local_approx_impl(qs[i],
+                                                               spec, pq)
+                    if stats.exact_from_approx:
+                        results[i] = pool.result(stats)
+                        continue
+                else:
+                    pool = TopK(spec.k)
+                    stats = SearchStats(envelopes_total=int(
+                        index.search_envelopes().size))
+                    ver = np.zeros((0,), np.int64)
+                rows.append((i, pq, stats, pool, ver))
+            if not rows:
+                continue
+            b = len(rows)
+            seed_d2 = np.full((b, k), np.inf, np.float32)
+            seed_sid = np.full((b, k), -1, np.int32)
+            seed_off = np.full((b, k), -1, np.int32)
+            for row, (_, _, _, pool, _) in enumerate(rows):
+                m = len(pool.d)
+                seed_d2[row, :m] = pool.d
+                seed_sid[row, :m] = pool.s
+                seed_off[row, :m] = pool.o
+            plan = planner.pack_scan_plan(
+                index, [pq for _, pq, _, _, _ in rows],
+                spec.use_paa_bounds,
+                exclude=[ver for _, _, _, _, ver in rows])
+            qstack = jnp.stack([pq.q for _, pq, _, _, _ in rows])
+            if spec.measure == "dtw":
+                dlo = jnp.stack([pq.dtw_lo for _, pq, _, _, _ in rows])
+                dhi = jnp.stack([pq.dtw_hi for _, pq, _, _, _ in rows])
+            else:
+                dlo = dhi = qstack
+            d2, sid, off, st = executor.device_exact_scan(
+                index.collection, plan.sids, plan.anchors,
+                plan.n_master, plan.lbs2, qstack, dlo, dhi,
+                seed_d2, seed_sid, seed_off, k=k, g=g,
+                measure=spec.measure, r=spec.r, znorm=self.params.znorm,
+                chunk_size=spec.chunk_size)
+            for row, (i, _, stats, _, _) in enumerate(rows):
+                stats.lb_computations += plan.n_env
+                stats.chunks_visited += int(st[row, 0])
+                stats.envelopes_checked += int(st[row, 1])
+                stats.true_dist_computations += int(st[row, 2])
+                stats.dtw_lb_keogh += int(st[row, 3])
+                stats.dtw_full += int(st[row, 4])
+                # drop unfilled seed rows (sid -1): with k > candidates
+                # the pool keeps +inf filler, which must not surface as
+                # phantom neighbors (the host pool returns < k rows too)
+                filled = sid[row] >= 0
+                results[i] = SearchResult(
+                    dists=np.sqrt(np.maximum(d2[row][filled], 0.0)),
+                    series=sid[row][filled].astype(np.int64),
+                    offsets=off[row][filled].astype(np.int64),
+                    stats=stats)
+        return results
 
     def _local_range(self, q, spec: QuerySpec) -> SearchResult:
         """All subsequences within eps of Q (Alg. 5 with bsf := eps)."""

@@ -17,7 +17,7 @@ Like the planner, two shape regimes coexist:
 from __future__ import annotations
 
 import dataclasses
-import math
+import functools
 from functools import partial
 from typing import Optional
 
@@ -27,6 +27,9 @@ import numpy as np
 
 from repro.core import dtw
 from repro.core.paa import masked_znormalize, znormalize
+from repro.kernels.common import default_interpret
+from repro.kernels.fused_verify import (fused_gather_ed,
+                                        fused_gather_lb_keogh)
 
 
 # --------------------------------------------------------------------------
@@ -82,12 +85,13 @@ class TopK:
         s = np.concatenate([self.s, np.asarray(s, np.int64)])
         o = np.concatenate([self.o, np.asarray(o, np.int64)])
         # dedup (sid, off): the approx phase and the exact scan may verify
-        # the same envelope; a subsequence must appear in the pool once
-        key = s * (1 << 32) + o
-        order = np.lexsort((d, key))
-        key, d, s, o = key[order], d[order], s[order], o[order]
-        first = np.ones(len(key), bool)
-        first[1:] = key[1:] != key[:-1]
+        # the same envelope; a subsequence must appear in the pool once.
+        # lexsort on the raw columns — a packed s * 2^32 + o key silently
+        # collides/overflows once sid >= 2^31 or off >= 2^32
+        order = np.lexsort((d, o, s))
+        d, s, o = d[order], s[order], o[order]
+        first = np.ones(len(d), bool)
+        first[1:] = (s[1:] != s[:-1]) | (o[1:] != o[:-1])
         d, s, o = d[first], s[first], o[first]
         order = np.argsort(d, kind="stable")[: self.k]
         self.d, self.s, self.o = d[order], s[order], o[order]
@@ -249,12 +253,17 @@ def verify_envelopes(index, pq, env_idx: np.ndarray, pool: TopK,
         lb2 = np.asarray(lb2, np.float64)
         lb2[~ok_np] = np.inf
         stats.dtw_lb_keogh += int(ok_np.sum())
-        cut = pool.kth if eps2 is None else eps2
-        survivors = np.nonzero(lb2 < cut)[0]
+        # k-NN prunes strictly (lb == kth cannot improve the pool), but
+        # range queries collect d2 <= eps2, and lb <= d — a strict cut
+        # would drop true boundary hits with lb == d == eps
+        if eps2 is None:
+            survivors = np.nonzero(lb2 < pool.kth)[0]
+        else:
+            survivors = np.nonzero(lb2 <= eps2)[0]
         d2 = np.full(lb2.shape, np.inf)
         if len(survivors) > 0:
             # pad survivors to a pow2 bucket to bound recompilation
-            m = 1 << max(int(math.ceil(math.log2(len(survivors)))), 0)
+            m = pow2ceil(len(survivors))
             pad = np.concatenate([survivors,
                                   np.full(m - len(survivors), survivors[0])])
             dd = np.asarray(dtw_batch(wn[jnp.asarray(pad)], pq.q, pq.r,
@@ -270,3 +279,198 @@ def verify_envelopes(index, pq, env_idx: np.ndarray, pool: TopK,
                                        d2[hit]], axis=1))
     else:
         pool.push(d2, all_sids, offs_np)
+
+
+# --------------------------------------------------------------------------
+# device-resident exact scan (paper Alg. 5 as ONE device program)
+# --------------------------------------------------------------------------
+#
+# The host-driven loop above syncs device->host once per chunk and re-sorts
+# a numpy pool on every push.  The device scan instead carries a (k,)
+# squared-distance pool + (sid, off) codes through a lax.while_loop over
+# pow2-padded LB-sorted chunks: each step gathers + verifies one chunk via
+# the fused Pallas kernels (kernels/fused_verify.py), prunes against the
+# running kth bound on device, and merges with one lax.top_k.  The only
+# host sync is the final pool readback — one per query (or per batch, on
+# the vmapped multi-query path).
+
+def pow2ceil(x: int) -> int:
+    b = 1
+    while b < x:
+        b <<= 1
+    return b
+
+
+def _device_scan_core(data, csum, csum2, center, sids, anchors, n_master,
+                      lbs2, qs, dtw_lo, dtw_hi, seed_d2, seed_sid,
+                      seed_off, *, k: int, g: int, chunk: int,
+                      znorm: bool, measure: str, r: int, sb: int,
+                      interpret: bool):
+    """The natively-batched LB-sorted bsf-pruned scan.
+
+    All per-query arrays carry a leading batch axis B — the loop is NOT
+    vmapped: every chunk step verifies the i-th chunk of all still-
+    active queries through one fused-kernel launch (grid = B), so the
+    batch vectorizes inside the program instead of replaying it per
+    lane.  Queries whose scan has converged keep looping with their
+    candidates masked to +inf (merge no-ops) until the whole batch is
+    done — per-query early exit costs masked work, not host syncs.
+
+    sids/anchors/n_master/lbs2 (B, n_pad) are each query's candidate
+    envelopes in ascending lower-bound order, padded to a multiple of
+    `chunk` (padding rows carry lbs2 = +inf).  seed_* (B, k) is the
+    pool from the approximate pass (ascending d2, +inf filler) — seeded
+    envelopes must already be excluded from the scan order, so the pool
+    never sees a (sid, off) twice and needs no dedup.
+    """
+    n = data.shape[1]
+    b_sz, qlen = qs.shape
+    n_pad = sids.shape[1]
+    n_chunks = n_pad // chunk
+    joff = jnp.arange(g, dtype=jnp.int32)
+
+    def merge(pool, cd2, csid, coff):
+        # pool (B, k) each; candidates (B, M); keeps rows sorted by d2,
+        # incumbents win ties (they come first in the concatenation)
+        pd2, psid, poff = pool
+        alld = jnp.concatenate([pd2, cd2], axis=1)
+        alls = jnp.concatenate([psid, csid], axis=1)
+        allo = jnp.concatenate([poff, coff], axis=1)
+        neg, sel = jax.lax.top_k(-alld, k)
+        return (-neg, jnp.take_along_axis(alls, sel, axis=1),
+                jnp.take_along_axis(allo, sel, axis=1))
+
+    def active_at(i, pool):
+        first = jax.lax.dynamic_slice_in_dim(
+            lbs2, jnp.minimum(i * chunk, n_pad - 1), 1, axis=1)[:, 0]
+        return ((i < n_chunks) & jnp.isfinite(first)
+                & (first < pool[0][:, k - 1]))
+
+    def body(state):
+        i, pool, nchunks, checked, tdist, nlbk, ndtw = state
+        active = active_at(i, pool)
+        nchunks = nchunks + active.astype(jnp.int32)
+        csid = jax.lax.dynamic_slice_in_dim(sids, i * chunk, chunk, 1)
+        canc = jax.lax.dynamic_slice_in_dim(anchors, i * chunk, chunk, 1)
+        cnm = jax.lax.dynamic_slice_in_dim(n_master, i * chunk, chunk, 1)
+        clb2 = jax.lax.dynamic_slice_in_dim(lbs2, i * chunk, chunk, 1)
+        kth = pool[0][:, k - 1]
+        keep = (clb2 < kth[:, None]) & active[:, None]  # bsf pruning
+        offs = canc[:, :, None] + joff[None, None, :]   # (B, chunk, g)
+        ok = ((joff[None, None, :] < cnm[:, :, None]) & (offs + qlen <= n)
+              & keep[:, :, None]).reshape(b_sz, chunk * g)
+        cand_sid = jnp.repeat(csid, g, axis=1)
+        cand_off = offs.reshape(b_sz, chunk * g)
+        checked = checked + jnp.sum(keep, axis=1, dtype=jnp.int32)
+        if measure == "ed":
+            d2 = fused_gather_ed(data, csum, csum2, center,
+                                 csid.reshape(-1), canc.reshape(-1),
+                                 qs, g=g, rows=chunk, znorm=znorm,
+                                 interpret=interpret)
+            d2 = jnp.where(ok, d2.reshape(b_sz, chunk * g), jnp.inf)
+            pool = merge(pool, d2, cand_sid, cand_off)
+            tdist = tdist + jnp.sum(ok, axis=1, dtype=jnp.int32)
+        else:
+            lb2w, mu, sd = fused_gather_lb_keogh(
+                data, csum, csum2, center, csid.reshape(-1),
+                canc.reshape(-1), dtw_lo, dtw_hi, g=g, rows=chunk,
+                znorm=znorm, interpret=interpret)
+            lb2w = jnp.where(ok, lb2w.reshape(b_sz, chunk * g), jnp.inf)
+            mu = mu.reshape(b_sz, chunk * g)
+            sd = sd.reshape(b_sz, chunk * g)
+            nlbk = nlbk + jnp.sum(ok, axis=1, dtype=jnp.int32)
+            # masked survivor buckets: pack LB survivors to the front,
+            # run the banded DP bucket by bucket, stop when every
+            # query's packed prefix is exhausted — static shapes,
+            # data-dependent work
+            surv = lb2w < kth[:, None]
+            nsurv = jnp.sum(surv, axis=1, dtype=jnp.int32)
+            sidx = jnp.argsort(~surv, axis=1)   # stable: survivors first
+
+            def inner_body(st):
+                j, ipool, indtw = st
+                pos = j * sb + jnp.arange(sb)
+                bi = jnp.take_along_axis(
+                    sidx, jnp.minimum(pos, chunk * g - 1)[None, :]
+                    .repeat(b_sz, 0), axis=1)       # (B, sb)
+                bs = jnp.take_along_axis(cand_sid, bi, axis=1)
+                bo = jnp.take_along_axis(cand_off, bi, axis=1)
+                flat = (bs[:, :, None] * n
+                        + jnp.clip(bo, 0, n - qlen)[:, :, None]
+                        + jnp.arange(qlen, dtype=jnp.int32))
+                wb = jnp.take(data.reshape(-1), flat, mode="clip")
+                if znorm:
+                    # normalize EXACTLY as the LB tier did (kernel mu/sd)
+                    # so LB_Keogh <= DTW holds bitwise on survivors
+                    wb = ((wb - jnp.take_along_axis(mu, bi, 1)[..., None])
+                          / jnp.take_along_axis(sd, bi, 1)[..., None])
+                db = jax.vmap(lambda q1, c: dtw.dtw_band(
+                    q1, c, r, squared=True))(qs, wb)
+                m = pos[None, :] < nsurv[:, None]
+                ipool = merge(ipool, jnp.where(m, db, jnp.inf), bs, bo)
+                return (j + 1, ipool,
+                        indtw + jnp.sum(m, axis=1, dtype=jnp.int32))
+
+            _, pool, ndtw = jax.lax.while_loop(
+                lambda st: jnp.any(st[0] * sb < nsurv), inner_body,
+                (jnp.int32(0), pool, ndtw))
+            tdist = tdist + nsurv
+        return i + 1, pool, nchunks, checked, tdist, nlbk, ndtw
+
+    def cond(state):
+        return jnp.any(active_at(state[0], state[1]))
+
+    zeros = jnp.zeros((b_sz,), jnp.int32)
+    state = (jnp.int32(0), (seed_d2, seed_sid, seed_off), zeros, zeros,
+             zeros, zeros, zeros)
+    (_, pool, nchunks, checked, tdist, nlbk,
+     ndtw) = jax.lax.while_loop(cond, body, state)
+    return pool[0], pool[1], pool[2], jnp.stack(
+        [nchunks, checked, tdist, nlbk, ndtw], axis=1)
+
+
+@functools.lru_cache(maxsize=None)
+def _device_scan_program(k: int, g: int, chunk: int, znorm: bool,
+                         measure: str, r: int, sb: int, interpret: bool):
+    """Compiled batched scan for one static config (cached)."""
+    core = functools.partial(_device_scan_core, k=k, g=g, chunk=chunk,
+                             znorm=znorm, measure=measure, r=r, sb=sb,
+                             interpret=interpret)
+    return jax.jit(core)
+
+
+def device_exact_scan(collection, sids, anchors, n_master, lbs2, qs,
+                      dtw_lo, dtw_hi, seed_d2, seed_sid, seed_off, *,
+                      k: int, g: int, measure: str, r: int, znorm: bool,
+                      chunk_size: int, interpret: Optional[bool] = None):
+    """Batched device-resident exact scan; one host sync for the batch.
+
+    `collection` supplies the raw series plus the precomputed centered
+    prefix sums the fused kernels derive window stats from.  All
+    per-query arrays carry a leading batch axis B (B = 1 for a single
+    query): sids/anchors/n_master/lbs2 are (B, n_pad) LB-sorted padded
+    candidate rows (see planner.pack_scan_plan), qs/dtw_lo/dtw_hi
+    (B, qlen) prepared queries (for ED pass qs in the dtw slots — they
+    are ignored), seed_* the (B, k) pools from the approximate pass.
+
+    Returns host arrays (d2 (B, k) f64 ascending, sid/off (B, k) i64,
+    stats (B, 5) int32 = [chunks, envelopes_checked, true_dists,
+    lb_keogh, dtw_full]).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n_pad = sids.shape[1]
+    chunk = min(pow2ceil(chunk_size), n_pad)
+    sb = min(128, chunk * g)
+    fn = _device_scan_program(k, g, chunk, znorm, measure, r, sb,
+                              interpret)
+    d2, sid, off, st = fn(
+        collection.data, collection.csum, collection.csum2,
+        collection.center,
+        jnp.asarray(sids, jnp.int32), jnp.asarray(anchors, jnp.int32),
+        jnp.asarray(n_master, jnp.int32), jnp.asarray(lbs2, jnp.float32),
+        jnp.asarray(qs, jnp.float32), jnp.asarray(dtw_lo, jnp.float32),
+        jnp.asarray(dtw_hi, jnp.float32), jnp.asarray(seed_d2, jnp.float32),
+        jnp.asarray(seed_sid, jnp.int32), jnp.asarray(seed_off, jnp.int32))
+    return (np.asarray(d2, np.float64), np.asarray(sid, np.int64),
+            np.asarray(off, np.int64), np.asarray(st, np.int32))

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bounds, dtw
+from repro.core.executor import pow2ceil
 from repro.core.paa import masked_znormalize, paa, znormalize
 from repro.core.types import EnvelopeParams, EnvelopeSet
 
@@ -87,6 +88,23 @@ def env_lower_bounds(paa_lo, paa_hi, env: EnvelopeSet, breakpoints,
     return jnp.where(env.valid, d, jnp.inf)
 
 
+@partial(jax.jit, static_argnames=("seg_len", "nseg", "use_paa"))
+def env_lower_bounds_batch(paa_lo, paa_hi, env: EnvelopeSet, breakpoints,
+                           seg_len: int, nseg: int, use_paa: bool):
+    """Lower bounds of a stacked (B, w) query batch to every envelope.
+
+    The envelope-side intervals (breakpoint lookups) are computed once
+    and shared across the batch — the "shared plan" of the batched
+    local backend.  Returns (B, N).
+    """
+    if use_paa:
+        e_lo, e_hi = env.paa_lo, env.paa_hi
+    else:
+        e_lo, e_hi = bounds.envelope_breakpoint_bounds(env, breakpoints)
+    d = bounds.interval_mindist(paa_lo, paa_hi, e_lo, e_hi, seg_len, nseg)
+    return jnp.where(env.valid[None, :], d, jnp.inf)
+
+
 @partial(jax.jit, static_argnames=("seg_len", "nseg"))
 def block_lower_bounds(paa_lo, paa_hi, blk_lo, blk_hi, blk_valid,
                        seg_len: int, nseg: int):
@@ -124,6 +142,64 @@ def plan_scan_order(index, pq: PreparedQuery,
         index.params.seg_len, pq.nseg, use_paa_bounds), np.float64)
     order = np.argsort(lbs)
     return order, lbs[order]
+
+
+@dataclasses.dataclass
+class ScanPlan:
+    """Packed input of the device-resident exact scan (one qlen group).
+
+    All arrays are (B, n_pad): per query, the full candidate set (main
+    ++ ingestion delta) in ascending lower-bound order, right-padded to
+    a power of two so the scan's chunk loop never re-specializes on the
+    exact envelope count.  Padding / invalid / excluded rows carry
+    lbs2 = +inf, which the scan's bsf cut prunes for free.
+    """
+
+    sids: np.ndarray       # (B, n_pad) int32
+    anchors: np.ndarray    # (B, n_pad) int32
+    n_master: np.ndarray   # (B, n_pad) int32
+    lbs2: np.ndarray       # (B, n_pad) float32 squared sorted LBs
+    n_env: int             # true candidate count (LB computations / query)
+
+
+def pack_scan_plan(index, pqs, use_paa_bounds: bool = False,
+                   exclude=None) -> ScanPlan:
+    """LB-sort + pack the candidate set for a batch of same-length queries.
+
+    `exclude`: optional per-query arrays of combined-set envelope indices
+    to drop from the scan (already verified by the approximate pass —
+    the device pool has no dedup, so seeded envelopes must not be
+    scanned again).
+    """
+    env = index.search_envelopes()
+    n = env.size
+    qb = jnp.stack([pq.paa_lo for pq in pqs])
+    qh = jnp.stack([pq.paa_hi for pq in pqs])
+    lbs = np.asarray(env_lower_bounds_batch(
+        qb, qh, env, index.breakpoints, index.params.seg_len,
+        pqs[0].nseg, use_paa_bounds), np.float64)        # (B, n)
+    if exclude is not None:
+        for b, excl in enumerate(exclude):
+            if len(excl):
+                lbs[b, excl] = np.inf
+    order = np.argsort(lbs, axis=1)
+    lbs_sorted = np.take_along_axis(lbs, order, axis=1)
+    pad = pow2ceil(n) - n
+
+    def pack(col, fill):
+        out = np.asarray(col)[order]
+        if pad:
+            out = np.pad(out, ((0, 0), (0, pad)), constant_values=fill)
+        return out.astype(np.int32)
+
+    lbs2 = (lbs_sorted ** 2).astype(np.float32)
+    if pad:
+        lbs2 = np.pad(lbs2, ((0, 0), (0, pad)),
+                      constant_values=np.inf)
+    return ScanPlan(sids=pack(env.series_id, 0),
+                    anchors=pack(env.anchor, 0),
+                    n_master=pack(env.n_master, 0),
+                    lbs2=lbs2, n_env=n)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,228 @@
+"""Pallas kernels: fused candidate-window gather + verification.
+
+The host-driven exact scan gathers candidate windows into an (M, qlen)
+HBM array (`executor.gather_windows`) and then runs a separate distance
+kernel over it.  The device-resident scan (`executor.device_exact_scan`)
+instead calls these kernels inside its `lax.while_loop`; the candidate
+windows never exist as an HBM (let alone host) array.  Three ideas make
+the fusion fast:
+
+  * region gather — an envelope's g = gamma+1 candidate windows overlap
+    pairwise in qlen-1 points, so each grid step gathers ONE
+    (rows, qlen+g-1) region slab per chunk instead of g full windows
+    per envelope (a ~g-fold cut in gather traffic);
+  * banded-Toeplitz correlation — the per-offset query dots
+    dots[e, j] = sum_t region[e, j+t] * q[t] are one (rows, reg) @
+    (reg, g) matmul against a banded Toeplitz expansion of the query
+    (MXU-shaped, ~reg*g flops per envelope, no im2col materialization);
+  * prefix-sum window stats — per-window mean/std come from the
+    Collection's precomputed centered csum/csum2 (paper Alg. 2's
+    accSum/accSqSum) as two O(1) gathers per window, not an O(qlen)
+    reduction.
+
+Two fusions cover the ED / DTW cascade: `fused_gather_ed` finishes with
+the dot-product ED identity; `fused_gather_lb_keogh` normalizes each
+region window in place, accumulates squared LB_Keogh per offset, and
+also emits the per-window (mu, sd) so the banded-DP tier can normalize
+its survivor windows IDENTICALLY — the LB <= DTW invariant then holds
+exactly (both tiers see the same normalized values), which is what makes
+on-device pruning sound.
+
+The stats path makes the device scan's distances differ from the
+host path's direct mean/var by ~1e-5 relative (documented deviation,
+DESIGN.md §8); both are unbiased float32 evaluations of the same
+quantity.  `data`/`csum` are mapped whole into the kernel — fine for
+VMEM-sized collections; TPU-scale collections would block the series
+axis with double-buffered DMA and lower the flat gathers to
+scalar-prefetch driven DMAs (interpret-first, like the rest of
+kernels/).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def toeplitz_query(qs: jnp.ndarray, g: int) -> jnp.ndarray:
+    """Banded Toeplitz expansion: qmat[b, i, j] = q_b[i - j] (else 0).
+
+    (B, qlen) -> (B, qlen+g-1, g); region @ qmat computes all g window
+    dots at once.  Query-only, so the scan hoists it out of its chunk
+    loop.
+    """
+    qlen = qs.shape[-1]
+    reg = qlen + g - 1
+    i = jnp.arange(reg)[:, None]
+    j = jnp.arange(g)[None, :]
+    qpad = jnp.concatenate(
+        [qs, jnp.zeros(qs.shape[:-1] + (1,), qs.dtype)], -1)
+    idx = jnp.where((i >= j) & (i - j < qlen), i - j, qlen)
+    return jnp.take(qpad, idx, axis=-1)
+
+
+def _gather_regions(sid_ref, anc_ref, data_ref, *, g: int, qlen: int,
+                    rows: int):
+    """The grid step's (rows, qlen+g-1) region slab, one flat gather.
+
+    Regions are NOT clamped: a region overrunning its series reads into
+    the next row (or clips at the array end) — windows there are garbage
+    and the caller masks them via the usual (j < n_master) &
+    (off + qlen <= n) test.
+    """
+    b = pl.program_id(0)
+    n = data_ref.shape[1]
+    reg = qlen + g - 1
+    sid = sid_ref[pl.ds(b * rows, rows)]                     # (rows,)
+    anc = anc_ref[pl.ds(b * rows, rows)]
+    flat = (sid[:, None] * n + anc[:, None]
+            + jnp.arange(reg, dtype=jnp.int32))
+    slab = jnp.take(data_ref[...].reshape(-1), flat.reshape(-1),
+                    mode="clip")
+    return sid, anc, slab.reshape(rows, reg)
+
+
+def _window_sums(sid, anc, csum_ref, csum2_ref, *, g: int, qlen: int):
+    """(s1, s2): centered window sums of every candidate, two gathers."""
+    np1 = csum_ref.shape[1]
+    n = np1 - 1
+    offs = jnp.clip(anc[:, None] + jnp.arange(g, dtype=jnp.int32), 0,
+                    n - qlen)
+    flat = sid[:, None] * np1 + offs
+    cs = csum_ref[...].reshape(-1)
+    cs2 = csum2_ref[...].reshape(-1)
+    s1 = (jnp.take(cs, flat + qlen, mode="clip")
+          - jnp.take(cs, flat, mode="clip"))
+    s2 = (jnp.take(cs2, flat + qlen, mode="clip")
+          - jnp.take(cs2, flat, mode="clip"))
+    return s1, s2                                            # (rows, g)
+
+
+def _fused_ed_kernel(sid_ref, anc_ref, data_ref, csum_ref, csum2_ref,
+                     center_ref, q_ref, qmat_ref, out_ref, *, g: int,
+                     qlen: int, rows: int, znorm: bool):
+    sid, anc, region = _gather_regions(sid_ref, anc_ref, data_ref, g=g,
+                                       qlen=qlen, rows=rows)
+    dots = region @ qmat_ref[0]                              # (rows, g)
+    s1, s2 = _window_sums(sid, anc, csum_ref, csum2_ref, g=g, qlen=qlen)
+    if znorm:
+        mu_c = s1 / qlen
+        var = s2 / qlen - mu_c * mu_c
+        sd = jnp.maximum(jnp.sqrt(jnp.maximum(var, 0.0)), 1e-8)
+        d2 = 2.0 * qlen - 2.0 * dots / sd
+    else:
+        c = jnp.take(center_ref[...], sid)[:, None]          # (rows, 1)
+        wss = s2 + 2.0 * c * s1 + qlen * c * c  # un-centered sum(w^2)
+        q = q_ref[0]
+        d2 = wss - 2.0 * dots + jnp.sum(q * q)
+    out_ref[...] = jnp.maximum(d2, 0.0)
+
+
+def _fused_lb_keogh_kernel(sid_ref, anc_ref, data_ref, csum_ref,
+                           csum2_ref, center_ref, lo_ref, hi_ref,
+                           lb_ref, mu_ref, sd_ref, *, g: int, qlen: int,
+                           rows: int, znorm: bool):
+    sid, anc, region = _gather_regions(sid_ref, anc_ref, data_ref, g=g,
+                                       qlen=qlen, rows=rows)
+    s1, s2 = _window_sums(sid, anc, csum_ref, csum2_ref, g=g, qlen=qlen)
+    if znorm:
+        mu_c = s1 / qlen
+        var = s2 / qlen - mu_c * mu_c
+        sd = jnp.maximum(jnp.sqrt(jnp.maximum(var, 0.0)), 1e-8)
+        mu = mu_c + jnp.take(center_ref[...], sid)[:, None]
+    else:
+        mu = jnp.zeros_like(s1)
+        sd = jnp.ones_like(s1)
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    cols = []
+    for j in range(g):   # static offsets: region slices, no gather
+        w = (region[:, j:j + qlen] - mu[:, j, None]) / sd[:, j, None]
+        over = jnp.maximum(w - hi[None, :], 0.0)
+        under = jnp.maximum(lo[None, :] - w, 0.0)
+        cols.append(jnp.sum(over * over + under * under, axis=-1))
+    lb_ref[...] = jnp.stack(cols, axis=1)                    # (rows, g)
+    mu_ref[...] = mu
+    sd_ref[...] = sd
+
+
+def _common_specs(data, csum, center, qlen):
+    return [
+        pl.BlockSpec(data.shape, lambda i, *_: (0, 0)),
+        pl.BlockSpec(csum.shape, lambda i, *_: (0, 0)),
+        pl.BlockSpec(csum.shape, lambda i, *_: (0, 0)),
+        pl.BlockSpec(center.shape, lambda i, *_: (0,)),
+        pl.BlockSpec((1, qlen), lambda i, *_: (i, 0)),
+        pl.BlockSpec((1, qlen), lambda i, *_: (i, 0)),
+    ]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("g", "rows", "znorm", "interpret"))
+def fused_gather_ed(data: jnp.ndarray, csum: jnp.ndarray,
+                    csum2: jnp.ndarray, center: jnp.ndarray,
+                    sids: jnp.ndarray, anchors: jnp.ndarray,
+                    qs: jnp.ndarray, *, g: int, rows: int, znorm: bool,
+                    interpret: bool = True):
+    """Squared ED of B queries' candidate chunks, one grid step each.
+
+    data (S, n) + its Collection prefix sums csum/csum2 (S, n+1) and
+    per-series center (S,); sids/anchors (B * rows,) int32 — query b's
+    chunk is rows [b*rows, (b+1)*rows); qs (B, qlen) prepared queries
+    (already Z-normalized when znorm).  Returns (B * rows, g) float32 —
+    entry (e, j) is d2(q_b, data[sids[e], anchors[e]+j : +qlen]);
+    windows overrunning their series are garbage (mask with the
+    validity test).
+    """
+    b, qlen = qs.shape
+    qmats = toeplitz_query(qs, g)                # (B, qlen+g-1, g)
+    reg = qlen + g - 1
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b,),
+        in_specs=_common_specs(data, csum, center, qlen)[:5]
+        + [pl.BlockSpec((1, reg, g), lambda i, *_: (i, 0, 0))],
+        out_specs=pl.BlockSpec((rows, g), lambda i, *_: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_ed_kernel, g=g, qlen=qlen, rows=rows,
+                          znorm=znorm),
+        out_shape=jax.ShapeDtypeStruct((b * rows, g), jnp.float32),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(sids, anchors, data, csum, csum2, center, qs, qmats)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("g", "rows", "znorm", "interpret"))
+def fused_gather_lb_keogh(data: jnp.ndarray, csum: jnp.ndarray,
+                          csum2: jnp.ndarray, center: jnp.ndarray,
+                          sids: jnp.ndarray, anchors: jnp.ndarray,
+                          dtw_lo: jnp.ndarray, dtw_hi: jnp.ndarray, *,
+                          g: int, rows: int, znorm: bool,
+                          interpret: bool = True):
+    """Fused gather + normalize + squared LB_Keogh, one step per query.
+
+    Layout as in fused_gather_ed; dtw_lo/dtw_hi are the (B, qlen) query
+    DTW envelopes.  Returns (lb2, mu, sd) each (B * rows, g) float32 —
+    mu/sd are the window normalization the banded-DP tier must reuse on
+    LB survivors so its distances can never undercut the bound (raw
+    mode returns mu=0 / sd=1).
+    """
+    b, qlen = dtw_lo.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b,),
+        in_specs=_common_specs(data, csum, center, qlen),
+        out_specs=[pl.BlockSpec((rows, g), lambda i, *_: (i, 0))] * 3,
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_lb_keogh_kernel, g=g, qlen=qlen,
+                          rows=rows, znorm=znorm),
+        out_shape=[jax.ShapeDtypeStruct((b * rows, g), jnp.float32)] * 3,
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(sids, anchors, data, csum, csum2, center, dtw_lo, dtw_hi)

@@ -95,6 +95,58 @@ def envelope_scan_ref(segmean, s1, s2, offsets, n: int, lmin: int,
     return lo, hi
 
 
+def _gather_candidates_ref(data, sids, anchors, g: int, qlen: int):
+    """Candidate windows of R envelopes (the semantic ground truth: the
+    exact in-series window of every VALID candidate; entries whose
+    window overruns the series are clamped — the fused kernels produce
+    garbage there instead, so tests must mask them)."""
+    n = data.shape[1]
+    offs = anchors[:, None] + jnp.arange(g, dtype=jnp.int32)[None, :]
+    offs_c = jnp.clip(offs, 0, n - qlen)
+
+    def one(sid, off):
+        return jax.lax.dynamic_slice(data, (sid, off), (1, qlen))[0]
+
+    wins = jax.vmap(jax.vmap(one, in_axes=(None, 0)),
+                    in_axes=(0, 0))(sids, offs_c)
+    return wins.reshape(-1, qlen)                    # (R*g, qlen)
+
+
+def fused_gather_ed_ref(data, sids, anchors, q, g: int, znorm: bool):
+    """Oracle for fused_gather_ed: gather then the dot-identity ED.
+
+    Returns (R, g) squared distances, computed window-at-a-time with
+    direct (single-pass) window statistics — the kernel derives the same
+    stats from Collection prefix sums, so agreement is allclose at f32
+    working precision, not bitwise.  Valid entries only (callers mask).
+    """
+    qlen = q.shape[-1]
+    wins = _gather_candidates_ref(data, sids, anchors, g, qlen)
+    d2 = batch_ed_ref(wins, q[None, :], znorm)[:, 0]
+    return d2.reshape(-1, g)
+
+
+def fused_gather_lb_keogh_ref(data, sids, anchors, dtw_lo, dtw_hi,
+                              g: int, znorm: bool):
+    """Oracle for fused_gather_lb_keogh: gather, normalize, LB_Keogh.
+
+    Returns (lb2 (R, g), mu (R, g), sd (R, g)) with direct window
+    statistics (see fused_gather_ed_ref on precision).  Valid entries
+    only (callers mask).
+    """
+    qlen = dtw_lo.shape[-1]
+    wins = _gather_candidates_ref(data, sids, anchors, g, qlen)
+    if znorm:
+        mu = jnp.mean(wins, axis=-1)
+        sd = jnp.maximum(jnp.std(wins, axis=-1), 1e-8)
+    else:
+        mu = jnp.zeros(wins.shape[:-1], wins.dtype)
+        sd = jnp.ones(wins.shape[:-1], wins.dtype)
+    wn = (wins - mu[:, None]) / sd[:, None]
+    lb2 = lb_keogh_ref(dtw_lo, dtw_hi, wn)
+    return (lb2.reshape(-1, g), mu.reshape(-1, g), sd.reshape(-1, g))
+
+
 def envelope_znorm_ref(series, lmin: int, lmax: int, gamma: int, seg_len: int):
     """Alg. 2 oracle: series (B, n) -> (lo, hi) each (B, n_env, w)."""
     from repro.core.envelope import build_envelopes_znorm

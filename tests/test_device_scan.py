@@ -1,0 +1,202 @@
+"""Device-resident exact scan vs the host-driven reference path, plus
+the pruning-cascade boundary regressions that ride along with it:
+
+  * device-scan results == host-scan results == brute force across
+    znorm/raw x ed/dtw x delta-present (and the batched entry point);
+  * eps-range boundary hits with lb == d == eps under ED and DTW
+    (the DTW survivor cut must be inclusive on the eps path);
+  * exact-tie bsf seeding (the approx pool's *squared* distances thread
+    into the exact scan — no sqrt->square float round-trip);
+  * the exact-from-approx certificate on descent exhaustion (all
+    finite-LB leaves verified => the full scan is provably redundant);
+  * TopK dedup without the overflowing packed sid * 2^32 + off key.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Collection, EnvelopeParams, QuerySpec,
+                        UlisseEngine)
+from repro.core.executor import TopK
+from repro.core.search import brute_force_knn
+from repro.storage import delta as storage_delta
+
+PARAMS = dict(lmin=64, lmax=128, seg_len=16, card=64, gamma=8)
+
+
+@pytest.fixture(scope="module", params=[True, False],
+                ids=["znorm", "raw"])
+def engines(request, walk_collection, rng):
+    """(engine, collection, extra znorm flag) with and without a delta."""
+    znorm = request.param
+    p = EnvelopeParams(znorm=znorm, **PARAMS)
+    base = walk_collection[:16]
+    extra = np.cumsum(rng.normal(size=(4, 192)), -1).astype(np.float32)
+    plain = UlisseEngine.from_collection(Collection.from_array(base), p,
+                                         block_size=16, num_levels=2)
+    with_delta = UlisseEngine.from_collection(
+        Collection.from_array(base), p, block_size=16, num_levels=2)
+    with_delta._index = storage_delta.extend_index(with_delta.index, extra)
+    full = Collection.from_array(np.concatenate([base, extra]))
+    return znorm, (plain, Collection.from_array(base)), (with_delta, full)
+
+
+@pytest.mark.parametrize("measure,r", [("ed", 0), ("dtw", 9)])
+@pytest.mark.parametrize("delta", [False, True],
+                         ids=["compacted", "delta"])
+def test_device_scan_matches_host_scan(engines, rng, measure, r, delta):
+    znorm, plain, with_delta = engines
+    engine, coll = with_delta if delta else plain
+    q = np.asarray(coll.data)[3, 20:116] \
+        + rng.normal(size=96).astype(np.float32) * 0.05
+    dev = engine.search(q, QuerySpec(k=5, measure=measure, r=r,
+                                     scan_backend="device"))
+    host = engine.search(q, QuerySpec(k=5, measure=measure, r=r,
+                                      scan_backend="host"))
+    ref = brute_force_knn(coll, q, k=5, znorm=znorm, measure=measure,
+                          r=r)
+    np.testing.assert_allclose(dev.dists, ref.dists, rtol=1e-3, atol=1e-3)
+    # the device kernels derive window stats from prefix sums; the host
+    # path computes them directly — agreement is f32-tight, not bitwise
+    np.testing.assert_allclose(dev.dists, host.dists, rtol=1e-4,
+                               atol=1e-4)
+    assert set(zip(dev.series, dev.offsets)) \
+        == set(zip(host.series, host.offsets))
+    assert 0.0 <= dev.stats.pruning_power <= 1.0
+
+
+def test_device_scan_batched_matches_per_query(engines):
+    """The vmapped multi-query path (mixed lengths) == one-at-a-time."""
+    znorm, (engine, coll), _ = engines
+    data = np.asarray(coll.data)
+    qs = [data[0, 0:96], data[1, 5:69], data[2, 0:96], data[4, 10:106]]
+    outs = engine.search(qs, QuerySpec(k=3))
+    assert len(outs) == 4
+    for q, out in zip(qs, outs):
+        host = engine.search(q, QuerySpec(k=3, scan_backend="host"))
+        np.testing.assert_allclose(out.dists, host.dists, rtol=1e-4,
+                                   atol=1e-4)
+        assert set(zip(out.series, out.offsets)) \
+            == set(zip(host.series, host.offsets))
+
+
+def test_device_scan_pure_scan_no_approx_seed(engines):
+    """approx_first=False: the device pool starts empty and the scan
+    alone must still recover the brute-force answer."""
+    znorm, (engine, coll), _ = engines
+    q = np.asarray(coll.data)[5, 30:94]
+    dev = engine.search(q, QuerySpec(k=4, approx_first=False))
+    ref = brute_force_knn(coll, q, k=4, znorm=znorm)
+    np.testing.assert_allclose(dev.dists, ref.dists, rtol=1e-3, atol=1e-3)
+
+
+def test_device_scan_k_exceeds_candidates(walk_collection):
+    """k larger than the candidate count: the device pool's +inf seed
+    filler must be trimmed, never surfaced as phantom (inf, -1, -1)
+    neighbors; the finite results agree with the host backend."""
+    p = EnvelopeParams(znorm=True, **PARAMS)
+    coll = Collection.from_array(walk_collection[:4])
+    engine = UlisseEngine.from_collection(coll, p, block_size=16,
+                                          num_levels=2)
+    q = walk_collection[0, 10:106]
+    spec = dict(k=500, max_leaves=1)          # don't certify via approx
+    dev = engine.search(q, QuerySpec(**spec))
+    host = engine.search(q, QuerySpec(scan_backend="host", **spec))
+    assert (dev.series >= 0).all() and (dev.offsets >= 0).all()
+    np.testing.assert_allclose(
+        np.sort(dev.dists[np.isfinite(dev.dists)]),
+        np.sort(host.dists[np.isfinite(host.dists)]),
+        rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# boundary regressions (constant series => exactly representable ties)
+# --------------------------------------------------------------------------
+
+def _const_engine(values, n=64, lmin=16, lmax=32, seg_len=8, gamma=2,
+                  **kw):
+    """Index of constant series: every length-l window of series i is
+    const values[i], so ED^2 = DTW^2 = LB_Keogh^2 = l * (v_i - q)^2 --
+    exactly representable ties when the deltas are dyadic."""
+    data = np.tile(np.asarray(values, np.float32)[:, None], (1, n))
+    p = EnvelopeParams(lmin=lmin, lmax=lmax, seg_len=seg_len, gamma=gamma,
+                       card=8, znorm=False)
+    return UlisseEngine.from_collection(
+        Collection.from_array(data), p, block_size=16, num_levels=2), data
+
+
+@pytest.mark.parametrize("measure,r", [("ed", 0), ("dtw", 2)])
+def test_range_query_keeps_boundary_hits(measure, r):
+    """lb == d == eps exactly: the hit sits ON the eps boundary and the
+    collection rule is d2 <= eps2 — the DTW survivor cut used to drop it
+    (strict lb2 < eps2)."""
+    engine, data = _const_engine([1.5, 4.0, -3.0, 8.0])
+    n, qlen = data.shape[1], 16
+    q = np.full(qlen, 1.0, np.float32)        # series 0 at delta = 0.5
+    # d2 = 16 * 0.25 = 4.0 and eps2 = 4.0, both exact
+    res = engine.search(q, QuerySpec(eps=2.0, measure=measure, r=r))
+    n_windows = n - qlen + 1
+    assert len(res.dists) == n_windows, \
+        f"{measure}: boundary hits dropped ({len(res.dists)}/{n_windows})"
+    np.testing.assert_array_equal(res.series,
+                                  np.zeros(n_windows, np.int64))
+    np.testing.assert_allclose(res.dists, 2.0, rtol=0, atol=0)
+
+
+def test_exact_tie_bsf_seeding_skips_scan():
+    """Every candidate sits at exactly d2 = 5.0 (sqrt(5.0)**2 > 5.0 in
+    float64).  With the squared pool threaded through, the exact scan
+    sees first-LB == kth and exits before any chunk; the old
+    sqrt->square round-trip inflated the seed to 5.000000000000001 and
+    re-verified tied envelopes."""
+    engine, data = _const_engine([1.5, 1.5], n=80, lmin=20, lmax=40,
+                                 seg_len=4, gamma=2)
+    q = np.full(20, 1.0, np.float32)          # 20 * 0.5^2 = 5.0 exact
+    spec = QuerySpec(k=1, max_leaves=1, scan_backend="host")
+    pool, stats, _ = engine._local_approx_impl(q, spec)
+    assert pool.d[0] == 5.0                   # seed is exact
+    res = engine.search(q, spec)
+    assert float(res.dists[0]) ** 2 == pytest.approx(5.0, abs=1e-12)
+    assert res.stats.chunks_visited == 0, \
+        "tie-inflated bsf seed forced a redundant scan chunk"
+    # device backend agrees on the same early exit
+    dev = engine.search(q, QuerySpec(k=1, max_leaves=1))
+    assert dev.stats.chunks_visited == 0
+    assert float(dev.dists[0]) ** 2 == pytest.approx(5.0, abs=1e-12)
+
+
+def test_exact_from_approx_on_descent_exhaustion(walk_collection):
+    """4 series => 4 valid leaves < max_leaves: the descent verifies
+    every finite-LB block, which certifies exactness — the exact scan
+    must be skipped, not run redundantly."""
+    p = EnvelopeParams(znorm=True, **PARAMS)
+    coll = Collection.from_array(walk_collection[:4])
+    engine = UlisseEngine.from_collection(coll, p, block_size=16,
+                                          num_levels=2)
+    q = walk_collection[1, 10:106]
+    approx = engine.search(q, QuerySpec(k=3, mode="approx"))
+    assert approx.stats.exact_from_approx
+    for backend in ("host", "device"):
+        res = engine.search(q, QuerySpec(k=3, scan_backend=backend))
+        assert res.stats.exact_from_approx
+        assert res.stats.chunks_visited == 0, backend
+        ref = brute_force_knn(coll, q, k=3, znorm=True)
+        np.testing.assert_allclose(res.dists, ref.dists, rtol=1e-3,
+                                   atol=1e-3)
+
+
+def test_topk_dedup_survives_wide_ids():
+    """The packed key s * 2^32 + o collides (s=1, o=0) with (s=0,
+    o=2^32) and overflows int64 at sid >= 2^31; lexsort dedup must keep
+    all distinct subsequences."""
+    pool = TopK(4)
+    pool.push(np.array([1.0, 2.0]), np.array([1, 0]),
+              np.array([0, 1 << 32]))
+    assert len(pool.d) == 2                   # packed key saw ONE entry
+    pool.push(np.array([0.5, 0.25]), np.array([1 << 31, 1 << 31]),
+              np.array([3, 7]))               # overflow territory
+    assert len(pool.d) == 4
+    np.testing.assert_array_equal(pool.d, [0.25, 0.5, 1.0, 2.0])
+    # a true duplicate still dedups (keeping the better distance)
+    pool.push(np.array([0.1]), np.array([1 << 31]), np.array([7]))
+    assert len(pool.d) == 4
+    assert pool.d[0] == 0.1 and pool.s[0] == 1 << 31 and pool.o[0] == 7

@@ -9,6 +9,8 @@ from repro.kernels import ref
 from repro.kernels.batch_ed import batch_ed_pallas
 from repro.kernels.dtw_band import dtw_band_pallas
 from repro.kernels.envelope import envelope_znorm_pallas
+from repro.kernels.fused_verify import (fused_gather_ed,
+                                        fused_gather_lb_keogh)
 from repro.kernels.lb_keogh import lb_keogh_pallas
 from repro.kernels.mindist import mindist_pallas
 
@@ -52,6 +54,70 @@ def test_lb_keogh_sweep(n, l):
     out = lb_keogh_pallas(lo, hi, w)
     expect = ref.lb_keogh_ref(lo, hi, w)
     np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def _fused_inputs(s, n, qlen, g, rows, b):
+    """Random gather targets for a B-query slab, biased to exercise the
+    end-of-series region overrun, plus the Collection prefix sums the
+    kernels derive window stats from.  Returns the per-(envelope,
+    offset) validity mask — overrunning windows are garbage by contract.
+    """
+    from repro.core.types import Collection
+    coll = Collection.from_array(
+        RNG.normal(size=(s, n)).astype(np.float32) * 2 + 1)
+    sids = jnp.asarray(RNG.integers(0, s, b * rows), jnp.int32)
+    anchors = jnp.asarray(RNG.integers(0, n - qlen + 1, b * rows),
+                          jnp.int32)
+    anchors = anchors.at[0].set(n - qlen)    # worst-case overrun
+    valid = np.asarray(anchors)[:, None] + np.arange(g) + qlen <= n
+    return coll, sids, anchors, valid
+
+
+@pytest.mark.parametrize("s,n,qlen,g,rows,b", [(4, 96, 32, 1, 8, 1),
+                                               (6, 128, 64, 9, 13, 1),
+                                               (3, 192, 96, 5, 16, 3)])
+@pytest.mark.parametrize("znorm", [False, True])
+def test_fused_gather_ed_sweep(s, n, qlen, g, rows, b, znorm):
+    coll, sids, anchors, valid = _fused_inputs(s, n, qlen, g, rows, b)
+    qs = jnp.asarray(RNG.normal(size=(b, qlen)), jnp.float32)
+    out = fused_gather_ed(coll.data, coll.csum, coll.csum2, coll.center,
+                          sids, anchors, qs, g=g, rows=rows, znorm=znorm)
+    assert out.shape == (b * rows, g)
+    for i in range(b):                       # per-query slab vs oracle
+        sl = slice(i * rows, (i + 1) * rows)
+        expect = ref.fused_gather_ed_ref(coll.data, sids[sl],
+                                         anchors[sl], qs[i], g, znorm)
+        np.testing.assert_allclose(np.asarray(out[sl])[valid[sl]],
+                                   np.asarray(expect)[valid[sl]],
+                                   rtol=2e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("s,n,qlen,g,rows,b", [(4, 96, 32, 4, 8, 1),
+                                               (5, 128, 48, 7, 11, 2)])
+@pytest.mark.parametrize("znorm", [False, True])
+def test_fused_gather_lb_keogh_sweep(s, n, qlen, g, rows, b, znorm):
+    coll, sids, anchors, valid = _fused_inputs(s, n, qlen, g, rows, b)
+    from repro.core.dtw import dtw_envelope
+    qs = jnp.asarray(RNG.normal(size=(b, qlen)), jnp.float32)
+    lo, hi = dtw_envelope(qs, 5)
+    lb2, mu, sd = fused_gather_lb_keogh(
+        coll.data, coll.csum, coll.csum2, coll.center, sids, anchors,
+        lo, hi, g=g, rows=rows, znorm=znorm)
+    assert lb2.shape == mu.shape == sd.shape == (b * rows, g)
+    for i in range(b):
+        sl = slice(i * rows, (i + 1) * rows)
+        lb2_r, mu_r, sd_r = ref.fused_gather_lb_keogh_ref(
+            coll.data, sids[sl], anchors[sl], lo[i], hi[i], g, znorm)
+        v = valid[sl]
+        np.testing.assert_allclose(np.asarray(lb2[sl])[v],
+                                   np.asarray(lb2_r)[v],
+                                   rtol=2e-4, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(mu[sl])[v],
+                                   np.asarray(mu_r)[v],
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(sd[sl])[v],
+                                   np.asarray(sd_r)[v],
+                                   rtol=1e-3, atol=1e-4)
 
 
 def _numpy_dtw(q, c, r):
