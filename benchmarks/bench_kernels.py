@@ -161,6 +161,92 @@ def bench_exact_scan():
         print(f"# exact_scan_speedup_B{B} = {ratio:.2f}x", flush=True)
 
 
+def bench_range_scan():
+    """PR 4 tentpole metric: eps-range queries/sec through the
+    host-driven per-query loop vs the batched device-resident hit
+    buffer (one program + one sync per same-length batch).  Acceptance
+    gate: device >= 2x host at B=8 on CPU."""
+    import time
+    from repro.core import Collection, EnvelopeParams, QuerySpec, \
+        UlisseEngine
+
+    ns, n = 64, 256
+    data = np.cumsum(RNG.normal(size=(ns, n)), -1).astype(np.float32)
+    p = EnvelopeParams(lmin=96, lmax=160, gamma=16, seg_len=16,
+                       znorm=True)
+    engine = UlisseEngine.from_collection(Collection.from_array(data), p)
+    qlen = 128
+    qs = [data[i % ns, 7:7 + qlen]
+          + RNG.normal(size=qlen).astype(np.float32) * 0.05
+          for i in range(8)]
+    eps = 6.0
+    specs = {"host": QuerySpec(eps=eps, scan_backend="host"),
+             "device": QuerySpec(eps=eps, scan_backend="device")}
+    times = {}
+    for name, spec in specs.items():
+        for B in (1, 8):
+            engine.search(qs[:B], spec)      # warm compile caches
+            samples = []
+            for _ in range(5):
+                t0 = time.perf_counter()
+                engine.search(qs[:B], spec)
+                samples.append(time.perf_counter() - t0)
+            dt = float(np.median(samples))
+            times[(name, B)] = dt
+            emit(f"range_scan_{name}_B{B}", dt / B, f"qps={B / dt:.1f}")
+    from benchmarks.common import RESULTS
+    for B in (1, 8):
+        ratio = times[("host", B)] / max(times[("device", B)], 1e-12)
+        RESULTS[f"range_scan_speedup_B{B}"] = {
+            "device_vs_host": round(ratio, 2)}
+        print(f"# range_scan_speedup_B{B} = {ratio:.2f}x", flush=True)
+
+
+def bench_approx_batched():
+    """Batched device approximate pass: approx-seeded exact k-NN and
+    approx-only descents through the one-sync device pipeline vs the
+    host-driven per-query descent + scan."""
+    import time
+    from repro.core import Collection, EnvelopeParams, QuerySpec, \
+        UlisseEngine
+
+    ns, n = 64, 256
+    data = np.cumsum(RNG.normal(size=(ns, n)), -1).astype(np.float32)
+    p = EnvelopeParams(lmin=96, lmax=160, gamma=16, seg_len=16,
+                       znorm=True)
+    engine = UlisseEngine.from_collection(Collection.from_array(data), p)
+    qlen, k = 128, 10
+    qs = [data[i % ns, 7:7 + qlen]
+          + RNG.normal(size=qlen).astype(np.float32) * 0.05
+          for i in range(8)]
+    cases = {
+        "seeded_exact": dict(k=k, approx_first=True),
+        "approx_only": dict(k=k, mode="approx"),
+    }
+    from benchmarks.common import RESULTS
+    for case, kw in cases.items():
+        times = {}
+        for backend in ("host", "device"):
+            spec = QuerySpec(scan_backend=backend, **kw)
+            for B in (1, 8):
+                engine.search(qs[:B], spec)
+                samples = []
+                for _ in range(5):
+                    t0 = time.perf_counter()
+                    engine.search(qs[:B], spec)
+                    samples.append(time.perf_counter() - t0)
+                dt = float(np.median(samples))
+                times[(backend, B)] = dt
+                emit(f"approx_batched_{case}_{backend}_B{B}", dt / B,
+                     f"qps={B / dt:.1f}")
+        for B in (1, 8):
+            ratio = times[("host", B)] / max(times[("device", B)], 1e-12)
+            RESULTS[f"approx_batched_{case}_speedup_B{B}"] = {
+                "device_vs_host": round(ratio, 2)}
+            print(f"# approx_batched_{case}_speedup_B{B} = "
+                  f"{ratio:.2f}x", flush=True)
+
+
 def bench_storage():
     """Persistence cost in the perf trajectory: streaming ingest
     throughput through the out-of-core Writer, save latency, cold-open
@@ -232,4 +318,4 @@ def bench_storage():
 
 ALL = [bench_mindist, bench_batch_ed, bench_lb_keogh, bench_dtw_band,
        bench_envelope_build, bench_engine_batched, bench_exact_scan,
-       bench_storage]
+       bench_range_scan, bench_approx_batched, bench_storage]

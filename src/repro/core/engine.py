@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -47,15 +48,20 @@ class QuerySpec:
     mode:    "exact" (paper Alg. 5 guarantee) | "approx" (Alg. 4 descent).
     approx_first:   seed the exact scan with an approximate pass (Alg. 5
                     line 1; disable to measure the pure scan).
-    scan_backend:   "device" (default) runs the exact scan as one device
-                    program (fused gather+verify kernels, on-device k-NN
-                    pool, one host sync per query/batch); "host" keeps
-                    the chunked host-driven loop — the reference path
-                    the device scan is asserted equal against.
+    scan_backend:   "device" (default) runs every local query shape —
+                    approximate pass, exact scan, and eps-range — as
+                    device programs with ONE host sync per same-length
+                    query batch; "host" keeps the chunked host-driven
+                    loops — the reference paths the device pipeline is
+                    asserted equal against.
     chunk_size:     exact-scan verification chunk (envelopes per step).
     verify_top:     distributed per-shard verification batch (initial
                     value; the engine doubles it on certificate failure).
     max_leaves:     approx-descent leaf budget.
+    range_capacity: on-device hit-buffer rows per range query (rounded
+                    up to a power of two); a query whose hits exceed it
+                    falls back to a host continuation for the scan tail
+                    (DESIGN.md §9).
     use_paa_bounds: use raw L/U PAA bounds instead of the quantized iSAX
                     breakpoints in the exact scan (tighter, beyond-paper).
     """
@@ -70,6 +76,7 @@ class QuerySpec:
     chunk_size: int = 512
     verify_top: int = 128
     max_leaves: int = 8
+    range_capacity: int = 2048
     use_paa_bounds: bool = False
 
     def __post_init__(self):
@@ -90,6 +97,8 @@ class QuerySpec:
             raise ValueError("chunk_size must be >= 1")
         if self.verify_top < 1:
             raise ValueError("verify_top must be >= 1")
+        if self.range_capacity < 1:
+            raise ValueError("range_capacity must be >= 1")
 
     @property
     def is_range(self) -> bool:
@@ -98,6 +107,31 @@ class QuerySpec:
 
 def _pow2_bucket(qlen: int, cap: int) -> int:
     return min(executor.pow2ceil(qlen), cap)
+
+
+def _shards_of(mesh, axes) -> int:
+    shards = 1
+    for a in axes:
+        shards *= mesh.shape[a]
+    return shards
+
+
+def _require_divisible(num_series: int, mesh, axes) -> int:
+    """Refuse meshes that do not divide the collection evenly.
+
+    A truncated rows-per-shard table under-counts the verification cap,
+    so escalation would declare a shard "fully verified" while rows
+    were never checked — silent wrong answers.  Returns the shard
+    count.
+    """
+    shards = _shards_of(mesh, axes)
+    if num_series % shards != 0:
+        raise ValueError(
+            f"num_series={num_series} is not divisible by the "
+            f"{shards}-shard mesh {dict(mesh.shape)}; pad the "
+            "collection to a multiple of the shard count (or pick a "
+            "divisible mesh) before UlisseEngine.distributed/open")
+    return shards
 
 
 class UlisseEngine:
@@ -120,10 +154,8 @@ class UlisseEngine:
         self.max_batch = max_batch
         self._programs = {}           # (bucket, k, verify_top) -> compiled fn
         if mesh is not None:
-            shards = 1
-            for a in self._axes:
-                shards *= mesh.shape[a]
-            self._shards = shards
+            self._shards = shards = _require_divisible(
+                num_series, mesh, self._axes)
             self._env_rows_per_shard = (
                 self.params.num_envelopes(series_len)
                 * (num_series // shards))
@@ -157,6 +189,9 @@ class UlisseEngine:
         from repro.distributed.ulisse import shard_collection
 
         data = jnp.asarray(data, jnp.float32)
+        # fail before sharding/breakpoint work (jax's own device_put
+        # divisibility error is far less actionable)
+        _require_divisible(int(data.shape[0]), mesh, axes)
         if breakpoints is None:
             breakpoints = default_breakpoints(params, data)
         return cls(params=params, mesh=mesh,
@@ -282,11 +317,17 @@ class UlisseEngine:
         single, qs = self._normalize_queries(queries)
         if self.is_distributed:
             results = self._search_distributed(qs, spec)
-        elif (len(qs) > 1 and not spec.is_range and spec.mode == "exact"
-                and spec.scan_backend == "device"):
-            # batched multi-query path: shared plan + one batched scan
-            # program (see executor._device_scan_core)
-            results = self._local_exact_device(qs, spec)
+        elif spec.scan_backend == "device":
+            # the one-sync local pipeline: every query shape — k-NN
+            # (approx-seeded or pure scan), approximate-only, eps-range
+            # — runs as device programs over a shared per-length plan,
+            # with one host readback per same-length batch
+            if spec.is_range:
+                results = self._local_range_device(qs, spec)
+            elif spec.mode == "exact":
+                results = self._local_exact_device(qs, spec)
+            else:
+                results = self._local_approx_device(qs, spec)
         else:
             results = [self._search_local(q, spec) for q in qs]
         return results[0] if single else results
@@ -306,12 +347,11 @@ class UlisseEngine:
     # ------------------------------------------------------------------
 
     def _search_local(self, q, spec: QuerySpec) -> SearchResult:
+        """Host-driven reference paths (scan_backend="host")."""
         if spec.is_range:
             return self._local_range(q, spec)
         if spec.mode == "approx":
             return self._local_approx(q, spec)
-        if spec.scan_backend == "device":
-            return self._local_exact_device([q], spec)[0]
         return self._local_exact(q, spec)
 
     def _local_approx(self, q, spec: QuerySpec) -> SearchResult:
@@ -433,82 +473,291 @@ class UlisseEngine:
             pos = end
         return pool.result(stats)
 
-    def _local_exact_device(self, qs, spec: QuerySpec):
-        """Exact k-NN via the device-resident scan (one program, one
-        host sync per same-length batch; see executor.device_exact_scan).
+    # -- the one-sync device pipeline (DESIGN.md §8/§9) ----------------
 
-        The approximate pass still runs host-side per query (it is a
-        handful of leaves); its squared pool seeds the device pool and
-        its verified envelopes are excluded from the scan order, so the
-        dedup-free device pool never sees a subsequence twice.  Queries
-        whose certificate already proves exactness skip the scan.
+    def _group_by_len(self, qs):
+        by_len = {}
+        for i, q in enumerate(qs):
+            by_len.setdefault(len(q), []).append(i)
+        return sorted(by_len.items())
+
+    def _stack_prepared(self, queries, spec: QuerySpec):
+        """Shared per-length-group query prep: ONE jitted batched call
+        (planner.prepare_query_batch), device arrays, no sync."""
+        q = jnp.asarray(np.stack(queries), jnp.float32)
+        qn, dlo, dhi, qb, qh = planner.prepare_query_batch(
+            q, self.params.seg_len, self.params.znorm, spec.measure,
+            spec.r)
+        nseg = self.params.query_segments(q.shape[1])
+        return nseg, qn, dlo, dhi, qb, qh
+
+    def _device_approx_stage(self, qstack, dlo, dhi, qb, qh, nseg: int,
+                             k: int, spec: QuerySpec):
+        """Batched device approximate pass (paper Alg. 4 as ONE program).
+
+        Delta sweep + best-first leaf visits run as the scan core over
+        the pow2-padded leaf order (planner.device_leaf_pack): each
+        chunk is one leaf carrying its block's squared LB, so the
+        core's per-chunk stop reproduces the host descent's "next leaf
+        cannot improve" break.  Seeds the (B, k) pool ON DEVICE and
+        derives the exactness certificate there too — nothing syncs.
+
+        Returns (pool (d2, sid, off), stats, cert, leaf_v, comb_idx,
+        visited_chunks, chunk, nblk) — all device arrays but the static
+        ints.
+        """
+        index, p = self._index, self.params
+        env = index.search_envelopes()
+        n_main = index.envelopes.size
+        fine = index.levels[-1]
+        nblk = fine.size
+        block_size = n_main // nblk
+        chunk = executor.pow2ceil(block_size)
+        n_leaves = min(spec.max_leaves, nblk)
+        b = qstack.shape[0]
+
+        blk_lb = planner.block_lower_bounds_batch(
+            qb, qh, fine.paa_lo, fine.paa_hi, fine.valid, p.seg_len,
+            nseg)
+        (asids, aanc, anm, albs2, comb_idx,
+         blk_sorted) = planner.device_leaf_pack(
+            env.series_id, env.anchor, env.n_master, env.valid, blk_lb,
+            n_main=n_main, block_size=block_size, chunk=chunk,
+            n_leaves=n_leaves)
+        neg = jnp.full((b, k), -1, jnp.int32)
+        ad2, asid, aoff, ast = executor.device_exact_scan(
+            index.collection, asids, aanc, anm, albs2, qstack, dlo, dhi,
+            jnp.full((b, k), jnp.inf, jnp.float32), neg, neg, k=k,
+            g=p.gamma + 1, measure=spec.measure, r=spec.r,
+            znorm=p.znorm, chunk_size=chunk)
+
+        n_delta = env.size - n_main
+        nd_chunks = -(-n_delta // chunk)
+        visited = ast[:, 0]
+        leaf_v = jnp.clip(visited - nd_chunks, 0, n_leaves)
+        # certificate (== host's exact_from_approx): the first unvisited
+        # leaf cannot improve the pool, or no finite-LB leaf is left
+        kth2 = ad2[:, k - 1]
+        next_lb = blk_sorted[jnp.arange(b),
+                             jnp.minimum(leaf_v, nblk - 1)]
+        cert = ((leaf_v >= nblk) | ~jnp.isfinite(next_lb)
+                | (next_lb.astype(jnp.float32) ** 2 >= kth2))
+        return ((ad2, asid, aoff), ast, cert, leaf_v, comb_idx, visited,
+                chunk, nblk)
+
+    def _knn_result_rows(self, q, spec: QuerySpec, d2, sid, off,
+                         stats) -> SearchResult:
+        # drop unfilled pool rows (sid -1): with k > candidates the pool
+        # keeps +inf filler, which must not surface as phantom neighbors
+        filled = sid >= 0
+        d2 = d2[filled].astype(np.float64)
+        sid = sid[filled].astype(np.int64)
+        off = off[filled].astype(np.int64)
+        if spec.measure == "ed" and len(d2):
+            # polish: the kernel's MXU dot-identity ED cancels
+            # catastrophically near d = 0 (error ~ eps_f32 * 2L on d2);
+            # re-score the k winners with the direct float64 ED — O(k *
+            # qlen) host work after the readback, no extra device sync.
+            # Selection already happened (pruning used kernel values, as
+            # the host path's pruning used its own f32 values); this
+            # only sharpens the *reported* distances and their order.
+            data = np.asarray(self._index.collection.data)
+            w = data[sid[:, None],
+                     off[:, None] + np.arange(len(q))].astype(np.float64)
+            qn = np.asarray(q, np.float64)
+            if self.params.znorm:
+                qn = (qn - qn.mean()) / max(qn.std(), 1e-8)
+                w = (w - w.mean(1, keepdims=True)) \
+                    / np.maximum(w.std(1, keepdims=True), 1e-8)
+            d2 = ((w - qn) ** 2).sum(1)
+            order = np.argsort(d2, kind="stable")
+            d2, sid, off = d2[order], sid[order], off[order]
+        return SearchResult(dists=np.sqrt(np.maximum(d2, 0.0)),
+                            series=sid, offsets=off, stats=stats)
+
+    def _local_exact_device(self, qs, spec: QuerySpec):
+        """Exact k-NN, fully device-resident (paper Alg. 5 incl. its
+        line-1 approximate pass), ONE host sync per same-length batch.
+
+        Per length group: batched device approx pass -> its verified
+        rows are scatter-excluded from the LB order on device
+        (planner.device_scan_pack — the dedup-free pool never sees a
+        subsequence twice) -> the seeded exact scan.  A query whose
+        certificate already proves exactness self-skips the scan: every
+        unverified envelope's LB is then >= its kth, so its first chunk
+        is born inactive.  The single readback collects pools, stats
+        and certificates together.
         """
         index = self._index
         k, g = spec.k, self.params.gamma + 1
         results: List[Optional[SearchResult]] = [None] * len(qs)
-        by_len = {}
-        for i, q in enumerate(qs):
-            by_len.setdefault(len(q), []).append(i)
-        for qlen, idxs in sorted(by_len.items()):
-            rows = []      # (query index, pq, stats, seed pool, exclude)
-            for i in idxs:
-                pq = planner.prepare_query(qs[i], self.params,
-                                           spec.measure, spec.r)
-                if spec.approx_first:
-                    pool, stats, ver = self._local_approx_impl(qs[i],
-                                                               spec, pq)
-                    if stats.exact_from_approx:
-                        results[i] = pool.result(stats)
-                        continue
-                else:
-                    pool = TopK(spec.k)
-                    stats = SearchStats(envelopes_total=int(
-                        index.search_envelopes().size))
-                    ver = np.zeros((0,), np.int64)
-                rows.append((i, pq, stats, pool, ver))
-            if not rows:
-                continue
-            b = len(rows)
-            seed_d2 = np.full((b, k), np.inf, np.float32)
-            seed_sid = np.full((b, k), -1, np.int32)
-            seed_off = np.full((b, k), -1, np.int32)
-            for row, (_, _, _, pool, _) in enumerate(rows):
-                m = len(pool.d)
-                seed_d2[row, :m] = pool.d
-                seed_sid[row, :m] = pool.s
-                seed_off[row, :m] = pool.o
-            plan = planner.pack_scan_plan(
-                index, [pq for _, pq, _, _, _ in rows],
-                spec.use_paa_bounds,
-                exclude=[ver for _, _, _, _, ver in rows])
-            qstack = jnp.stack([pq.q for _, pq, _, _, _ in rows])
-            if spec.measure == "dtw":
-                dlo = jnp.stack([pq.dtw_lo for _, pq, _, _, _ in rows])
-                dhi = jnp.stack([pq.dtw_hi for _, pq, _, _, _ in rows])
+        env = index.search_envelopes()
+        n_comb = env.size
+        for qlen, idxs in self._group_by_len(qs):
+            queries = [qs[i] for i in idxs]
+            nseg, qstack, dlo, dhi, qb, qh = self._stack_prepared(
+                queries, spec)
+            b = len(queries)
+            if spec.approx_first:
+                (seed, ast, cert, leaf_v, comb_idx, visited, achunk,
+                 nblk) = self._device_approx_stage(
+                    qstack, dlo, dhi, qb, qh, nseg, k, spec)
             else:
-                dlo = dhi = qstack
+                seed = (jnp.full((b, k), jnp.inf, jnp.float32),
+                        jnp.full((b, k), -1, jnp.int32),
+                        jnp.full((b, k), -1, jnp.int32))
+                ast = jnp.zeros((b, 5), jnp.int32)
+                cert = jnp.zeros((b,), bool)
+                leaf_v = jnp.zeros((b,), jnp.int32)
+                comb_idx = jnp.full((b, 1), n_comb, jnp.int32)
+                visited = jnp.zeros((b,), jnp.int32)
+                achunk, nblk = 1, 0
+            lbs = planner.env_lower_bounds_batch(
+                qb, qh, env, index.breakpoints, self.params.seg_len,
+                nseg, spec.use_paa_bounds)
+            ssids, sanc, snm, slbs2, _ = planner.device_scan_pack(
+                env.series_id, env.anchor, env.n_master, lbs, comb_idx,
+                visited, chunk=achunk, n_pad=executor.pow2ceil(n_comb))
             d2, sid, off, st = executor.device_exact_scan(
-                index.collection, plan.sids, plan.anchors,
-                plan.n_master, plan.lbs2, qstack, dlo, dhi,
-                seed_d2, seed_sid, seed_off, k=k, g=g,
-                measure=spec.measure, r=spec.r, znorm=self.params.znorm,
+                index.collection, ssids, sanc, snm, slbs2, qstack, dlo,
+                dhi, *seed, k=k, g=g, measure=spec.measure, r=spec.r,
+                znorm=self.params.znorm, chunk_size=spec.chunk_size)
+            # THE one host sync of the batch
+            d2, sid, off, st, ast, cert, leaf_v = jax.device_get(
+                (d2, sid, off, st, ast, cert, leaf_v))
+            for row, i in enumerate(idxs):
+                stats = SearchStats(
+                    envelopes_total=n_comb,
+                    lb_computations=n_comb + (nblk if spec.approx_first
+                                              else 0),
+                    leaves_visited=int(leaf_v[row]),
+                    exact_from_approx=bool(cert[row]),
+                    chunks_visited=int(st[row, 0]),
+                    envelopes_checked=int(ast[row, 1]) + int(st[row, 1]),
+                    true_dist_computations=(int(ast[row, 2])
+                                            + int(st[row, 2])),
+                    dtw_lb_keogh=int(ast[row, 3]) + int(st[row, 3]),
+                    dtw_full=int(ast[row, 4]) + int(st[row, 4]))
+                results[i] = self._knn_result_rows(
+                    qs[i], spec, d2[row], sid[row], off[row], stats)
+        return results
+
+    def _local_approx_device(self, qs, spec: QuerySpec):
+        """Batched device approximate k-NN (paper Alg. 4): the approx
+        stage alone, one host sync per same-length batch."""
+        k = spec.k
+        results: List[Optional[SearchResult]] = [None] * len(qs)
+        n_comb = self._index.search_envelopes().size
+        for qlen, idxs in self._group_by_len(qs):
+            nseg, qstack, dlo, dhi, qb, qh = self._stack_prepared(
+                [qs[i] for i in idxs], spec)
+            (ad2, asid, aoff), ast, cert, leaf_v, _, _, _, nblk = \
+                self._device_approx_stage(qstack, dlo, dhi, qb, qh,
+                                          nseg, k, spec)
+            ad2, asid, aoff, ast, cert, leaf_v = jax.device_get(
+                (ad2, asid, aoff, ast, cert, leaf_v))
+            for row, i in enumerate(idxs):
+                stats = SearchStats(
+                    envelopes_total=n_comb, lb_computations=nblk,
+                    leaves_visited=int(leaf_v[row]),
+                    exact_from_approx=bool(cert[row]),
+                    envelopes_checked=int(ast[row, 1]),
+                    true_dist_computations=int(ast[row, 2]),
+                    dtw_lb_keogh=int(ast[row, 3]),
+                    dtw_full=int(ast[row, 4]))
+                results[i] = self._knn_result_rows(
+                    qs[i], spec, ad2[row], asid[row], aoff[row], stats)
+        return results
+
+    def _local_range_device(self, qs, spec: QuerySpec):
+        """Batched device eps-range (Alg. 5 with bsf := eps), one host
+        sync per same-length batch on the no-overflow path.
+
+        The scan carries a fixed-capacity hit buffer on device
+        (executor.device_range_scan).  A query that overflows it syncs
+        its plan order back and finishes chunks [ovf, n_chunks) through
+        the host reference path — the buffer holds exactly the hits of
+        the chunks before `ovf`, so the union is exact with no dedup
+        (DESIGN.md §9).
+        """
+        index, p = self._index, self.params
+        env = index.search_envelopes()
+        n_comb = env.size
+        eps2 = float(spec.eps) ** 2
+        results: List[Optional[SearchResult]] = [None] * len(qs)
+        for qlen, idxs in self._group_by_len(qs):
+            nseg, qstack, dlo, dhi, qb, qh = self._stack_prepared(
+                [qs[i] for i in idxs], spec)
+            b = len(idxs)
+            lbs = planner.env_lower_bounds_batch(
+                qb, qh, env, index.breakpoints, p.seg_len, nseg,
+                spec.use_paa_bounds)
+            n_pad = executor.pow2ceil(n_comb)
+            ssids, sanc, snm, slbs2, order = planner.device_range_pack(
+                env.series_id, env.anchor, env.n_master, lbs,
+                jnp.full((b,), eps2, jnp.float32), n_pad=n_pad)
+            (bd2, bsid, boff, cnt, ovf, st,
+             chunk) = executor.device_range_scan(
+                index.collection, ssids, sanc, snm, slbs2, qstack, dlo,
+                dhi, jnp.full((b,), eps2, jnp.float32),
+                capacity=spec.range_capacity, g=p.gamma + 1,
+                measure=spec.measure, r=spec.r, znorm=p.znorm,
                 chunk_size=spec.chunk_size)
-            for row, (i, _, stats, _, _) in enumerate(rows):
-                stats.lb_computations += plan.n_env
-                stats.chunks_visited += int(st[row, 0])
-                stats.envelopes_checked += int(st[row, 1])
-                stats.true_dist_computations += int(st[row, 2])
-                stats.dtw_lb_keogh += int(st[row, 3])
-                stats.dtw_full += int(st[row, 4])
-                # drop unfilled seed rows (sid -1): with k > candidates
-                # the pool keeps +inf filler, which must not surface as
-                # phantom neighbors (the host pool returns < k rows too)
-                filled = sid[row] >= 0
-                results[i] = SearchResult(
-                    dists=np.sqrt(np.maximum(d2[row][filled], 0.0)),
-                    series=sid[row][filled].astype(np.int64),
-                    offsets=off[row][filled].astype(np.int64),
-                    stats=stats)
+            # THE one host sync of the batch (overflow excepted)
+            bd2, bsid, boff, cnt, ovf, st = jax.device_get(
+                (bd2, bsid, boff, cnt, ovf, st))
+            n_chunks = n_pad // chunk
+            order_h = slbs2_h = None
+            for row, i in enumerate(idxs):
+                stats = SearchStats(
+                    envelopes_total=n_comb, lb_computations=n_comb,
+                    chunks_visited=int(st[row, 0]),
+                    envelopes_checked=int(st[row, 1]),
+                    true_dist_computations=int(st[row, 2]),
+                    dtw_lb_keogh=int(st[row, 3]),
+                    dtw_full=int(st[row, 4]))
+                c = int(cnt[row])
+                rows: list = []
+                if c:
+                    rows.append(np.stack(
+                        [bsid[row, :c].astype(np.float64),
+                         boff[row, :c].astype(np.float64),
+                         bd2[row, :c].astype(np.float64)], axis=1))
+                o = int(ovf[row])
+                if o < n_chunks:     # buffer overflowed: host tail
+                    stats.range_overflows += 1
+                    if order_h is None:        # lazy: overflow only
+                        order_h = np.asarray(order)
+                        slbs2_h = np.asarray(slbs2, np.float64)
+                    pq = planner.prepare_query(qs[i], p, spec.measure,
+                                               spec.r)
+                    sink = TopK(1)   # unused (collector path)
+                    pos = o * chunk
+                    while pos < n_pad:
+                        seg = slbs2_h[row, pos:pos + chunk]
+                        # packed rows are all true candidates
+                        # (lb2 <= eps2); +inf marks the padding tail
+                        keep = np.isfinite(seg)
+                        if not keep[0]:
+                            break
+                        executor.verify_envelopes(
+                            index, pq, order_h[row,
+                                               pos:pos + chunk][keep],
+                            sink, stats, eps2=eps2, collector=rows)
+                        stats.chunks_visited += 1
+                        pos += chunk
+                if rows:
+                    out = np.concatenate(rows, axis=0)
+                    out = out[np.argsort(out[:, 2], kind="stable")]
+                    results[i] = SearchResult(
+                        dists=np.sqrt(np.maximum(out[:, 2], 0.0)),
+                        series=out[:, 0].astype(np.int64),
+                        offsets=out[:, 1].astype(np.int64), stats=stats)
+                else:
+                    results[i] = SearchResult(
+                        dists=np.zeros((0,)),
+                        series=np.zeros((0,), np.int64),
+                        offsets=np.zeros((0,), np.int64), stats=stats)
         return results
 
     def _local_range(self, q, spec: QuerySpec) -> SearchResult:

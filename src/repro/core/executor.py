@@ -48,6 +48,7 @@ class SearchStats:
     chunks_visited: int = 0
     exact_from_approx: bool = False
     escalations: int = 0             # exactness-certificate retries
+    range_overflows: int = 0         # device hit-buffer overflows (range)
 
     @property
     def pruning_power(self) -> float:
@@ -187,7 +188,11 @@ def gather_bucket_windows(data: jnp.ndarray, sids, anchors, n_master,
 
     def slice_one(sid, off, off_c):
         w = jax.lax.dynamic_slice(data, (sid, off_c), (1, bucket))[0]
-        return jnp.roll(w, off_c - off)   # left-shift by the clamp delta
+        w = jnp.roll(w, off_c - off)   # left-shift by the clamp delta
+        # the roll wraps the slab's first off-off_c values into positions
+        # >= n - off; zero them so pre-window data can never leak through
+        # a caller whose tail masking assumes in-series values there
+        return jnp.where(jnp.arange(bucket) < n - off, w, 0.0)
 
     windows = jax.vmap(jax.vmap(slice_one, in_axes=(None, 0, 0)),
                        in_axes=(0, 0, 0))(sids, jnp.clip(offs, 0, n),
@@ -301,11 +306,68 @@ def pow2ceil(x: int) -> int:
     return b
 
 
-def _device_scan_core(data, csum, csum2, center, sids, anchors, n_master,
-                      lbs2, qs, dtw_lo, dtw_hi, seed_d2, seed_sid,
-                      seed_off, *, k: int, g: int, chunk: int,
-                      znorm: bool, measure: str, r: int, sb: int,
-                      interpret: bool):
+def _chunk_slice(sids, anchors, n_master, lbs2, i, chunk: int):
+    """Slice chunk i out of the packed (B, n_pad) plan arrays."""
+    return (jax.lax.dynamic_slice_in_dim(sids, i * chunk, chunk, 1),
+            jax.lax.dynamic_slice_in_dim(anchors, i * chunk, chunk, 1),
+            jax.lax.dynamic_slice_in_dim(n_master, i * chunk, chunk, 1),
+            jax.lax.dynamic_slice_in_dim(lbs2, i * chunk, chunk, 1))
+
+
+def _chunk_candidates(csid, canc, cnm, keep, qlen: int, n: int, g: int):
+    """Expand a chunk's envelopes into per-offset candidates.
+
+    Shared by the exact and range cores so the window-fit test stays
+    identical on both paths.  Returns (ok, cand_sid, cand_off) each
+    (B, chunk*g): ok masks offsets that are real masters, fit the
+    series, and belong to a kept (unpruned) envelope.
+    """
+    b_sz, chunk = csid.shape
+    joff = jnp.arange(g, dtype=jnp.int32)
+    offs = canc[:, :, None] + joff[None, None, :]       # (B, chunk, g)
+    ok = ((joff[None, None, :] < cnm[:, :, None]) & (offs + qlen <= n)
+          & keep[:, :, None]).reshape(b_sz, chunk * g)
+    return ok, jnp.repeat(csid, g, axis=1), offs.reshape(b_sz, chunk * g)
+
+
+def _survivor_bucket(data, qs, cand_sid, cand_off, sidx, mu, sd, j,
+                     *, sb: int, r: int, znorm: bool):
+    """Gather + normalize + DP one masked survivor bucket (DTW tier).
+
+    Shared by the exact and range cores: the window clamp and the reuse
+    of the LB kernel's (mu, sd) are what keep LB_Keogh <= DTW exact
+    on-device (pruning soundness) — one implementation, two callers.
+    Returns (pos, bs, bo, db): bucket positions, candidate codes, and
+    squared banded-DTW distances (B, sb).
+    """
+    n = data.shape[1]
+    b_sz, chunk_g = cand_sid.shape
+    qlen = qs.shape[1]
+    pos = j * sb + jnp.arange(sb)
+    bi = jnp.take_along_axis(
+        sidx, jnp.minimum(pos, chunk_g - 1)[None, :].repeat(b_sz, 0),
+        axis=1)                                          # (B, sb)
+    bs = jnp.take_along_axis(cand_sid, bi, axis=1)
+    bo = jnp.take_along_axis(cand_off, bi, axis=1)
+    flat = (bs[:, :, None] * n
+            + jnp.clip(bo, 0, n - qlen)[:, :, None]
+            + jnp.arange(qlen, dtype=jnp.int32))
+    wb = jnp.take(data.reshape(-1), flat, mode="clip")
+    if znorm:
+        # normalize EXACTLY as the LB tier did (kernel mu/sd) so
+        # LB_Keogh <= DTW holds bitwise on survivors
+        wb = ((wb - jnp.take_along_axis(mu, bi, 1)[..., None])
+              / jnp.take_along_axis(sd, bi, 1)[..., None])
+    db = jax.vmap(lambda q1, c: dtw.dtw_band(q1, c, r, squared=True))(
+        qs, wb)
+    return pos, bi, bs, bo, db
+
+
+def _device_scan_core(data, csum, csum2, cslo, cs2lo, center, sids,
+                      anchors, n_master, lbs2, qs, dtw_lo, dtw_hi,
+                      seed_d2, seed_sid, seed_off, *, k: int, g: int,
+                      chunk: int, znorm: bool, measure: str, r: int,
+                      sb: int, interpret: bool):
     """The natively-batched LB-sorted bsf-pruned scan.
 
     All per-query arrays carry a leading batch axis B — the loop is NOT
@@ -327,7 +389,6 @@ def _device_scan_core(data, csum, csum2, center, sids, anchors, n_master,
     b_sz, qlen = qs.shape
     n_pad = sids.shape[1]
     n_chunks = n_pad // chunk
-    joff = jnp.arange(g, dtype=jnp.int32)
 
     def merge(pool, cd2, csid, coff):
         # pool (B, k) each; candidates (B, M); keeps rows sorted by d2,
@@ -350,20 +411,15 @@ def _device_scan_core(data, csum, csum2, center, sids, anchors, n_master,
         i, pool, nchunks, checked, tdist, nlbk, ndtw = state
         active = active_at(i, pool)
         nchunks = nchunks + active.astype(jnp.int32)
-        csid = jax.lax.dynamic_slice_in_dim(sids, i * chunk, chunk, 1)
-        canc = jax.lax.dynamic_slice_in_dim(anchors, i * chunk, chunk, 1)
-        cnm = jax.lax.dynamic_slice_in_dim(n_master, i * chunk, chunk, 1)
-        clb2 = jax.lax.dynamic_slice_in_dim(lbs2, i * chunk, chunk, 1)
+        csid, canc, cnm, clb2 = _chunk_slice(sids, anchors, n_master,
+                                             lbs2, i, chunk)
         kth = pool[0][:, k - 1]
         keep = (clb2 < kth[:, None]) & active[:, None]  # bsf pruning
-        offs = canc[:, :, None] + joff[None, None, :]   # (B, chunk, g)
-        ok = ((joff[None, None, :] < cnm[:, :, None]) & (offs + qlen <= n)
-              & keep[:, :, None]).reshape(b_sz, chunk * g)
-        cand_sid = jnp.repeat(csid, g, axis=1)
-        cand_off = offs.reshape(b_sz, chunk * g)
+        ok, cand_sid, cand_off = _chunk_candidates(csid, canc, cnm,
+                                                   keep, qlen, n, g)
         checked = checked + jnp.sum(keep, axis=1, dtype=jnp.int32)
         if measure == "ed":
-            d2 = fused_gather_ed(data, csum, csum2, center,
+            d2 = fused_gather_ed(data, csum, csum2, cslo, cs2lo, center,
                                  csid.reshape(-1), canc.reshape(-1),
                                  qs, g=g, rows=chunk, znorm=znorm,
                                  interpret=interpret)
@@ -372,9 +428,9 @@ def _device_scan_core(data, csum, csum2, center, sids, anchors, n_master,
             tdist = tdist + jnp.sum(ok, axis=1, dtype=jnp.int32)
         else:
             lb2w, mu, sd = fused_gather_lb_keogh(
-                data, csum, csum2, center, csid.reshape(-1),
-                canc.reshape(-1), dtw_lo, dtw_hi, g=g, rows=chunk,
-                znorm=znorm, interpret=interpret)
+                data, csum, csum2, cslo, cs2lo, center,
+                csid.reshape(-1), canc.reshape(-1), dtw_lo, dtw_hi,
+                g=g, rows=chunk, znorm=znorm, interpret=interpret)
             lb2w = jnp.where(ok, lb2w.reshape(b_sz, chunk * g), jnp.inf)
             mu = mu.reshape(b_sz, chunk * g)
             sd = sd.reshape(b_sz, chunk * g)
@@ -389,23 +445,9 @@ def _device_scan_core(data, csum, csum2, center, sids, anchors, n_master,
 
             def inner_body(st):
                 j, ipool, indtw = st
-                pos = j * sb + jnp.arange(sb)
-                bi = jnp.take_along_axis(
-                    sidx, jnp.minimum(pos, chunk * g - 1)[None, :]
-                    .repeat(b_sz, 0), axis=1)       # (B, sb)
-                bs = jnp.take_along_axis(cand_sid, bi, axis=1)
-                bo = jnp.take_along_axis(cand_off, bi, axis=1)
-                flat = (bs[:, :, None] * n
-                        + jnp.clip(bo, 0, n - qlen)[:, :, None]
-                        + jnp.arange(qlen, dtype=jnp.int32))
-                wb = jnp.take(data.reshape(-1), flat, mode="clip")
-                if znorm:
-                    # normalize EXACTLY as the LB tier did (kernel mu/sd)
-                    # so LB_Keogh <= DTW holds bitwise on survivors
-                    wb = ((wb - jnp.take_along_axis(mu, bi, 1)[..., None])
-                          / jnp.take_along_axis(sd, bi, 1)[..., None])
-                db = jax.vmap(lambda q1, c: dtw.dtw_band(
-                    q1, c, r, squared=True))(qs, wb)
+                pos, _, bs, bo, db = _survivor_bucket(
+                    data, qs, cand_sid, cand_off, sidx, mu, sd, j,
+                    sb=sb, r=r, znorm=znorm)
                 m = pos[None, :] < nsurv[:, None]
                 ipool = merge(ipool, jnp.where(m, db, jnp.inf), bs, bo)
                 return (j + 1, ipool,
@@ -443,19 +485,21 @@ def device_exact_scan(collection, sids, anchors, n_master, lbs2, qs,
                       dtw_lo, dtw_hi, seed_d2, seed_sid, seed_off, *,
                       k: int, g: int, measure: str, r: int, znorm: bool,
                       chunk_size: int, interpret: Optional[bool] = None):
-    """Batched device-resident exact scan; one host sync for the batch.
+    """Batched device-resident exact scan (no host sync — see engine).
 
     `collection` supplies the raw series plus the precomputed centered
     prefix sums the fused kernels derive window stats from.  All
     per-query arrays carry a leading batch axis B (B = 1 for a single
     query): sids/anchors/n_master/lbs2 are (B, n_pad) LB-sorted padded
-    candidate rows (see planner.pack_scan_plan), qs/dtw_lo/dtw_hi
-    (B, qlen) prepared queries (for ED pass qs in the dtw slots — they
-    are ignored), seed_* the (B, k) pools from the approximate pass.
+    candidate rows (`planner.device_scan_pack` / `device_leaf_pack` for
+    the approx stage), qs/dtw_lo/dtw_hi (B, qlen) prepared
+    queries (for ED pass qs in the dtw slots — they are ignored),
+    seed_* the (B, k) pools from the approximate pass.
 
-    Returns host arrays (d2 (B, k) f64 ascending, sid/off (B, k) i64,
-    stats (B, 5) int32 = [chunks, envelopes_checked, true_dists,
-    lb_keogh, dtw_full]).
+    Returns DEVICE arrays (d2 (B, k) f32 ascending, sid/off (B, k)
+    int32, stats (B, 5) int32 = [chunks, envelopes_checked, true_dists,
+    lb_keogh, dtw_full]); the caller performs the one host readback
+    (`jax.device_get`) for the whole batch.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -464,13 +508,186 @@ def device_exact_scan(collection, sids, anchors, n_master, lbs2, qs,
     sb = min(128, chunk * g)
     fn = _device_scan_program(k, g, chunk, znorm, measure, r, sb,
                               interpret)
-    d2, sid, off, st = fn(
+    return fn(
         collection.data, collection.csum, collection.csum2,
-        collection.center,
+        collection.csum_lo, collection.csum2_lo, collection.center,
         jnp.asarray(sids, jnp.int32), jnp.asarray(anchors, jnp.int32),
         jnp.asarray(n_master, jnp.int32), jnp.asarray(lbs2, jnp.float32),
         jnp.asarray(qs, jnp.float32), jnp.asarray(dtw_lo, jnp.float32),
         jnp.asarray(dtw_hi, jnp.float32), jnp.asarray(seed_d2, jnp.float32),
         jnp.asarray(seed_sid, jnp.int32), jnp.asarray(seed_off, jnp.int32))
-    return (np.asarray(d2, np.float64), np.asarray(sid, np.int64),
-            np.asarray(off, np.int64), np.asarray(st, np.int32))
+
+
+# --------------------------------------------------------------------------
+# device-resident eps-range scan (paper Alg. 5 with bsf := eps, ONE program)
+# --------------------------------------------------------------------------
+#
+# Unlike the k-NN pool, a range query's result size is data-dependent: the
+# scan carries a fixed-capacity (B, cap) hit buffer of (d2, sid, off) rows
+# through the while_loop and appends every verified candidate with
+# d2 <= eps2.  The pruning cut is INCLUSIVE (lb2 <= eps2): lb <= d, so a
+# boundary hit with lb == d == eps survives every tier (the PR 3 DTW
+# regression, now structural).  Overflow protocol: if a chunk's hits would
+# exceed the remaining capacity, NONE of that chunk's hits are written,
+# the chunk index is recorded, and the query goes inactive — the buffer
+# then holds exactly the hits of chunks [0, ovf), and the host finishes
+# chunks [ovf, n_chunks) through the reference path (DESIGN.md §9).
+
+def _device_range_core(data, csum, csum2, cslo, cs2lo, center, sids,
+                       anchors, n_master, lbs2, qs, dtw_lo, dtw_hi,
+                       eps2, *, cap: int, g: int, chunk: int,
+                       znorm: bool, measure: str, r: int, sb: int,
+                       interpret: bool):
+    """The natively-batched LB-sorted eps-range scan.
+
+    Layout as in _device_scan_core: per-query candidate rows (B, n_pad)
+    in ascending lower-bound order, chunk-padded with lbs2 = +inf;
+    eps2 (B,) squared radii.  Returns (buf_d2 (B, cap), buf_sid,
+    buf_off, cnt (B,), ovf (B,) — the first unwritten chunk index, or
+    n_chunks when the buffer never overflowed — and the stats stack).
+    """
+    n = data.shape[1]
+    b_sz, qlen = qs.shape
+    n_pad = sids.shape[1]
+    n_chunks = n_pad // chunk
+    no_ovf = jnp.int32(n_chunks)
+    rows_idx = jnp.arange(b_sz)[:, None]
+
+    def active_at(i, ovf):
+        first = jax.lax.dynamic_slice_in_dim(
+            lbs2, jnp.minimum(i * chunk, n_pad - 1), 1, axis=1)[:, 0]
+        return ((i < n_chunks) & jnp.isfinite(first)
+                & (first <= eps2) & (ovf == no_ovf))
+
+    def body(state):
+        (i, bd2, bsid, boff, cnt, ovf, nchunks, checked, tdist, nlbk,
+         ndtw) = state
+        active = active_at(i, ovf)
+        nchunks = nchunks + active.astype(jnp.int32)
+        csid, canc, cnm, clb2 = _chunk_slice(sids, anchors, n_master,
+                                             lbs2, i, chunk)
+        keep = (clb2 <= eps2[:, None]) & active[:, None]   # INCLUSIVE
+        ok, cand_sid, cand_off = _chunk_candidates(csid, canc, cnm,
+                                                   keep, qlen, n, g)
+        checked = checked + jnp.sum(keep, axis=1, dtype=jnp.int32)
+        if measure == "ed":
+            d2 = fused_gather_ed(data, csum, csum2, cslo, cs2lo, center,
+                                 csid.reshape(-1), canc.reshape(-1),
+                                 qs, g=g, rows=chunk, znorm=znorm,
+                                 interpret=interpret)
+            d2 = jnp.where(ok, d2.reshape(b_sz, chunk * g), jnp.inf)
+            tdist = tdist + jnp.sum(ok, axis=1, dtype=jnp.int32)
+        else:
+            lb2w, mu, sd = fused_gather_lb_keogh(
+                data, csum, csum2, cslo, cs2lo, center,
+                csid.reshape(-1), canc.reshape(-1), dtw_lo, dtw_hi,
+                g=g, rows=chunk, znorm=znorm, interpret=interpret)
+            lb2w = jnp.where(ok, lb2w.reshape(b_sz, chunk * g), jnp.inf)
+            mu = mu.reshape(b_sz, chunk * g)
+            sd = sd.reshape(b_sz, chunk * g)
+            nlbk = nlbk + jnp.sum(ok, axis=1, dtype=jnp.int32)
+            surv = lb2w <= eps2[:, None]                   # INCLUSIVE
+            nsurv = jnp.sum(surv, axis=1, dtype=jnp.int32)
+            sidx = jnp.argsort(~surv, axis=1)   # stable: survivors first
+
+            def inner_body(st):
+                j, d2acc, indtw = st
+                pos, bi, _, _, db = _survivor_bucket(
+                    data, qs, cand_sid, cand_off, sidx, mu, sd, j,
+                    sb=sb, r=r, znorm=znorm)
+                m = pos[None, :] < nsurv[:, None]
+                # scatter-min: clamped duplicate positions past nsurv
+                # carry +inf, so they can never clobber a real distance
+                d2acc = d2acc.at[rows_idx, bi].min(
+                    jnp.where(m, db, jnp.inf), mode="drop")
+                return (j + 1, d2acc,
+                        indtw + jnp.sum(m, axis=1, dtype=jnp.int32))
+
+            d2 = jnp.full((b_sz, chunk * g), jnp.inf, jnp.float32)
+            _, d2, ndtw = jax.lax.while_loop(
+                lambda st: jnp.any(st[0] * sb < nsurv), inner_body,
+                (jnp.int32(0), d2, ndtw))
+            tdist = tdist + nsurv
+        hit = ok & (d2 <= eps2[:, None])
+        nh = jnp.sum(hit, axis=1, dtype=jnp.int32)
+        ovf_now = active & (cnt + nh > cap)
+        # gather-based append (XLA CPU lowers scatter to a serial loop —
+        # ~7x the whole chunk's kernel time): buffer slot j receives the
+        # (j - cnt + 1)-th hit, located by binary search over the hit
+        # cumsum — searchsorted(hc, r) is the first index where hc
+        # reaches r, which is exactly the r-th hit's position
+        hc = jnp.cumsum(hit, axis=1)
+        ranks = (jnp.arange(cap, dtype=jnp.int32)[None, :]
+                 - cnt[:, None] + 1)
+        src = jax.vmap(jnp.searchsorted)(hc, ranks)
+        src = jnp.minimum(src, hit.shape[1] - 1)
+        write = ((ranks >= 1) & (ranks <= nh[:, None])
+                 & ~ovf_now[:, None] & active[:, None])
+        bd2 = jnp.where(
+            write,
+            jnp.take_along_axis(d2, src, 1).astype(jnp.float32), bd2)
+        bsid = jnp.where(write, jnp.take_along_axis(cand_sid, src, 1),
+                         bsid)
+        boff = jnp.where(write, jnp.take_along_axis(cand_off, src, 1),
+                         boff)
+        cnt = jnp.where(ovf_now, cnt, cnt + nh)
+        ovf = jnp.where(ovf_now & (ovf == no_ovf), i, ovf)
+        return (i + 1, bd2, bsid, boff, cnt, ovf, nchunks, checked,
+                tdist, nlbk, ndtw)
+
+    def cond(state):
+        return jnp.any(active_at(state[0], state[5]))
+
+    zeros = jnp.zeros((b_sz,), jnp.int32)
+    state = (jnp.int32(0),
+             jnp.full((b_sz, cap), jnp.inf, jnp.float32),
+             jnp.full((b_sz, cap), -1, jnp.int32),
+             jnp.full((b_sz, cap), -1, jnp.int32),
+             zeros, jnp.full((b_sz,), no_ovf, jnp.int32),
+             zeros, zeros, zeros, zeros, zeros)
+    (_, bd2, bsid, boff, cnt, ovf, nchunks, checked, tdist, nlbk,
+     ndtw) = jax.lax.while_loop(cond, body, state)
+    return bd2, bsid, boff, cnt, ovf, jnp.stack(
+        [nchunks, checked, tdist, nlbk, ndtw], axis=1)
+
+
+@functools.lru_cache(maxsize=None)
+def _device_range_program(cap: int, g: int, chunk: int, znorm: bool,
+                          measure: str, r: int, sb: int,
+                          interpret: bool):
+    core = functools.partial(_device_range_core, cap=cap, g=g,
+                             chunk=chunk, znorm=znorm, measure=measure,
+                             r=r, sb=sb, interpret=interpret)
+    return jax.jit(core)
+
+
+def device_range_scan(collection, sids, anchors, n_master, lbs2, qs,
+                      dtw_lo, dtw_hi, eps2, *, capacity: int, g: int,
+                      measure: str, r: int, znorm: bool,
+                      chunk_size: int, interpret: Optional[bool] = None):
+    """Batched device eps-range scan (no host sync — see engine).
+
+    Returns (buf_d2 (B, cap) f32, buf_sid/buf_off (B, cap) int32,
+    cnt (B,), ovf_chunk (B,), stats (B, 5), chunk) — device arrays plus
+    the static chunk size the scan actually used: `ovf_chunk` counts in
+    units of `chunk` rows of the packed plan, and the host continuation
+    of an overflowed query must resume at row `ovf_chunk * chunk` —
+    returning it keeps the engine from re-deriving (and drifting from)
+    the internal chunking.  ovf_chunk == n_pad // chunk means the
+    buffer held everything.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n_pad = sids.shape[1]
+    chunk = min(pow2ceil(chunk_size), n_pad)
+    sb = min(128, chunk * g)
+    fn = _device_range_program(pow2ceil(capacity), g, chunk, znorm,
+                               measure, r, sb, interpret)
+    return fn(
+        collection.data, collection.csum, collection.csum2,
+        collection.csum_lo, collection.csum2_lo, collection.center,
+        jnp.asarray(sids, jnp.int32), jnp.asarray(anchors, jnp.int32),
+        jnp.asarray(n_master, jnp.int32), jnp.asarray(lbs2, jnp.float32),
+        jnp.asarray(qs, jnp.float32), jnp.asarray(dtw_lo, jnp.float32),
+        jnp.asarray(dtw_hi, jnp.float32),
+        jnp.asarray(eps2, jnp.float32)) + (chunk,)

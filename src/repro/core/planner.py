@@ -27,7 +27,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bounds, dtw
-from repro.core.executor import pow2ceil
 from repro.core.paa import masked_znormalize, paa, znormalize
 from repro.core.types import EnvelopeParams, EnvelopeSet
 
@@ -70,6 +69,24 @@ def prepare_query(q, p: EnvelopeParams, measure: str = "ed",
             paa_lo=paa(dlo, p.seg_len), paa_hi=paa(dhi, p.seg_len),
             dtw_lo=dlo, dtw_hi=dhi, measure="dtw", r=r)
     raise ValueError(f"unknown measure {measure!r}")
+
+
+@partial(jax.jit, static_argnames=("seg_len", "znorm", "measure", "r"))
+def prepare_query_batch(q: jnp.ndarray, seg_len: int, znorm: bool,
+                        measure: str, r: int):
+    """prepare_query for a (B, qlen) same-length batch, ONE jitted call.
+
+    The one-sync device pipeline preps whole length groups at once —
+    per-query eager znormalize/paa dispatch used to cost more than the
+    verification itself.  Returns (qn, dtw_lo, dtw_hi, paa_lo, paa_hi),
+    each (B, ...); for ED the dtw slots alias qn (ignored downstream).
+    """
+    qn = znormalize(q) if znorm else q
+    if measure == "ed":
+        qp = paa(qn, seg_len)
+        return qn, qn, qn, qp, qp
+    dlo, dhi = dtw.dtw_envelope(qn, r)
+    return qn, dlo, dhi, paa(dlo, seg_len), paa(dhi, seg_len)
 
 
 # --------------------------------------------------------------------------
@@ -115,6 +132,14 @@ def block_lower_bounds(paa_lo, paa_hi, blk_lo, blk_hi, blk_valid,
     return jnp.where(blk_valid, d, jnp.inf)
 
 
+@partial(jax.jit, static_argnames=("seg_len", "nseg"))
+def block_lower_bounds_batch(paa_lo, paa_hi, blk_lo, blk_hi, blk_valid,
+                             seg_len: int, nseg: int):
+    """block_lower_bounds of a stacked (B, w) query batch: (B, Nb)."""
+    d = bounds.interval_mindist(paa_lo, paa_hi, blk_lo, blk_hi, seg_len, nseg)
+    return jnp.where(blk_valid[None, :], d, jnp.inf)
+
+
 # --------------------------------------------------------------------------
 # host-side orderings
 # --------------------------------------------------------------------------
@@ -144,62 +169,156 @@ def plan_scan_order(index, pq: PreparedQuery,
     return order, lbs[order]
 
 
-@dataclasses.dataclass
-class ScanPlan:
-    """Packed input of the device-resident exact scan (one qlen group).
+# --------------------------------------------------------------------------
+# device-side packing (the one-sync local pipeline)
+# --------------------------------------------------------------------------
+#
+# A host-side pack (argsort over np.asarray'd lower bounds, as PR 3's
+# pack_scan_plan did) forces a device->host readback of every bound
+# before the scan program can launch.  The one-sync pipeline
+# (engine._local_exact_device / _local_range_device) instead packs on
+# DEVICE: these functions are jitted, consume the traced lower bounds,
+# and their outputs flow straight into the scan programs — the only
+# host sync left is the final result readback.
 
-    All arrays are (B, n_pad): per query, the full candidate set (main
-    ++ ingestion delta) in ascending lower-bound order, right-padded to
-    a power of two so the scan's chunk loop never re-specializes on the
-    exact envelope count.  Padding / invalid / excluded rows carry
-    lbs2 = +inf, which the scan's bsf cut prunes for free.
+@partial(jax.jit, static_argnames=("n_main", "block_size", "chunk", "n_leaves"))
+def device_leaf_pack(env_sid, env_anchor, env_nm, env_valid, blk_lb,
+                     n_main: int, block_size: int, chunk: int,
+                     n_leaves: int):
+    """Pack the approximate pass's candidates (paper Alg. 4, batched).
+
+    Builds the chunk-aligned candidate rows the device scan core
+    consumes for the *approximate* stage: first the ingestion delta
+    (rows [n_main, N) of the combined set) padded to a multiple of
+    `chunk` with lbs2 = 0 for real rows (the delta has no block cover —
+    it is always swept, which primes the bsf exactly like the host
+    path), then the `n_leaves` best leaves in ascending block-LB order,
+    each leaf padded to `chunk` rows (chunk = pow2ceil(block_size)),
+    every row carrying its BLOCK's squared lower bound — so the scan
+    core's per-chunk stop IS Alg. 4's "next leaf cannot improve" stop.
+
+    Returns (sids, anchors, n_master, lbs2, comb_idx, blk_lb_sorted):
+    all (B, n_pad) except blk_lb_sorted (B, Nb); comb_idx maps each
+    packed row back to its combined-set envelope index (N for padding —
+    scatter-dropped by device_scan_pack's exclusion).
     """
+    b_sz, nblk = blk_lb.shape
+    n_comb = env_sid.shape[0]
+    n_delta = n_comb - n_main
+    nd_pad = -(-n_delta // chunk) * chunk
 
-    sids: np.ndarray       # (B, n_pad) int32
-    anchors: np.ndarray    # (B, n_pad) int32
-    n_master: np.ndarray   # (B, n_pad) int32
-    lbs2: np.ndarray       # (B, n_pad) float32 squared sorted LBs
-    n_env: int             # true candidate count (LB computations / query)
+    order = jnp.argsort(blk_lb, axis=1)                     # (B, Nb)
+    blk_sorted = jnp.take_along_axis(blk_lb, order, axis=1)
+    leaf_lb2 = (blk_sorted[:, :n_leaves] ** 2).astype(jnp.float32)
+
+    member = jnp.arange(chunk, dtype=jnp.int32)
+    lidx = (order[:, :n_leaves, None].astype(jnp.int32) * block_size
+            + member[None, None, :])                # (B, n_leaves, chunk)
+    lidx = jnp.where(member[None, None, :] < block_size, lidx, n_comb)
+    didx = jnp.where(jnp.arange(nd_pad) < n_delta,
+                     n_main + jnp.arange(nd_pad, dtype=jnp.int32), n_comb)
+    comb_idx = jnp.concatenate(
+        [jnp.broadcast_to(didx[None, :], (b_sz, nd_pad)),
+         lidx.reshape(b_sz, n_leaves * chunk)], axis=1)     # (B, n_pad)
+
+    real = comb_idx < n_comb
+    safe = jnp.minimum(comb_idx, n_comb - 1)
+    sids = jnp.where(real, jnp.take(env_sid, safe), 0).astype(jnp.int32)
+    anchors = jnp.where(real, jnp.take(env_anchor, safe), 0) \
+        .astype(jnp.int32)
+    nm = jnp.where(real & jnp.take(env_valid, safe),
+                   jnp.take(env_nm, safe), 0).astype(jnp.int32)
+    row_lb2 = jnp.concatenate(
+        [jnp.zeros((b_sz, nd_pad), jnp.float32),
+         jnp.repeat(leaf_lb2, chunk, axis=1)], axis=1)
+    lbs2 = jnp.where(real & (nm > 0), row_lb2, jnp.inf)
+    # each chunk's FIRST row decides the scan core's stop test; within a
+    # delta chunk the first row is always real (padding is a tail), and
+    # within a leaf chunk the sorted main set puts valid rows first — so
+    # re-pin the first row of every chunk to its block/delta bound even
+    # when that row is individually invalid (empty boundary blocks keep
+    # lbs2 = +inf everywhere and are skipped outright)
+    first = (jnp.arange(comb_idx.shape[1]) % chunk) == 0
+    any_valid = jnp.concatenate(
+        [jnp.broadcast_to(jnp.array(n_delta > 0)[None],
+                          (b_sz, nd_pad)) if nd_pad else
+         jnp.zeros((b_sz, 0), bool),
+         jnp.repeat(jnp.isfinite(leaf_lb2), chunk, axis=1)], axis=1)
+    lbs2 = jnp.where(first[None, :] & any_valid, row_lb2, lbs2)
+    return sids, anchors, nm, lbs2, comb_idx, blk_sorted
 
 
-def pack_scan_plan(index, pqs, use_paa_bounds: bool = False,
-                   exclude=None) -> ScanPlan:
-    """LB-sort + pack the candidate set for a batch of same-length queries.
+@partial(jax.jit, static_argnames=("chunk", "n_pad"))
+def device_scan_pack(env_sid, env_anchor, env_nm, lbs, comb_idx,
+                     visited_chunks, chunk: int, n_pad: int):
+    """LB-sort + pack the exact/range scan's candidate rows ON DEVICE.
 
-    `exclude`: optional per-query arrays of combined-set envelope indices
-    to drop from the scan (already verified by the approximate pass —
-    the device pool has no dedup, so seeded envelopes must not be
-    scanned again).
+    The device twin of `pack_scan_plan`: `lbs` (B, N) are the combined
+    candidate set's lower bounds; rows the approximate pass already
+    verified — packed positions `< visited_chunks * chunk` of
+    `comb_idx` (see device_leaf_pack) — are excluded by scatter-setting
+    their bound to +inf (the device pool has no dedup).  Candidates are
+    argsorted per query and right-padded to `n_pad` (pow2) columns.
+
+    Returns (sids, anchors, n_master, lbs2, order) — plan arrays
+    (B, n_pad) plus the (B, N) sort order the host continuation of an
+    overflowed range query replays the tail chunks from.
     """
-    env = index.search_envelopes()
-    n = env.size
-    qb = jnp.stack([pq.paa_lo for pq in pqs])
-    qh = jnp.stack([pq.paa_hi for pq in pqs])
-    lbs = np.asarray(env_lower_bounds_batch(
-        qb, qh, env, index.breakpoints, index.params.seg_len,
-        pqs[0].nseg, use_paa_bounds), np.float64)        # (B, n)
-    if exclude is not None:
-        for b, excl in enumerate(exclude):
-            if len(excl):
-                lbs[b, excl] = np.inf
-    order = np.argsort(lbs, axis=1)
-    lbs_sorted = np.take_along_axis(lbs, order, axis=1)
-    pad = pow2ceil(n) - n
+    b_sz, n = lbs.shape
+    pos = jnp.arange(comb_idx.shape[1], dtype=jnp.int32)
+    verified = pos[None, :] < (visited_chunks[:, None] * chunk)
+    excl = jnp.zeros((b_sz, n), bool).at[
+        jnp.arange(b_sz)[:, None], comb_idx].max(verified, mode="drop")
+    lbs = jnp.where(excl, jnp.inf, lbs)
+    order = jnp.argsort(lbs, axis=1)
+    lbs_sorted = jnp.take_along_axis(lbs, order, axis=1)
+
+    pad = n_pad - n
+    def pack(col, fill):
+        out = jnp.take(col, order).astype(jnp.int32)
+        return jnp.pad(out, ((0, 0), (0, pad)), constant_values=fill)
+
+    lbs2 = jnp.pad((lbs_sorted ** 2).astype(jnp.float32),
+                   ((0, 0), (0, pad)), constant_values=jnp.inf)
+    return (pack(env_sid, 0), pack(env_anchor, 0), pack(env_nm, 0),
+            lbs2, order)
+
+
+@partial(jax.jit, static_argnames=("n_pad",))
+def device_range_pack(env_sid, env_anchor, env_nm, lbs, eps2,
+                      n_pad: int):
+    """Pack the eps-range scan's candidates ON DEVICE — no sort.
+
+    A range query's cut never moves (bsf == eps), so scan order is
+    irrelevant: any envelope with lb2 <= eps2 must be verified, no
+    other ever can be.  Candidates are therefore *packed to the front
+    in original combined-set order* by a binary-search gather over the
+    candidate-mask cumsum (an argsort here costs more than the whole
+    verification chunk on CPU).  The inclusive cut keeps boundary hits
+    with lb == d == eps.
+
+    Returns (sids, anchors, n_master, lbs2, src): plan arrays
+    (B, n_pad) with +inf lbs2 past each query's candidate count, and
+    `src` — the combined-set envelope index of every packed row (what
+    the host continuation of an overflowed query replays from).
+    """
+    lbs2 = (lbs ** 2).astype(jnp.float32)
+    cand = (lbs2 <= eps2[:, None]) & jnp.isfinite(lbs2)
+    nc = jnp.sum(cand, axis=1, dtype=jnp.int32)
+    cc = jnp.cumsum(cand, axis=1)
+    ranks = jnp.arange(n_pad, dtype=jnp.int32) + 1
+    src = jax.vmap(jnp.searchsorted, in_axes=(0, None))(cc, ranks)
+    src = jnp.minimum(src, lbs2.shape[1] - 1).astype(jnp.int32)
+    real = ranks[None, :] <= nc[:, None]
 
     def pack(col, fill):
-        out = np.asarray(col)[order]
-        if pad:
-            out = np.pad(out, ((0, 0), (0, pad)), constant_values=fill)
-        return out.astype(np.int32)
+        return jnp.where(real, jnp.take(col, src), fill) \
+            .astype(jnp.int32)
 
-    lbs2 = (lbs_sorted ** 2).astype(np.float32)
-    if pad:
-        lbs2 = np.pad(lbs2, ((0, 0), (0, pad)),
-                      constant_values=np.inf)
-    return ScanPlan(sids=pack(env.series_id, 0),
-                    anchors=pack(env.anchor, 0),
-                    n_master=pack(env.n_master, 0),
-                    lbs2=lbs2, n_env=n)
+    lbs2p = jnp.where(real, jnp.take_along_axis(lbs2, src, axis=1),
+                      jnp.inf)
+    return (pack(env_sid, 0), pack(env_anchor, 0), pack(env_nm, 0),
+            lbs2p, src)
 
 
 # --------------------------------------------------------------------------

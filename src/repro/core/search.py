@@ -101,3 +101,33 @@ def brute_force_knn(collection: Collection, q, k: int, znorm: bool,
         series=(order // n_off).astype(np.int64),
         offsets=(order % n_off).astype(np.int64),
         stats=SearchStats(envelopes_total=0))
+
+
+def brute_force_range(collection: Collection, q, eps: float, znorm: bool,
+                      measure: str = "ed", r: int = 0) -> SearchResult:
+    """Exhaustive eps-range oracle: every subsequence with d <= eps,
+    sorted ascending by distance (ties in (series, offset) order)."""
+    q = jnp.asarray(q, jnp.float32)
+    qlen = int(q.shape[-1])
+    qn = znormalize(q) if znorm else q
+    n = collection.series_len
+    n_off = n - qlen + 1
+    offs = jnp.arange(n_off, dtype=jnp.int32)
+
+    def per_series(row):
+        wins = jax.vmap(
+            lambda o: jax.lax.dynamic_slice(row, (o,), (qlen,)))(offs)
+        if measure == "ed":
+            return _ed_batch(wins, qn, znorm)
+        wn = znormalize(wins) if znorm else wins
+        return dtw.dtw_band(qn, wn, r, squared=True)
+
+    d2 = np.asarray(jax.lax.map(per_series, collection.data),
+                    np.float64).reshape(-1)
+    hit = np.nonzero(d2 <= float(eps) ** 2)[0]
+    hit = hit[np.argsort(d2[hit], kind="stable")]
+    return SearchResult(
+        dists=np.sqrt(np.maximum(d2[hit], 0.0)),
+        series=(hit // n_off).astype(np.int64),
+        offsets=(hit % n_off).astype(np.int64),
+        stats=SearchStats(envelopes_total=0))

@@ -13,6 +13,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,24 +84,61 @@ class Collection:
     mean / std is a 2-gather).  Series are centered per-series before the
     squared cumsum to keep float32 variance computation well-conditioned
     (Z-normalization is invariant to per-series shifts).
+
+    The prefix sums are accumulated in float64 and stored as a two-float
+    (hi, lo) split: `csum` holds the float32 rounding of the exact sum and
+    `csum_lo` the float32 residual.  A window sum recovered as
+    (hi[e]-hi[s]) + (lo[e]-lo[s]) has error ~eps_f32 * |window sum| instead
+    of ~eps_f32 * |prefix sum| — the catastrophic-cancellation term that
+    grows with series length / offset is gone, so device-scan distances
+    track the host's direct mean/var to float32 roundoff at any offset.
     """
 
     data: jnp.ndarray          # (S, n) raw values
-    csum: jnp.ndarray          # (S, n + 1) cumsum of centered values
-    csum2: jnp.ndarray         # (S, n + 1) cumsum of squared centered values
+    csum: jnp.ndarray          # (S, n + 1) centered cumsum, f32 hi part
+    csum2: jnp.ndarray         # (S, n + 1) squared-centered cumsum, hi part
     center: jnp.ndarray        # (S,) per-series mean removed before csum/csum2
+    csum_lo: jnp.ndarray = None    # (S, n + 1) f32 residual of csum
+    csum2_lo: jnp.ndarray = None   # (S, n + 1) f32 residual of csum2
 
     @classmethod
     def from_array(cls, data) -> "Collection":
         data = jnp.asarray(data, jnp.float32)
         if data.ndim == 1:
             data = data[None]
-        center = jnp.mean(data, axis=-1)
-        centered = data - center[:, None]
-        zeros = jnp.zeros((data.shape[0], 1), jnp.float32)
-        csum = jnp.concatenate([zeros, jnp.cumsum(centered, axis=-1)], axis=-1)
-        csum2 = jnp.concatenate([zeros, jnp.cumsum(centered * centered, axis=-1)], axis=-1)
-        return cls(data=data, csum=csum, csum2=csum2, center=center)
+        if isinstance(data, jax.core.Tracer):
+            # traced context (distributed shard programs build per-shard
+            # Collections in-graph): float32 sums, zero residuals — those
+            # programs verify via masked windows, not the prefix sums
+            center = jnp.mean(data, axis=-1)
+            centered = data - center[:, None]
+            zeros = jnp.zeros((data.shape[0], 1), jnp.float32)
+            csum = jnp.concatenate(
+                [zeros, jnp.cumsum(centered, axis=-1)], axis=-1)
+            csum2 = jnp.concatenate(
+                [zeros, jnp.cumsum(centered * centered, axis=-1)], axis=-1)
+            return cls(data=data, csum=csum, csum2=csum2, center=center,
+                       csum_lo=jnp.zeros_like(csum),
+                       csum2_lo=jnp.zeros_like(csum2))
+        host = np.asarray(data, np.float64)
+        center64 = host.mean(axis=-1)
+        centered = host - center64[:, None]
+        zeros = np.zeros((host.shape[0], 1), np.float64)
+        csum64 = np.concatenate(
+            [zeros, np.cumsum(centered, axis=-1)], axis=-1)
+        csum2_64 = np.concatenate(
+            [zeros, np.cumsum(centered * centered, axis=-1)], axis=-1)
+
+        def split(x64):
+            hi = x64.astype(np.float32)
+            lo = (x64 - hi.astype(np.float64)).astype(np.float32)
+            return jnp.asarray(hi), jnp.asarray(lo)
+
+        csum, csum_lo = split(csum64)
+        csum2, csum2_lo = split(csum2_64)
+        return cls(data=data, csum=csum, csum2=csum2,
+                   center=jnp.asarray(center64, jnp.float32),
+                   csum_lo=csum_lo, csum2_lo=csum2_lo)
 
     @property
     def num_series(self) -> int:
@@ -112,14 +150,17 @@ class Collection:
 
     def window_stats(self, sid, off, length):
         """(mean, std) of windows data[sid, off : off + length] (vectorized)."""
-        s1 = self.csum[sid, off + length] - self.csum[sid, off]
-        s2 = self.csum2[sid, off + length] - self.csum2[sid, off]
+        s1 = (self.csum[sid, off + length] - self.csum[sid, off]) \
+            + (self.csum_lo[sid, off + length] - self.csum_lo[sid, off])
+        s2 = (self.csum2[sid, off + length] - self.csum2[sid, off]) \
+            + (self.csum2_lo[sid, off + length] - self.csum2_lo[sid, off])
         mu_c = s1 / length
         var = jnp.maximum(s2 / length - mu_c * mu_c, 0.0)
         return mu_c + self.center[sid], jnp.sqrt(var)
 
     def tree_flatten(self):
-        return (self.data, self.csum, self.csum2, self.center), None
+        return (self.data, self.csum, self.csum2, self.center,
+                self.csum_lo, self.csum2_lo), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -191,4 +232,6 @@ def concat_collections(a: Collection, b: Collection) -> Collection:
         csum=jnp.concatenate([a.csum, b.csum], axis=0),
         csum2=jnp.concatenate([a.csum2, b.csum2], axis=0),
         center=jnp.concatenate([a.center, b.center], axis=0),
+        csum_lo=jnp.concatenate([a.csum_lo, b.csum_lo], axis=0),
+        csum2_lo=jnp.concatenate([a.csum2_lo, b.csum2_lo], axis=0),
     )

@@ -28,10 +28,11 @@ its survivor windows IDENTICALLY — the LB <= DTW invariant then holds
 exactly (both tiers see the same normalized values), which is what makes
 on-device pruning sound.
 
-The stats path makes the device scan's distances differ from the
-host path's direct mean/var by ~1e-5 relative (documented deviation,
-DESIGN.md §8); both are unbiased float32 evaluations of the same
-quantity.  `data`/`csum` are mapped whole into the kernel — fine for
+The prefix sums arrive as a two-float (hi, lo) split of an exact
+float64 accumulation (types.Collection), so the stats path tracks the
+host's direct mean/var to ordinary f32 roundoff at ANY series
+length/offset — the cancellation drift that grew with |csum| is gone
+(DESIGN.md §8).  `data`/`csum` are mapped whole into the kernel — fine for
 VMEM-sized collections; TPU-scale collections would block the series
 axis with double-buffered DMA and lower the flat gathers to
 scalar-prefetch driven DMAs (interpret-first, like the rest of
@@ -85,29 +86,41 @@ def _gather_regions(sid_ref, anc_ref, data_ref, *, g: int, qlen: int,
     return sid, anc, slab.reshape(rows, reg)
 
 
-def _window_sums(sid, anc, csum_ref, csum2_ref, *, g: int, qlen: int):
-    """(s1, s2): centered window sums of every candidate, two gathers."""
+def _window_sums(sid, anc, csum_ref, csum2_ref, cslo_ref, cs2lo_ref, *,
+                 g: int, qlen: int):
+    """(s1, s2): centered window sums of every candidate.
+
+    The prefix sums arrive as a two-float (hi, lo) split of the exact
+    float64 accumulation (see types.Collection); summing the hi and lo
+    differences recovers the window sum to ~f32 roundoff of the *window*
+    sum — the cancellation error no longer grows with the offset.
+    """
     np1 = csum_ref.shape[1]
     n = np1 - 1
     offs = jnp.clip(anc[:, None] + jnp.arange(g, dtype=jnp.int32), 0,
                     n - qlen)
     flat = sid[:, None] * np1 + offs
-    cs = csum_ref[...].reshape(-1)
-    cs2 = csum2_ref[...].reshape(-1)
-    s1 = (jnp.take(cs, flat + qlen, mode="clip")
-          - jnp.take(cs, flat, mode="clip"))
-    s2 = (jnp.take(cs2, flat + qlen, mode="clip")
-          - jnp.take(cs2, flat, mode="clip"))
-    return s1, s2                                            # (rows, g)
+
+    def wsum(hi_ref, lo_ref):
+        hi = hi_ref[...].reshape(-1)
+        lo = lo_ref[...].reshape(-1)
+        return ((jnp.take(hi, flat + qlen, mode="clip")
+                 - jnp.take(hi, flat, mode="clip"))
+                + (jnp.take(lo, flat + qlen, mode="clip")
+                   - jnp.take(lo, flat, mode="clip")))
+
+    return wsum(csum_ref, cslo_ref), wsum(csum2_ref, cs2lo_ref)  # (rows, g)
 
 
 def _fused_ed_kernel(sid_ref, anc_ref, data_ref, csum_ref, csum2_ref,
-                     center_ref, q_ref, qmat_ref, out_ref, *, g: int,
-                     qlen: int, rows: int, znorm: bool):
+                     cslo_ref, cs2lo_ref, center_ref, q_ref, qmat_ref,
+                     out_ref, *, g: int, qlen: int, rows: int,
+                     znorm: bool):
     sid, anc, region = _gather_regions(sid_ref, anc_ref, data_ref, g=g,
                                        qlen=qlen, rows=rows)
     dots = region @ qmat_ref[0]                              # (rows, g)
-    s1, s2 = _window_sums(sid, anc, csum_ref, csum2_ref, g=g, qlen=qlen)
+    s1, s2 = _window_sums(sid, anc, csum_ref, csum2_ref, cslo_ref,
+                          cs2lo_ref, g=g, qlen=qlen)
     if znorm:
         mu_c = s1 / qlen
         var = s2 / qlen - mu_c * mu_c
@@ -122,12 +135,13 @@ def _fused_ed_kernel(sid_ref, anc_ref, data_ref, csum_ref, csum2_ref,
 
 
 def _fused_lb_keogh_kernel(sid_ref, anc_ref, data_ref, csum_ref,
-                           csum2_ref, center_ref, lo_ref, hi_ref,
-                           lb_ref, mu_ref, sd_ref, *, g: int, qlen: int,
-                           rows: int, znorm: bool):
+                           csum2_ref, cslo_ref, cs2lo_ref, center_ref,
+                           lo_ref, hi_ref, lb_ref, mu_ref, sd_ref, *,
+                           g: int, qlen: int, rows: int, znorm: bool):
     sid, anc, region = _gather_regions(sid_ref, anc_ref, data_ref, g=g,
                                        qlen=qlen, rows=rows)
-    s1, s2 = _window_sums(sid, anc, csum_ref, csum2_ref, g=g, qlen=qlen)
+    s1, s2 = _window_sums(sid, anc, csum_ref, csum2_ref, cslo_ref,
+                          cs2lo_ref, g=g, qlen=qlen)
     if znorm:
         mu_c = s1 / qlen
         var = s2 / qlen - mu_c * mu_c
@@ -154,6 +168,8 @@ def _common_specs(data, csum, center, qlen):
         pl.BlockSpec(data.shape, lambda i, *_: (0, 0)),
         pl.BlockSpec(csum.shape, lambda i, *_: (0, 0)),
         pl.BlockSpec(csum.shape, lambda i, *_: (0, 0)),
+        pl.BlockSpec(csum.shape, lambda i, *_: (0, 0)),   # csum_lo
+        pl.BlockSpec(csum.shape, lambda i, *_: (0, 0)),   # csum2_lo
         pl.BlockSpec(center.shape, lambda i, *_: (0,)),
         pl.BlockSpec((1, qlen), lambda i, *_: (i, 0)),
         pl.BlockSpec((1, qlen), lambda i, *_: (i, 0)),
@@ -163,19 +179,20 @@ def _common_specs(data, csum, center, qlen):
 @functools.partial(jax.jit,
                    static_argnames=("g", "rows", "znorm", "interpret"))
 def fused_gather_ed(data: jnp.ndarray, csum: jnp.ndarray,
-                    csum2: jnp.ndarray, center: jnp.ndarray,
+                    csum2: jnp.ndarray, csum_lo: jnp.ndarray,
+                    csum2_lo: jnp.ndarray, center: jnp.ndarray,
                     sids: jnp.ndarray, anchors: jnp.ndarray,
                     qs: jnp.ndarray, *, g: int, rows: int, znorm: bool,
                     interpret: bool = True):
     """Squared ED of B queries' candidate chunks, one grid step each.
 
-    data (S, n) + its Collection prefix sums csum/csum2 (S, n+1) and
-    per-series center (S,); sids/anchors (B * rows,) int32 — query b's
-    chunk is rows [b*rows, (b+1)*rows); qs (B, qlen) prepared queries
-    (already Z-normalized when znorm).  Returns (B * rows, g) float32 —
-    entry (e, j) is d2(q_b, data[sids[e], anchors[e]+j : +qlen]);
-    windows overrunning their series are garbage (mask with the
-    validity test).
+    data (S, n) + its Collection prefix sums csum/csum2 with their f32
+    residuals csum_lo/csum2_lo (each (S, n+1)) and per-series center
+    (S,); sids/anchors (B * rows,) int32 — query b's chunk is rows
+    [b*rows, (b+1)*rows); qs (B, qlen) prepared queries (already
+    Z-normalized when znorm).  Returns (B * rows, g) float32 — entry
+    (e, j) is d2(q_b, data[sids[e], anchors[e]+j : +qlen]); windows
+    overrunning their series are garbage (mask with the validity test).
     """
     b, qlen = qs.shape
     qmats = toeplitz_query(qs, g)                # (B, qlen+g-1, g)
@@ -183,7 +200,7 @@ def fused_gather_ed(data: jnp.ndarray, csum: jnp.ndarray,
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b,),
-        in_specs=_common_specs(data, csum, center, qlen)[:5]
+        in_specs=_common_specs(data, csum, center, qlen)[:7]
         + [pl.BlockSpec((1, reg, g), lambda i, *_: (i, 0, 0))],
         out_specs=pl.BlockSpec((rows, g), lambda i, *_: (i, 0)),
     )
@@ -193,13 +210,15 @@ def fused_gather_ed(data: jnp.ndarray, csum: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((b * rows, g), jnp.float32),
         grid_spec=grid_spec,
         interpret=interpret,
-    )(sids, anchors, data, csum, csum2, center, qs, qmats)
+    )(sids, anchors, data, csum, csum2, csum_lo, csum2_lo, center, qs,
+      qmats)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("g", "rows", "znorm", "interpret"))
 def fused_gather_lb_keogh(data: jnp.ndarray, csum: jnp.ndarray,
-                          csum2: jnp.ndarray, center: jnp.ndarray,
+                          csum2: jnp.ndarray, csum_lo: jnp.ndarray,
+                          csum2_lo: jnp.ndarray, center: jnp.ndarray,
                           sids: jnp.ndarray, anchors: jnp.ndarray,
                           dtw_lo: jnp.ndarray, dtw_hi: jnp.ndarray, *,
                           g: int, rows: int, znorm: bool,
@@ -225,4 +244,5 @@ def fused_gather_lb_keogh(data: jnp.ndarray, csum: jnp.ndarray,
         out_shape=[jax.ShapeDtypeStruct((b * rows, g), jnp.float32)] * 3,
         grid_spec=grid_spec,
         interpret=interpret,
-    )(sids, anchors, data, csum, csum2, center, dtw_lo, dtw_hi)
+    )(sids, anchors, data, csum, csum2, csum_lo, csum2_lo, center,
+      dtw_lo, dtw_hi)

@@ -55,10 +55,16 @@ def extend_index(index: UlisseIndex, series) -> UlisseIndex:
         series_id=env_new.series_id + index.collection.num_series)
     delta = env_new if index.delta is None else \
         concat_envelope_sets([index.delta, env_new])
-    return dataclasses.replace(
-        index,
-        collection=concat_collections(index.collection, new_part),
-        delta=delta)
+    coll = index.collection
+    from repro.storage.store import LazyCollection
+    if isinstance(coll, LazyCollection) and not coll.is_materialized:
+        # cold-open (mmap) index: queue the part without touching the
+        # on-disk payload — append stays O(new series), the stored
+        # shards materialize only when verification first reads raw data
+        coll = coll.with_appended(new_part)
+    else:
+        coll = concat_collections(coll, new_part)
+    return dataclasses.replace(index, collection=coll, delta=delta)
 
 
 def compact_index(index: UlisseIndex) -> UlisseIndex:

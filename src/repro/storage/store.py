@@ -42,19 +42,28 @@ class LazyCollection:
     the mmap'd shards and builds the real Collection (prefix sums are
     recomputed — they are derived state, cheaper to rebuild than to
     store at 2x the raw payload).
+
+    `with_appended` supports incremental ingestion on a cold-open index
+    (`UlisseEngine.append` via storage.delta): appended parts queue in a
+    pending list — O(new series) host memory, NO shard read — and fold
+    into the materialized Collection only when verification first needs
+    raw values.  Cold-open -> append -> save therefore never pays an
+    O(raw data) materialization for the append itself.
     """
 
     def __init__(self, path: str, shards: List[dict], num_series: int,
-                 series_len: int):
+                 series_len: int, pending: Optional[list] = None):
         self._path = path
         self._shards = shards
         self._num_series = num_series
         self._series_len = series_len
+        self._pending: list = list(pending or [])
         self._coll: Optional[Collection] = None
 
     @property
     def num_series(self) -> int:
-        return self._num_series
+        return self._num_series \
+            + sum(p.num_series for p in self._pending)
 
     @property
     def series_len(self) -> int:
@@ -64,10 +73,20 @@ class LazyCollection:
     def is_materialized(self) -> bool:
         return self._coll is not None
 
+    def with_appended(self, part: Collection) -> "LazyCollection":
+        """A new LazyCollection with `part`'s series appended (O(new))."""
+        if part.series_len != self._series_len:
+            raise ValueError(
+                f"appended series_len {part.series_len} != stored "
+                f"series_len {self._series_len}")
+        return LazyCollection(self._path, self._shards, self._num_series,
+                              self._series_len, self._pending + [part])
+
     def materialize(self) -> Collection:
         if self._coll is None:
-            parts = [fmt.load_array(self._path, e, mmap=True)
+            parts = [np.asarray(fmt.load_array(self._path, e, mmap=True))
                      for e in self._shards]
+            parts += [np.asarray(p.data) for p in self._pending]
             data = parts[0] if len(parts) == 1 else np.concatenate(parts)
             self._coll = Collection.from_array(data)
         return self._coll
@@ -83,6 +102,14 @@ class LazyCollection:
     @property
     def csum2(self):
         return self.materialize().csum2
+
+    @property
+    def csum_lo(self):
+        return self.materialize().csum_lo
+
+    @property
+    def csum2_lo(self):
+        return self.materialize().csum2_lo
 
     @property
     def center(self):

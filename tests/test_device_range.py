@@ -1,0 +1,189 @@
+"""Device-resident eps-range + batched device approximate pass vs the
+host reference paths and brute force (the PR 4 equivalence matrix):
+
+  * device range == host range == brute force across znorm/raw x ed/dtw
+    x delta-present/compacted, including result sizes and identities;
+  * hit-buffer overflow -> host continuation from the overflow chunk
+    (the union must be exact, no duplicates, no drops);
+  * a batch of range queries routes through ONE device program per
+    length group (no silent per-query Python fallback);
+  * the batched device approximate pass seeds the exact scan to the
+    same answers as the host-approx-seeded reference, and approx-only
+    queries (mode="approx") agree between backends;
+  * eps boundary ties (lb == d == eps) survive the device path for both
+    measures (exactly-representable constant-series distances).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Collection, EnvelopeParams, QuerySpec,
+                        UlisseEngine)
+from repro.core.search import brute_force_knn, brute_force_range
+from repro.storage import delta as storage_delta
+
+PARAMS = dict(lmin=64, lmax=128, seg_len=16, card=64, gamma=8)
+
+
+@pytest.fixture(scope="module", params=[True, False],
+                ids=["znorm", "raw"])
+def engines(request, walk_collection, rng):
+    """(engine, collection) pairs with and without an ingestion delta."""
+    znorm = request.param
+    p = EnvelopeParams(znorm=znorm, **PARAMS)
+    base = walk_collection[:16]
+    extra = np.cumsum(rng.normal(size=(4, 192)), -1).astype(np.float32)
+    plain = UlisseEngine.from_collection(Collection.from_array(base), p,
+                                         block_size=16, num_levels=2)
+    with_delta = UlisseEngine.from_collection(
+        Collection.from_array(base), p, block_size=16, num_levels=2)
+    with_delta._index = storage_delta.extend_index(with_delta.index, extra)
+    full = Collection.from_array(np.concatenate([base, extra]))
+    return znorm, (plain, Collection.from_array(base)), (with_delta, full)
+
+
+def _noised(coll, rng, sid=3, lo=20, hi=116, scale=0.05):
+    return np.asarray(coll.data)[sid, lo:hi] \
+        + rng.normal(size=hi - lo).astype(np.float32) * scale
+
+
+def _ids(res):
+    return set(zip(res.series, res.offsets))
+
+
+@pytest.mark.parametrize("measure,r", [("ed", 0), ("dtw", 9)])
+@pytest.mark.parametrize("delta", [False, True],
+                         ids=["compacted", "delta"])
+def test_device_range_matches_host_and_brute(engines, rng, measure, r,
+                                             delta):
+    znorm, plain, with_delta = engines
+    engine, coll = with_delta if delta else plain
+    q = _noised(coll, rng)
+    knn = brute_force_knn(coll, q, k=8, znorm=znorm, measure=measure, r=r)
+    eps = float(knn.dists[-1]) * 1.1
+    dev = engine.search(q, QuerySpec(eps=eps, measure=measure, r=r))
+    host = engine.search(q, QuerySpec(eps=eps, measure=measure, r=r,
+                                      scan_backend="host"))
+    ref = brute_force_range(coll, q, eps, znorm=znorm, measure=measure,
+                            r=r)
+    assert len(ref.dists) >= 8
+    assert _ids(dev) == _ids(host) == _ids(ref)
+    # compare SQUARED distances: that is the space every kernel works
+    # in, with absolute f32 noise ~eps * sum(w^2) near d2 = 0
+    np.testing.assert_allclose(np.sort(dev.dists) ** 2,
+                               np.sort(ref.dists) ** 2,
+                               rtol=1e-3, atol=2e-2)
+    assert dev.stats.range_overflows == 0
+    assert 0.0 <= dev.stats.pruning_power <= 1.0
+
+
+def test_device_range_overflow_continuation(engines, rng):
+    """A 4-row hit buffer against a query with dozens of hits: the host
+    continuation must replay exactly the chunks the device never wrote,
+    reproducing the uncapped answer with no duplicates."""
+    znorm, (engine, coll), _ = engines
+    q = _noised(coll, rng)
+    knn = brute_force_knn(coll, q, k=16, znorm=znorm)
+    eps = float(knn.dists[-1]) * 1.05
+    full = engine.search(q, QuerySpec(eps=eps))
+    assert full.stats.range_overflows == 0 and len(full.dists) >= 16
+    tiny = engine.search(q, QuerySpec(eps=eps, range_capacity=4))
+    assert tiny.stats.range_overflows == 1
+    assert len(tiny.dists) == len(full.dists)       # no dups, no drops
+    assert _ids(tiny) == _ids(full)
+    # tail hits are re-scored by the host kernel; agreement is bounded
+    # by the two kernels' f32 evaluation noise (in squared space)
+    np.testing.assert_allclose(np.sort(tiny.dists) ** 2,
+                               np.sort(full.dists) ** 2,
+                               rtol=1e-3, atol=2e-2)
+
+
+def test_device_range_batched_matches_per_query(engines, rng):
+    """engine.search with a BATCH of range queries (mixed lengths) must
+    answer each identically to its one-at-a-time device/host runs."""
+    znorm, (engine, coll), _ = engines
+    data = np.asarray(coll.data)
+    qs = [data[0, 0:96], data[1, 5:69], data[2, 0:96],
+          data[4, 10:106]]
+    qs = [q + 0.03 * np.sin(np.arange(len(q)), dtype=np.float32)
+          for q in qs]
+    eps = float(brute_force_knn(coll, qs[0], k=6,
+                                znorm=znorm).dists[-1]) * 1.2
+    outs = engine.search(qs, QuerySpec(eps=eps))
+    assert len(outs) == 4
+    for q, out in zip(qs, outs):
+        host = engine.search(q, QuerySpec(eps=eps, scan_backend="host"))
+        assert _ids(out) == _ids(host)
+        np.testing.assert_allclose(np.sort(out.dists) ** 2,
+                                   np.sort(host.dists) ** 2,
+                                   rtol=1e-3, atol=2e-2)
+
+
+@pytest.mark.parametrize("measure,r", [("ed", 0), ("dtw", 9)])
+@pytest.mark.parametrize("delta", [False, True],
+                         ids=["compacted", "delta"])
+def test_device_approx_seeding_matches_host(engines, rng, measure, r,
+                                            delta):
+    """Exact k-NN with the on-device approximate pass (approx_first) ==
+    the host-approx-seeded host scan == brute force."""
+    znorm, plain, with_delta = engines
+    engine, coll = with_delta if delta else plain
+    q = _noised(coll, rng, sid=5, lo=30, hi=110)
+    spec = dict(k=5, measure=measure, r=r, approx_first=True)
+    dev = engine.search(q, QuerySpec(**spec))
+    host = engine.search(q, QuerySpec(scan_backend="host", **spec))
+    ref = brute_force_knn(coll, q, k=5, znorm=znorm, measure=measure,
+                          r=r)
+    np.testing.assert_allclose(dev.dists, ref.dists, rtol=1e-3,
+                               atol=1e-3)
+    np.testing.assert_allclose(dev.dists, host.dists, rtol=1e-3,
+                               atol=1e-3)
+    assert _ids(dev) == _ids(host)
+
+
+@pytest.mark.parametrize("measure,r", [("ed", 0), ("dtw", 9)])
+def test_device_approx_mode_matches_host(engines, rng, measure, r):
+    """mode="approx" on the device backend: same leaf-visit semantics,
+    same answers as the host descent."""
+    znorm, (engine, coll), _ = engines
+    q = _noised(coll, rng, sid=7, lo=12, hi=108)
+    spec = dict(k=3, mode="approx", measure=measure, r=r, max_leaves=4)
+    dev = engine.search(q, QuerySpec(**spec))
+    host = engine.search(q, QuerySpec(scan_backend="host", **spec))
+    np.testing.assert_allclose(dev.dists, host.dists, rtol=1e-3,
+                               atol=1e-3)
+    assert _ids(dev) == _ids(host)
+    assert dev.stats.leaves_visited <= 4
+    assert dev.stats.exact_from_approx == host.stats.exact_from_approx
+
+
+def _const_engine(values, n=64, lmin=16, lmax=32, seg_len=8, gamma=2):
+    """Constant series => exactly representable distances (see
+    test_device_scan._const_engine)."""
+    data = np.tile(np.asarray(values, np.float32)[:, None], (1, n))
+    p = EnvelopeParams(lmin=lmin, lmax=lmax, seg_len=seg_len,
+                       gamma=gamma, card=8, znorm=False)
+    return UlisseEngine.from_collection(
+        Collection.from_array(data), p, block_size=16, num_levels=2), data
+
+
+@pytest.mark.parametrize("measure,r", [("ed", 0), ("dtw", 2)])
+def test_device_range_boundary_ties(measure, r):
+    """lb == d == eps exactly: the device hit buffer's cuts are
+    inclusive at every tier, so boundary hits survive — also when the
+    buffer overflows and the host continuation takes the tail."""
+    engine, data = _const_engine([1.5, 4.0, -3.0, 8.0])
+    n, qlen = data.shape[1], 16
+    q = np.full(qlen, 1.0, np.float32)   # series 0 at d2 = 16*0.25 = 4.0
+    n_windows = n - qlen + 1
+    for cap in (2048, 8):                # no-overflow and continuation
+        res = engine.search(q, QuerySpec(eps=2.0, measure=measure, r=r,
+                                         range_capacity=cap))
+        assert len(res.dists) == n_windows, \
+            f"{measure} cap={cap}: boundary hits dropped " \
+            f"({len(res.dists)}/{n_windows})"
+        np.testing.assert_array_equal(res.series,
+                                      np.zeros(n_windows, np.int64))
+        np.testing.assert_allclose(res.dists, 2.0, rtol=0, atol=0)
+    assert engine.search(
+        q, QuerySpec(eps=2.0, measure=measure, r=r,
+                     range_capacity=8)).stats.range_overflows == 1

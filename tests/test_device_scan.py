@@ -55,10 +55,11 @@ def test_device_scan_matches_host_scan(engines, rng, measure, r, delta):
     ref = brute_force_knn(coll, q, k=5, znorm=znorm, measure=measure,
                           r=r)
     np.testing.assert_allclose(dev.dists, ref.dists, rtol=1e-3, atol=1e-3)
-    # the device kernels derive window stats from prefix sums; the host
-    # path computes them directly — agreement is f32-tight, not bitwise
-    np.testing.assert_allclose(dev.dists, host.dists, rtol=1e-4,
-                               atol=1e-4)
+    # the device pipeline re-scores its pool rows in float64 (engine
+    # "polish") while the host reference reports f32 kernel distances —
+    # agreement is bounded by the HOST side's f32 evaluation noise
+    np.testing.assert_allclose(dev.dists, host.dists, rtol=1e-3,
+                               atol=1e-3)
     assert set(zip(dev.series, dev.offsets)) \
         == set(zip(host.series, host.offsets))
     assert 0.0 <= dev.stats.pruning_power <= 1.0
@@ -73,8 +74,8 @@ def test_device_scan_batched_matches_per_query(engines):
     assert len(outs) == 4
     for q, out in zip(qs, outs):
         host = engine.search(q, QuerySpec(k=3, scan_backend="host"))
-        np.testing.assert_allclose(out.dists, host.dists, rtol=1e-4,
-                                   atol=1e-4)
+        np.testing.assert_allclose(out.dists, host.dists, rtol=1e-3,
+                                   atol=1e-3)
         assert set(zip(out.series, out.offsets)) \
             == set(zip(host.series, host.offsets))
 
@@ -105,7 +106,7 @@ def test_device_scan_k_exceeds_candidates(walk_collection):
     np.testing.assert_allclose(
         np.sort(dev.dists[np.isfinite(dev.dists)]),
         np.sort(host.dists[np.isfinite(host.dists)]),
-        rtol=1e-4, atol=1e-4)
+        rtol=1e-3, atol=1e-3)
 
 
 # --------------------------------------------------------------------------
@@ -182,6 +183,57 @@ def test_exact_from_approx_on_descent_exhaustion(walk_collection):
         ref = brute_force_knn(coll, q, k=3, znorm=True)
         np.testing.assert_allclose(res.dists, ref.dists, rtol=1e-3,
                                    atol=1e-3)
+
+
+def test_window_stats_precision_long_large_mean_series(rng):
+    """Satellite regression (PR 4): the centered prefix sums are
+    accumulated in float64 and stored as a two-float (hi, lo) split, so
+    window statistics at large offsets of long, strongly-trended series
+    no longer suffer catastrophic cancellation.  With single-f32 sums
+    the std error at the far end of this series is ~2e-2 relative
+    (grows with |csum|); the split representation pins it to the f32
+    variance-formula floor (~1e-3)."""
+    n, l = 8192, 64
+    t = np.arange(n, dtype=np.float64)
+    series = 200.0 * t / n + 0.5 * rng.normal(size=n)
+    coll = Collection.from_array(series.astype(np.float32)[None, :])
+    offs = np.array([0, n // 3, n // 2, n - l - 1, n - l])
+    mu, sd = coll.window_stats(np.zeros(len(offs), np.int32), offs, l)
+    mu, sd = np.asarray(mu, np.float64), np.asarray(sd, np.float64)
+    d64 = np.asarray(coll.data[0], np.float64)
+    mu_t = np.array([d64[o:o + l].mean() for o in offs])
+    sd_t = np.array([d64[o:o + l].std() for o in offs])
+    np.testing.assert_allclose(mu, mu_t, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(sd, sd_t, rtol=3e-3)
+
+    # end-to-end: device-scan k-NN distances at far offsets of the
+    # adversarial series track a float64 brute-force oracle at tight
+    # tolerance (the f32 host reference itself wobbles by ~0.5 here, so
+    # the oracle, not the host path, is the yardstick)
+    base = np.stack([series, series[::-1].copy()]).astype(np.float32)
+    p = EnvelopeParams(lmin=64, lmax=96, seg_len=16, card=64, gamma=32,
+                       znorm=True)
+    engine = UlisseEngine.from_collection(Collection.from_array(base), p,
+                                          block_size=16, num_levels=2)
+    qlen = 80
+    q = base[0, n - 100:n - 20] \
+        + rng.normal(size=qlen).astype(np.float32) * 0.05
+    dev = engine.search(q, QuerySpec(k=5))
+
+    q64 = np.asarray(q, np.float64)
+    q64 = (q64 - q64.mean()) / q64.std()
+    d2 = np.full((2, n - qlen + 1), np.inf)
+    b64 = np.asarray(base, np.float64)
+    for s in range(2):
+        for o in range(n - qlen + 1):
+            w = b64[s, o:o + qlen]
+            w = (w - w.mean()) / max(w.std(), 1e-8)
+            d2[s, o] = ((w - q64) ** 2).sum()
+    flat = np.argsort(d2.reshape(-1), kind="stable")[:5]
+    np.testing.assert_allclose(
+        dev.dists, np.sqrt(d2.reshape(-1)[flat]), rtol=1e-3, atol=1e-3)
+    assert set(zip(dev.series, dev.offsets)) \
+        == set(zip(flat // (n - qlen + 1), flat % (n - qlen + 1)))
 
 
 def test_topk_dedup_survives_wide_ids():

@@ -87,6 +87,33 @@ def test_distributed_engine_batched_mixed_lengths():
     """)
 
 
+def test_distributed_engine_rejects_non_divisible_mesh():
+    """num_series % shards != 0 used to silently truncate the
+    rows-per-shard table, under-counting the escalation cap and letting
+    a failed certificate read as 'fully verified' — the constructor
+    must refuse loudly instead (PR 4 satellite)."""
+    run_sub("""
+        import jax, numpy as np
+        from repro.core import EnvelopeParams, UlisseEngine
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        p = EnvelopeParams(lmin=48, lmax=96, gamma=8, seg_len=16,
+                           card=64, znorm=True)
+        data = np.cumsum(rng.normal(size=(65, 128)), -1)  # 65 % 8 != 0
+        try:
+            UlisseEngine.distributed(mesh, p, data)
+        except ValueError as e:
+            assert "not divisible" in str(e), e
+        else:
+            raise AssertionError("non-divisible mesh accepted silently")
+        # the divisible case still constructs and answers
+        eng = UlisseEngine.distributed(mesh, p, data[:64])
+        res = eng.search(data[3, 9:73].astype(np.float32))
+        assert res.dists.shape == (1,)
+        print("ok")
+    """)
+
+
 def test_topk_merge_and_bsf():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np

@@ -80,8 +80,9 @@ def _fused_inputs(s, n, qlen, g, rows, b):
 def test_fused_gather_ed_sweep(s, n, qlen, g, rows, b, znorm):
     coll, sids, anchors, valid = _fused_inputs(s, n, qlen, g, rows, b)
     qs = jnp.asarray(RNG.normal(size=(b, qlen)), jnp.float32)
-    out = fused_gather_ed(coll.data, coll.csum, coll.csum2, coll.center,
-                          sids, anchors, qs, g=g, rows=rows, znorm=znorm)
+    out = fused_gather_ed(coll.data, coll.csum, coll.csum2, coll.csum_lo,
+                          coll.csum2_lo, coll.center, sids, anchors, qs,
+                          g=g, rows=rows, znorm=znorm)
     assert out.shape == (b * rows, g)
     for i in range(b):                       # per-query slab vs oracle
         sl = slice(i * rows, (i + 1) * rows)
@@ -101,8 +102,8 @@ def test_fused_gather_lb_keogh_sweep(s, n, qlen, g, rows, b, znorm):
     qs = jnp.asarray(RNG.normal(size=(b, qlen)), jnp.float32)
     lo, hi = dtw_envelope(qs, 5)
     lb2, mu, sd = fused_gather_lb_keogh(
-        coll.data, coll.csum, coll.csum2, coll.center, sids, anchors,
-        lo, hi, g=g, rows=rows, znorm=znorm)
+        coll.data, coll.csum, coll.csum2, coll.csum_lo, coll.csum2_lo,
+        coll.center, sids, anchors, lo, hi, g=g, rows=rows, znorm=znorm)
     assert lb2.shape == mu.shape == sd.shape == (b * rows, g)
     for i in range(b):
         sl = slice(i * rows, (i + 1) * rows)
@@ -176,3 +177,42 @@ def test_envelope_kernel_sweep(n, lmin, lmax, seg):
                                        lmax, seg)
     np.testing.assert_allclose(lo_k, lo_r, rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(hi_k, hi_r, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# bucket-padded gather boundary regression (PR 4 satellite)
+# --------------------------------------------------------------------------
+
+def test_gather_bucket_windows_masks_rolled_tail():
+    """A window whose padded bucket extends past the series end is
+    sliced at the clamped offset and rolled back into place; the roll
+    wraps pre-window values into the tail.  Those lanes must be ZERO
+    (not wrap-around garbage): a masked consumer that assumes in-series
+    values there (or a future caller masking only >= qlen) would
+    otherwise read data from BEFORE the window start."""
+    from repro.core import executor
+    n, bucket, qlen = 64, 48, 32
+    data = jnp.arange(2 * n, dtype=jnp.float32).reshape(2, n) + 1.0
+    # off = 40: off + qlen = 72 > 64 would be invalid; use off = 30:
+    # off + qlen = 62 <= 64 valid, off + bucket = 78 > 64 -> clamped
+    sids = jnp.asarray([1], jnp.int32)
+    anchors = jnp.asarray([30], jnp.int32)
+    n_master = jnp.asarray([1], jnp.int32)
+    windows, ok, offs = executor.gather_bucket_windows(
+        data, sids, anchors, n_master, jnp.int32(qlen), bucket, g=1)
+    w = np.asarray(windows)[0]
+    assert bool(np.asarray(ok)[0])
+    # true window content in place
+    np.testing.assert_array_equal(w[:n - 30], np.asarray(data)[1, 30:])
+    # rolled-in wrap-around tail zeroed (was data[1, 16:30] pre-fix)
+    np.testing.assert_array_equal(w[n - 30:], 0.0)
+
+    # end-to-end on the distributed masked path: boundary-offset window
+    # distances equal the static-qlen reference
+    from repro.core.paa import znormalize
+    mask = jnp.arange(bucket) < qlen
+    qn = znormalize(jnp.asarray(data)[1, 30:30 + qlen])
+    qn = jnp.where(mask, jnp.pad(qn, (0, bucket - qlen)), 0.0)
+    d2 = executor.masked_ed(windows, qn, mask, jnp.int32(qlen),
+                            znorm=True)
+    assert float(d2[0]) == pytest.approx(0.0, abs=1e-3)

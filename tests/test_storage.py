@@ -100,6 +100,54 @@ def test_open_is_lazy_until_verification(znorm_engine, walk_collection,
     assert coll.is_materialized, "verification gathers raw windows"
 
 
+def test_cold_open_append_stays_lazy_roundtrip(walk_collection, tmp_path):
+    """PR 4 satellite: append on an mmap-opened index must neither
+    crash nor silently materialize O(raw data) — the appended series
+    queue as pending parts, searches see them, and a save folds them
+    into the new payload (cold-open -> append -> search -> save -> open
+    round trip)."""
+    p = EnvelopeParams(znorm=True, **PARAMS)
+    first, second = walk_collection[:16], walk_collection[16:]
+    UlisseEngine.from_collection(
+        Collection.from_array(first), p, **BUILD).save(
+        str(tmp_path / "idx"))
+
+    cold = UlisseEngine.open(str(tmp_path / "idx"))
+    coll = cold.index.collection
+    assert not coll.is_materialized
+    cold.append(second)
+    assert cold.delta_size > 0
+    assert not cold.index.collection.is_materialized, \
+        "append materialized the mmap payload (O(raw data) on append)"
+    assert cold.index.collection.num_series == walk_collection.shape[0]
+
+    q = walk_collection[18, 30:126]          # planted in the APPEND
+    ref = UlisseEngine.from_collection(
+        Collection.from_array(walk_collection), p, **BUILD)
+    got = cold.search(q, QuerySpec(k=5))
+    assert cold.index.collection.is_materialized   # first verification
+    want = ref.search(q, QuerySpec(k=5))
+    np.testing.assert_allclose(got.dists, want.dists, atol=1e-5)
+    np.testing.assert_array_equal(got.series, want.series)
+    assert int(got.series[0]) == 18
+
+    cold.save(str(tmp_path / "idx2"))
+    reopened = UlisseEngine.open(str(tmp_path / "idx2"))
+    assert reopened.delta_size == cold.delta_size
+    _assert_same_result(cold.search(q, QuerySpec(k=5)),
+                        reopened.search(q, QuerySpec(k=5)))
+
+    # append -> save WITHOUT an intervening search: the save itself may
+    # materialize (it writes the raw payload), but the round trip must
+    # still carry the appended series
+    cold2 = UlisseEngine.open(str(tmp_path / "idx"))
+    cold2.append(second)
+    cold2.save(str(tmp_path / "idx3"))
+    re3 = UlisseEngine.open(str(tmp_path / "idx3"))
+    got3 = re3.search(q, QuerySpec(k=1))
+    assert int(got3.series[0]) == 18
+
+
 def test_writer_streaming_matches_in_memory_build(walk_collection,
                                                   tmp_path):
     """Out-of-core build (multiple sorted spill runs, merged at
