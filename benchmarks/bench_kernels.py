@@ -247,6 +247,55 @@ def bench_approx_batched():
                   f"{ratio:.2f}x", flush=True)
 
 
+def bench_distributed_scan():
+    """PR 5 tentpole metric: exact ED k-NN queries/sec through the
+    sharded pruned device scan (per-shard LB packs + broadcast global
+    bsf + ring merge) vs the PR-1-era unpruned per-shard verify
+    (`make_batched_distributed_query`, now the scan_backend="host"
+    reference).  Run under XLA_FLAGS=--xla_force_host_platform_device_
+    count=4 for the 4-virtual-device number CI records; on one device
+    it still measures the sharding layer's overhead over the local
+    scan."""
+    import time
+    import jax
+    from repro.core import EnvelopeParams, QuerySpec, UlisseEngine
+
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    ns = 64 * n_dev
+    data = np.cumsum(RNG.normal(size=(ns, 256)), -1).astype(np.float32)
+    p = EnvelopeParams(lmin=96, lmax=160, gamma=16, seg_len=16,
+                       znorm=True)
+    engine = UlisseEngine.distributed(mesh, p, data, max_batch=8)
+    qlen, k = 128, 10
+    qs = [data[i % ns, 7:7 + qlen]
+          + RNG.normal(size=qlen).astype(np.float32) * 0.05
+          for i in range(8)]
+    specs = {"host": QuerySpec(k=k, scan_backend="host",
+                               verify_top=128),
+             "device": QuerySpec(k=k, scan_backend="device")}
+    times = {}
+    for name, spec in specs.items():
+        for B in (1, 8):
+            engine.search(qs[:B], spec)      # warm compile caches
+            samples = []
+            for _ in range(5):
+                t0 = time.perf_counter()
+                engine.search(qs[:B], spec)
+                samples.append(time.perf_counter() - t0)
+            dt = float(np.median(samples))
+            times[(name, B)] = dt
+            emit(f"distributed_scan_{name}_B{B}", dt / B,
+                 f"qps={B / dt:.1f} devices={n_dev}")
+    from benchmarks.common import RESULTS
+    for B in (1, 8):
+        ratio = times[("host", B)] / max(times[("device", B)], 1e-12)
+        RESULTS[f"distributed_scan_speedup_B{B}"] = {
+            "device_vs_host": round(ratio, 2), "devices": n_dev}
+        print(f"# distributed_scan_speedup_B{B} = {ratio:.2f}x "
+              f"({n_dev} devices)", flush=True)
+
+
 def bench_storage():
     """Persistence cost in the perf trajectory: streaming ingest
     throughput through the out-of-core Writer, save latency, cold-open
@@ -318,4 +367,5 @@ def bench_storage():
 
 ALL = [bench_mindist, bench_batch_ed, bench_lb_keogh, bench_dtw_band,
        bench_envelope_build, bench_engine_batched, bench_exact_scan,
-       bench_range_scan, bench_approx_batched, bench_storage]
+       bench_range_scan, bench_approx_batched, bench_distributed_scan,
+       bench_storage]

@@ -1,0 +1,111 @@
+"""CI perf-regression gate: fail when a benchmark section's qps drops
+more than the tolerated fraction vs the committed baseline.
+
+    python -m benchmarks.check_regression \
+        --baseline bench_baseline.json --fresh BENCH_kernels.json
+
+Compares the ``results`` sections of two BENCH_kernels.json artifacts
+(see benchmarks/run.py): for every section present in BOTH files,
+
+  * timing sections (``us_per_call``) regress when the implied qps
+    (1e6 / us_per_call) drops by more than the section's tolerance;
+  * ratio sections (``device_vs_host`` speedups) regress when the ratio
+    itself drops by more than the tolerance — these are
+    machine-relative, so they stay meaningful on CI runners whose
+    absolute qps differs from the baseline machine's.
+
+Sections only in one file are skipped (new benchmarks don't fail the
+gate; removed ones don't linger).  The default tolerance is 25%
+(Lernaean-Hydra-style regression-controlled benchmarking demands a
+bound, CPU runners demand slack); per-section overrides below absorb
+the sections measured to be sync-noisy on CPU — host-driven reference
+paths vary 2-3x run to run, device paths are stable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_TOL = 0.25
+
+# fraction-of-qps (or fraction-of-ratio) drop tolerated per section;
+# first match by prefix wins.  Host-path and storage timings are
+# dominated by host<->device sync + filesystem jitter on CI runners.
+PREFIX_TOL = [
+    ("exact_scan_host", 0.60),
+    ("range_scan_host", 0.60),
+    ("approx_batched_seeded_exact_host", 0.60),
+    ("approx_batched_approx_only_host", 0.60),
+    ("distributed_scan_host", 0.60),
+    ("storage_", 0.60),
+    ("kernel_dtw_pallas", 0.60),    # repeats=1: single-sample timing
+    ("kernel_envelope_pallas", 0.60),
+    ("engine_batched_B1", 0.50),    # dispatch-bound at B=1
+    ("exact_scan_speedup", 0.50),   # ratios of a noisy numerator
+    ("range_scan_speedup", 0.50),
+    ("approx_batched_", 0.50),
+    ("distributed_scan_speedup", 0.50),
+]
+
+
+def tolerance(name: str, default: float) -> float:
+    for prefix, tol in PREFIX_TOL:
+        if name.startswith(prefix):
+            return tol
+    return default
+
+
+def _results(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f).get("results", {})
+
+
+def compare(baseline: dict, fresh: dict, default_tol: float):
+    """Yields (section, kind, base, new, drop, tol, failed) rows."""
+    for name in sorted(set(baseline) & set(fresh)):
+        b, f = baseline[name], fresh[name]
+        tol = tolerance(name, default_tol)
+        if "us_per_call" in b and "us_per_call" in f:
+            qb = 1e6 / max(float(b["us_per_call"]), 1e-9)
+            qf = 1e6 / max(float(f["us_per_call"]), 1e-9)
+            drop = 1.0 - qf / qb
+            yield (name, "qps", qb, qf, drop, tol, drop > tol)
+        elif "device_vs_host" in b and "device_vs_host" in f:
+            rb = float(b["device_vs_host"])
+            rf = float(f["device_vs_host"])
+            drop = 1.0 - rf / max(rb, 1e-9)
+            yield (name, "ratio", rb, rf, drop, tol, drop > tol)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_kernels.json (pre-run copy)")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly produced BENCH_kernels.json")
+    ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
+                    help="default tolerated fractional qps drop "
+                         "(per-section overrides in PREFIX_TOL)")
+    args = ap.parse_args()
+
+    rows = list(compare(_results(args.baseline), _results(args.fresh),
+                        args.tol))
+    if not rows:
+        print("check_regression: no overlapping sections — nothing "
+              "to gate (fresh run produced disjoint benchmarks?)")
+        return 0
+    failures = 0
+    for name, kind, base, new, drop, tol, failed in rows:
+        mark = "FAIL" if failed else "ok"
+        failures += failed
+        print(f"{mark:4s} {name:45s} {kind:5s} "
+              f"base={base:10.2f} new={new:10.2f} "
+              f"drop={drop * 100:6.1f}% tol={tol * 100:.0f}%")
+    print(f"check_regression: {len(rows)} sections compared, "
+          f"{failures} regressed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,6 +4,15 @@ One function per paper table/figure (bench_paper) + kernel micros
 (bench_kernels).  Prints ``name,us_per_call,derived`` CSV; the roofline
 tables come from ``python -m benchmarks.roofline`` over the dry-run
 artifacts (results/dryrun_*.jsonl).
+
+``--json`` maintains BENCH_kernels.json as the recorded perf artifact:
+``results`` holds the latest value per section (merged, so a --only'd
+run refreshes its own rows without wiping everyone else's) and
+``trajectory`` appends one run record per invocation — git sha,
+timestamp, backend/device count, and the sections this run produced —
+so the artifact CI uploads preserves the perf history across PRs
+instead of only the final overwrite.  benchmarks/check_regression.py
+gates CI on the ``results`` sections.
 """
 from __future__ import annotations
 
@@ -13,13 +22,60 @@ import time
 import traceback
 
 
+def _git_sha() -> str:
+    import subprocess
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def write_json(path: str) -> None:
+    import datetime
+    import json
+    import os
+
+    import jax
+
+    from benchmarks.common import RESULTS
+
+    doc = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            doc = {}
+    merged = doc.get("results", {})
+    merged.update(RESULTS)
+    trajectory = doc.get("trajectory", [])
+    trajectory.append({
+        "sha": _git_sha(),
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "backend": jax.default_backend(),
+        "devices": jax.device_count(),
+        "results": dict(RESULTS),
+    })
+    with open(path, "w") as f:
+        json.dump({"backend": jax.default_backend(),
+                   "results": merged,
+                   "trajectory": trajectory}, f, indent=2,
+                  sort_keys=True)
+    print(f"# wrote {len(RESULTS)} rows to {path} "
+          f"({len(merged)} total, {len(trajectory)} trajectory runs)",
+          flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark names")
     ap.add_argument("--json", default="BENCH_kernels.json",
-                    help="write every emitted row to this JSON file "
-                         "(the recorded perf trajectory); '' disables")
+                    help="merge this run's rows into the JSON artifact "
+                         "and append a trajectory record; '' disables")
     args = ap.parse_args()
 
     sys.path.insert(0, "/root/repo/src")
@@ -40,27 +96,7 @@ def main() -> None:
             print(f"# {fn.__name__} FAILED:", flush=True)
             traceback.print_exc()
     if args.json:
-        import json
-        import os
-
-        import jax
-
-        from benchmarks.common import RESULTS
-        # merge into the existing trajectory so a --only'd run refreshes
-        # its own rows without wiping everyone else's
-        merged = {}
-        if os.path.exists(args.json):
-            try:
-                with open(args.json) as f:
-                    merged = json.load(f).get("results", {})
-            except (OSError, ValueError):
-                merged = {}
-        merged.update(RESULTS)
-        with open(args.json, "w") as f:
-            json.dump({"backend": jax.default_backend(),
-                       "results": merged}, f, indent=2, sort_keys=True)
-        print(f"# wrote {len(RESULTS)} rows to {args.json} "
-              f"({len(merged)} total)", flush=True)
+        write_json(args.json)
     if failures:
         sys.exit(1)
 

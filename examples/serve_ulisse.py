@@ -1,11 +1,13 @@
 """ULISSE similarity-search service: batched, variable-length queries
 against a sharded collection (the paper's workload as a serving system).
 
-One `UlisseEngine` replaces the old per-length engine dict + manual
-exactness-escalation loop: the engine buckets query lengths to powers of
-two (masked padding), caches one compiled program per (bucket, spec),
-batches concurrent queries into one device program, and retries
-internally with doubled verify_top when an exactness certificate fails.
+One `UlisseEngine` serves every query shape through the sharded pruned
+device scan (DESIGN.md §10): each shard runs the device scan core over
+its own LB-ordered pack, prunes against the broadcast global
+best-so-far, and one cross-shard merge returns the exact answer — no
+verify_top escalation loop, exactness is structural.  One compiled
+program serves every query length (retraced per shape); concurrent
+queries batch into one device program.
 
 The serving state is durable: the first run saves the shard payloads
 (`engine.save`); later runs — on ANY device count, restore re-shards —
@@ -27,6 +29,7 @@ import jax
 from repro.core import (Collection, EnvelopeParams, QuerySpec,
                         UlisseEngine)
 from repro.core.search import brute_force_knn
+from repro.distributed.ulisse import distributed_index_stats
 from repro.storage import IndexCompatibilityError, IndexFormatError
 from repro.train.data import series_batches
 
@@ -57,7 +60,27 @@ def main():
         engine.save(path)
         print(f"sharded {data.shape[0]} fresh series and saved "
               f"per-shard payloads to {path}")
-    spec = QuerySpec(k=5, verify_top=256)
+    # capacity planning: per-device envelope footprint of the serving
+    # mesh (no delta — a distributed engine's set is fully bulk-built)
+    stats = distributed_index_stats(mesh, p, data.shape[0],
+                                    data.shape[1])
+    print(f"capacity: {stats['envelopes_per_device']} envelopes/device"
+          f" (~{stats['bytes_per_device'] / 1e6:.2f} MB/device)")
+
+    # growing the corpus: appends land in a LOCAL engine's ingestion
+    # delta (the mesh re-shards at the next reopen); replan the mesh
+    # capacity BEFORE promoting — delta rows live in every shard's
+    # working set too, so sizing from the bulk-built count alone
+    # under-provisions after appends.
+    grower = UlisseEngine.from_collection(Collection.from_array(data), p)
+    grower.append(series_batches(32 * n_dev, 192, seed=9))
+    plan = distributed_index_stats(mesh, p, data.shape[0],
+                                   data.shape[1],
+                                   delta_envelopes=grower.delta_size)
+    print(f"replan after appending {32 * n_dev} series: "
+          f"{plan['envelopes_per_device']} envelopes/device "
+          f"({plan['envelopes_delta']} delta rows)")
+    spec = QuerySpec(k=5)
 
     rng = np.random.default_rng(0)
     coll = Collection.from_array(data)
@@ -73,12 +96,14 @@ def main():
         dt = time.perf_counter() - t0
         lat.append(dt)
         ref = brute_force_knn(coll, q, k=5, znorm=p.znorm)
-        # 5e-3: near d=0 the baseline's dot-identity ED and the
-        # service's direct ED differ by f32 cancellation noise
-        ok = np.allclose(res.dists, ref.dists, atol=5e-3)
+        # 1e-2: near d=0 the baseline's dot-identity f32 ED carries
+        # cancellation noise (~eps_f32 * 2L on d^2) that the engine's
+        # float64 re-scored distances no longer share — the engine side
+        # is the accurate one, the tolerance absorbs the oracle's noise
+        ok = np.allclose(res.dists, ref.dists, atol=1e-2)
         print(f"q{i:02d} |Q|={qlen} -> nn=(series {res.series[0]}, "
               f"off {res.offsets[0]}) d={res.dists[0]:.4f} "
-              f"escalations={res.stats.escalations} "
+              f"pruning={res.stats.pruning_power:.3f} "
               f"brute-match={ok} {dt * 1e3:.1f}ms")
         assert ok
     print(f"median latency {np.median(lat) * 1e3:.1f}ms "

@@ -11,16 +11,20 @@ Z-normalized (§6) — is exposed through a single call:
     ress = engine.search(q_batch, QuerySpec(k=5))            # many queries
 
 `QuerySpec` absorbs the formerly scattered kwargs of approx_knn /
-exact_knn / range_query / make_distributed_query.  The local backend is
-the host-driven planner/executor pipeline (planner.py + executor.py);
-the distributed backend owns a compiled-program cache keyed by
-(length-bucket, spec) with power-of-two length bucketing + masked
-padding, so a mixed-length query stream compiles a handful of programs
-instead of one per distinct length, and batches up to `max_batch`
-queries into one device program.  The paper's exactness guarantee is
-kept by an internal escalation loop: when a query's exactness
-certificate fails, the engine retries it with doubled `verify_top`
-until the certificate holds or the whole shard is verified.
+exact_knn / range_query / make_distributed_query.  Both backends route
+`scan_backend="device"` (the default) through the same device-resident
+scan core: locally the one-sync pipeline of DESIGN.md §8/§9;
+distributed, the sharded pruned scan of §10 — every shard runs the
+scan core over its own LB-ordered pack inside shard_map, prunes
+against the periodically broadcast global best-so-far, and one
+cross-shard merge returns the exact answer, so exactness is structural
+and the full measure/mode/range matrix works on a mesh.  Up to
+`max_batch` queries batch into one device program; one compiled
+program object serves every query length (retraced per shape).
+`scan_backend="host"` keeps the reference oracles: the chunked
+host-driven loops locally, and distributed the legacy PR-1 unpruned
+per-shard verify whose exactness certificate is enforced by an
+internal escalation loop (doubled `verify_top` until it holds).
 """
 from __future__ import annotations
 
@@ -48,16 +52,30 @@ class QuerySpec:
     mode:    "exact" (paper Alg. 5 guarantee) | "approx" (Alg. 4 descent).
     approx_first:   seed the exact scan with an approximate pass (Alg. 5
                     line 1; disable to measure the pure scan).
-    scan_backend:   "device" (default) runs every local query shape —
+    scan_backend:   "device" (default) runs every query shape —
                     approximate pass, exact scan, and eps-range — as
                     device programs with ONE host sync per same-length
-                    query batch; "host" keeps the chunked host-driven
-                    loops — the reference paths the device pipeline is
-                    asserted equal against.
+                    query batch; on the distributed backend this is the
+                    sharded pruned scan (every shard runs the device
+                    scan core over its own LB pack, pruning against the
+                    broadcast global bsf — DESIGN.md §10) and supports
+                    the full measure/mode/range matrix.  "host" keeps
+                    the chunked host-driven loops — the reference paths
+                    the device pipeline is asserted equal against
+                    (distributed "host" is the legacy PR-1 unpruned
+                    per-shard verify: exact ED k-NN only).
     chunk_size:     exact-scan verification chunk (envelopes per step).
-    verify_top:     distributed per-shard verification batch (initial
-                    value; the engine doubles it on certificate failure).
-    max_leaves:     approx-descent leaf budget.
+    verify_top:     legacy distributed host backend only: per-shard
+                    verification batch (initial value; the engine
+                    doubles it on certificate failure).  The sharded
+                    device scan needs no escalation — its pruned scan
+                    runs to convergence, so exactness is structural.
+    sync_every:     sharded scan only: chunks each shard scans between
+                    global bsf broadcasts (1 = share after every chunk;
+                    large values approach independent per-shard scans
+                    merged once at the end).
+    max_leaves:     approx-descent leaf budget (per shard, in chunks of
+                    `chunk_size`, on the distributed device backend).
     range_capacity: on-device hit-buffer rows per range query (rounded
                     up to a power of two); a query whose hits exceed it
                     falls back to a host continuation for the scan tail
@@ -75,6 +93,7 @@ class QuerySpec:
     scan_backend: str = "device"
     chunk_size: int = 512
     verify_top: int = 128
+    sync_every: int = 8
     max_leaves: int = 8
     range_capacity: int = 2048
     use_paa_bounds: bool = False
@@ -97,6 +116,8 @@ class QuerySpec:
             raise ValueError("chunk_size must be >= 1")
         if self.verify_top < 1:
             raise ValueError("verify_top must be >= 1")
+        if self.sync_every < 1:
+            raise ValueError("sync_every must be >= 1")
         if self.range_capacity < 1:
             raise ValueError("range_capacity must be >= 1")
 
@@ -316,7 +337,17 @@ class UlisseEngine:
         any measure/mode/shape the spec describes."""
         single, qs = self._normalize_queries(queries)
         if self.is_distributed:
-            results = self._search_distributed(qs, spec)
+            if spec.scan_backend == "device":
+                # the sharded pruned scan (DESIGN.md §10): every shard
+                # runs the device scan core over its own LB-ordered
+                # pack, pruning against the broadcast global bsf; one
+                # host sync per batch, full measure/mode/range matrix
+                if spec.is_range:
+                    results = self._distributed_range_device(qs, spec)
+                else:
+                    results = self._distributed_knn_device(qs, spec)
+            else:
+                results = self._search_distributed(qs, spec)
         elif spec.scan_backend == "device":
             # the one-sync local pipeline: every query shape — k-NN
             # (approx-seeded or pure scan), approximate-only, eps-range
@@ -546,7 +577,7 @@ class UlisseEngine:
                 chunk, nblk)
 
     def _knn_result_rows(self, q, spec: QuerySpec, d2, sid, off,
-                         stats) -> SearchResult:
+                         stats, data=None) -> SearchResult:
         # drop unfilled pool rows (sid -1): with k > candidates the pool
         # keeps +inf filler, which must not surface as phantom neighbors
         filled = sid >= 0
@@ -561,7 +592,10 @@ class UlisseEngine:
             # Selection already happened (pruning used kernel values, as
             # the host path's pruning used its own f32 values); this
             # only sharpens the *reported* distances and their order.
-            data = np.asarray(self._index.collection.data)
+            # `data`: host series override (the distributed backend
+            # passes its gathered host copy; local reads the index).
+            if data is None:
+                data = np.asarray(self._index.collection.data)
             w = data[sid[:, None],
                      off[:, None] + np.arange(len(q))].astype(np.float64)
             qn = np.asarray(q, np.float64)
@@ -746,18 +780,7 @@ class UlisseEngine:
                             sink, stats, eps2=eps2, collector=rows)
                         stats.chunks_visited += 1
                         pos += chunk
-                if rows:
-                    out = np.concatenate(rows, axis=0)
-                    out = out[np.argsort(out[:, 2], kind="stable")]
-                    results[i] = SearchResult(
-                        dists=np.sqrt(np.maximum(out[:, 2], 0.0)),
-                        series=out[:, 0].astype(np.int64),
-                        offsets=out[:, 1].astype(np.int64), stats=stats)
-                else:
-                    results[i] = SearchResult(
-                        dists=np.zeros((0,)),
-                        series=np.zeros((0,), np.int64),
-                        offsets=np.zeros((0,), np.int64), stats=stats)
+                results[i] = self._range_result_rows(rows, stats)
         return results
 
     def _local_range(self, q, spec: QuerySpec) -> SearchResult:
@@ -780,19 +803,245 @@ class UlisseEngine:
                 index, pq, cand[start:start + spec.chunk_size], pool,
                 stats, eps2=eps2, collector=rows)
             stats.chunks_visited += 1
+        return self._range_result_rows(rows, stats)
+
+    # ------------------------------------------------------------------
+    # distributed backend, device path: the sharded pruned scan
+    # (DESIGN.md §10) — per-shard LB packs through the §8/§9 scan core
+    # inside shard_map, a broadcast global bsf, one final cross-shard
+    # merge, ONE host sync per batch
+    # ------------------------------------------------------------------
+
+    def _host_data(self) -> np.ndarray:
+        """Host copy of the full (S, n) collection (gathered once,
+        cached) — feeds the f64 ED polish and the range-overflow
+        continuation; never touched on the scan fast path."""
+        if getattr(self, "_host_data_cache", None) is None:
+            self._host_data_cache = np.asarray(self._sharded)
+        return self._host_data_cache
+
+    def _ensure_sharded_index(self):
+        """Per-shard device-resident index arrays, built once lazily.
+
+        The legacy host path re-summarized every shard in-graph on
+        every query; the device path pays the envelope build once and
+        keeps collection prefix sums + envelope rows sharded on the
+        mesh — numerically identical to a local build over the same
+        series (same host float64-split prefix sums)."""
+        if getattr(self, "_sharded_index", None) is None:
+            from repro.distributed.ulisse import (SHARDED_INDEX_FIELDS,
+                                                  build_sharded_index)
+            arrs = build_sharded_index(
+                self._mesh, self.params, self._breakpoints,
+                self._host_data(), self._axes,
+                data_sharded=self._sharded)
+            self._sharded_index = tuple(arrs[f]
+                                        for f in SHARDED_INDEX_FIELDS)
+        return self._sharded_index
+
+    def _device_batches(self, idxs):
+        """max_batch-sized sub-batches, padded to a power of two (a
+        lone query runs a 1-row program; compiles stay bounded at
+        log2(max_batch)+1 shapes per length)."""
+        for start in range(0, len(idxs), self.max_batch):
+            sub = idxs[start:start + self.max_batch]
+            yield sub, min(_pow2_bucket(len(sub), self.max_batch),
+                           self.max_batch)
+
+    def _sharded_knn_program(self, spec: QuerySpec, budget: int):
+        key = ("knn", spec.k, spec.measure, spec.r, spec.chunk_size,
+               spec.sync_every, budget, spec.use_paa_bounds)
+        fn = self._programs.get(key)
+        if fn is None:
+            from repro.distributed.ulisse import make_sharded_knn_query
+            fn = make_sharded_knn_query(
+                self._mesh, self.params, self._breakpoints, k=spec.k,
+                measure=spec.measure, r=spec.r,
+                use_paa=spec.use_paa_bounds,
+                chunk_size=spec.chunk_size,
+                sync_every=spec.sync_every, budget_chunks=budget,
+                axes=self._axes)
+            self._programs[key] = fn
+        return fn
+
+    def _sharded_range_program(self, spec: QuerySpec):
+        """Returns (query_fn, chunk) — the maker reports the plan-row
+        chunking its program scans with, so the overflow continuation
+        resumes at exactly the right row instead of re-deriving it."""
+        key = ("range", spec.range_capacity, spec.measure, spec.r,
+               spec.chunk_size, spec.use_paa_bounds)
+        entry = self._programs.get(key)
+        if entry is None:
+            from repro.distributed.ulisse import \
+                make_sharded_range_query
+            entry = make_sharded_range_query(
+                self._mesh, self.params, self._breakpoints,
+                capacity=spec.range_capacity,
+                n_rows_per_shard=self._env_rows_per_shard,
+                measure=spec.measure, r=spec.r,
+                use_paa=spec.use_paa_bounds,
+                chunk_size=spec.chunk_size, axes=self._axes)
+            self._programs[key] = entry
+        return entry
+
+    def _sharded_stats(self, st, row, n_env, extra_lb=0) -> SearchStats:
+        """Fold the (P, B, 5) per-shard counter stack into SearchStats
+        (sums over shards; the per-shard chunk counts are kept in
+        `shard_chunks` for pruning diagnostics/tests)."""
+        return SearchStats(
+            envelopes_total=n_env,
+            lb_computations=n_env + extra_lb,
+            chunks_visited=int(st[:, row, 0].sum()),
+            envelopes_checked=int(st[:, row, 1].sum()),
+            true_dist_computations=int(st[:, row, 2].sum()),
+            dtw_lb_keogh=int(st[:, row, 3].sum()),
+            dtw_full=int(st[:, row, 4].sum()),
+            shard_chunks=[int(x) for x in st[:, row, 0]])
+
+    def _distributed_knn_device(self, qs, spec: QuerySpec):
+        """Sharded k-NN (exact, or budget-capped approximate): one
+        program retraced per (B, qlen) shape, one host sync per
+        sub-batch.  Exactness is structural — the pruned scan only
+        terminates when every shard's next LB-ordered chunk is beaten
+        by the global kth — so there is no verify_top escalation loop
+        to run; approximate mode reads the in-graph certificate."""
+        index_arrs = self._ensure_sharded_index()
+        budget = spec.max_leaves if spec.mode == "approx" else 0
+        fn = self._sharded_knn_program(spec, budget)
+        n_env = (self.params.num_envelopes(self._series_len)
+                 * self._num_series)
+        results: List[Optional[SearchResult]] = [None] * len(qs)
+        for qlen, idxs in self._group_by_len(qs):
+            self._bucket(qlen)             # length-range validation
+            for sub, b in self._device_batches(idxs):
+                queries = [qs[i] for i in sub]
+                queries += [queries[0]] * (b - len(sub))
+                _, qstack, dlo, dhi, qb, qh = self._stack_prepared(
+                    queries, spec)
+                d2, sid, off, st, cert = jax.device_get(
+                    fn(*index_arrs, qstack, dlo, dhi, qb, qh))
+                for row, i in enumerate(sub):
+                    stats = self._sharded_stats(st, row, n_env)
+                    if budget:
+                        stats.exact_from_approx = bool(cert[row])
+                    results[i] = self._knn_result_rows(
+                        qs[i], spec, d2[row], sid[row], off[row],
+                        stats, data=self._host_data())
+        return results
+
+    def _distributed_range_device(self, qs, spec: QuerySpec):
+        """Sharded eps-range: per-shard §9 hit buffers (no collectives
+        — the eps cut never moves), concatenated on readback; a
+        (query, shard) pair that overflows its buffer is finished by
+        the host continuation over that shard's returned plan tail
+        (union exact, no dedup — the buffer holds exactly the hits of
+        the chunks before `ovf`)."""
+        index_arrs = self._ensure_sharded_index()
+        fn, chunk = self._sharded_range_program(spec)
+        eps2 = float(spec.eps) ** 2
+        cap = executor.pow2ceil(spec.range_capacity)
+        n_env = (self.params.num_envelopes(self._series_len)
+                 * self._num_series)
+        results: List[Optional[SearchResult]] = [None] * len(qs)
+        for qlen, idxs in self._group_by_len(qs):
+            self._bucket(qlen)
+            for sub, b in self._device_batches(idxs):
+                queries = [qs[i] for i in sub]
+                queries += [queries[0]] * (b - len(sub))
+                _, qstack, dlo, dhi, qb, qh = self._stack_prepared(
+                    queries, spec)
+                out = fn(*index_arrs, qstack, dlo, dhi, qb, qh,
+                         jnp.full((b,), eps2, jnp.float32))
+                # THE one host sync of the batch (overflow excepted:
+                # the plan arrays stay on device unless needed)
+                bd2, bsid, boff, cnt, ovf, st = jax.device_get(out[:6])
+                plan, plan_h = out[6:], None
+                n_chunks = plan[3].shape[2] // chunk
+                for row, i in enumerate(sub):
+                    stats = self._sharded_stats(st, row, n_env)
+                    rows: list = []
+                    for sh in range(self._shards):
+                        c = int(cnt[sh, row])
+                        if c:
+                            lo = sh * cap
+                            rows.append(np.stack(
+                                [bsid[row, lo:lo + c].astype(np.float64),
+                                 boff[row, lo:lo + c].astype(np.float64),
+                                 bd2[row, lo:lo + c].astype(np.float64)],
+                                axis=1))
+                        o = int(ovf[sh, row])
+                        if o < n_chunks:   # this shard's buffer spilled
+                            stats.range_overflows += 1
+                            if plan_h is None:     # lazy: overflow only
+                                plan_h = jax.device_get(plan)
+                            self._host_range_tail(
+                                qs[i], spec, plan_h[0][sh, row],
+                                plan_h[1][sh, row], plan_h[2][sh, row],
+                                plan_h[3][sh, row], o * chunk, chunk,
+                                eps2, rows, stats)
+                    results[i] = self._range_result_rows(rows, stats)
+        return results
+
+    def _range_result_rows(self, rows, stats) -> SearchResult:
         if rows:
             out = np.concatenate(rows, axis=0)
             out = out[np.argsort(out[:, 2], kind="stable")]
-            return SearchResult(dists=np.sqrt(np.maximum(out[:, 2], 0.0)),
-                                series=out[:, 0].astype(np.int64),
-                                offsets=out[:, 1].astype(np.int64),
-                                stats=stats)
+            return SearchResult(
+                dists=np.sqrt(np.maximum(out[:, 2], 0.0)),
+                series=out[:, 0].astype(np.int64),
+                offsets=out[:, 1].astype(np.int64), stats=stats)
         return SearchResult(dists=np.zeros((0,)),
                             series=np.zeros((0,), np.int64),
-                            offsets=np.zeros((0,), np.int64), stats=stats)
+                            offsets=np.zeros((0,), np.int64),
+                            stats=stats)
+
+    def _host_range_tail(self, q, spec: QuerySpec, sids, anc, nm, lbs2,
+                         start: int, chunk: int, eps2: float,
+                         rows: list, stats: SearchStats) -> None:
+        """§9 overflow continuation for one (query, shard) pair: replay
+        the packed plan's chunks from `start` against the host data
+        copy.  The plan rows are all true candidates (lb2 <= eps2,
+        GLOBAL series ids) in the exact order the device scanned — the
+        buffer holds the hits of chunks [0, start/chunk), this collects
+        the rest, so the union is exact with no dedup.  Windows gather
+        through numpy fancy indexing (a jitted device gather would ship
+        the full host collection back to a device per call); the
+        distance tiers are executor.verify_windows, shared with the
+        index-driven reference path so the cut rules live once."""
+        data = self._host_data()
+        p = self.params
+        g = p.gamma + 1
+        qlen, n = len(q), data.shape[1]
+        pq = planner.prepare_query(q, p, spec.measure, spec.r)
+        sink = TopK(1)   # unused (collector path)
+        pos = start
+        while pos < len(lbs2):
+            keep = np.isfinite(lbs2[pos:pos + chunk])
+            if not keep[0]:
+                break   # candidates are a packed prefix; +inf = tail
+            csid = sids[pos:pos + chunk][keep].astype(np.int64)
+            canc = anc[pos:pos + chunk][keep].astype(np.int64)
+            cnm = nm[pos:pos + chunk][keep].astype(np.int64)
+            # same masters-that-fit test as gather_windows, in numpy
+            offs = canc[:, None] + np.arange(g)
+            ok = ((np.arange(g)[None, :] < cnm[:, None])
+                  & (offs + qlen <= n))
+            offs_c = np.clip(offs, 0, n - qlen)
+            all_sid = np.repeat(csid, g)
+            win = data[all_sid[:, None],
+                       offs_c.reshape(-1)[:, None] + np.arange(qlen)]
+            stats.envelopes_checked += int(keep.sum())
+            executor.verify_windows(
+                jnp.asarray(win, jnp.float32), all_sid,
+                offs.reshape(-1), ok.reshape(-1), pq, p.znorm, sink,
+                stats, eps2=eps2, collector=rows)
+            stats.chunks_visited += 1
+            pos += chunk
 
     # ------------------------------------------------------------------
-    # distributed backend (batched shard_map programs + escalation)
+    # distributed backend, legacy host path (PR-1 unpruned per-shard
+    # verify + escalation) — kept as the scan_backend="host" reference
+    # oracle and the benchmark baseline of the sharded scan
     # ------------------------------------------------------------------
 
     def _bucket(self, qlen: int) -> int:
@@ -819,9 +1068,10 @@ class UlisseEngine:
         if (spec.measure != "ed" or spec.is_range or spec.mode != "exact"
                 or spec.use_paa_bounds):
             raise NotImplementedError(
-                "the distributed backend answers exact ED k-NN with "
-                "quantized breakpoint bounds; use a local UlisseEngine "
-                "for DTW / range / approximate / use_paa_bounds queries")
+                "the legacy distributed host backend answers exact ED "
+                "k-NN with quantized breakpoint bounds only; use "
+                "scan_backend='device' (the default) for distributed "
+                "DTW / range / approximate / use_paa_bounds queries")
         results: List[Optional[SearchResult]] = [None] * len(qs)
         by_bucket = {}
         for i, q in enumerate(qs):

@@ -49,6 +49,8 @@ class SearchStats:
     exact_from_approx: bool = False
     escalations: int = 0             # exactness-certificate retries
     range_overflows: int = 0         # device hit-buffer overflows (range)
+    shard_chunks: Optional[list] = None  # per-shard chunk counts (sharded
+    #                                      scan only; chunks_visited sums it)
 
     @property
     def pruning_power(self) -> float:
@@ -244,17 +246,33 @@ def verify_envelopes(index, pq, env_idx: np.ndarray, pool: TopK,
 
     windows, ok, offs = gather_windows(index.collection.data, sids, anchors,
                                        n_master, pq.qlen, g)
-    all_sids = np.repeat(np.asarray(sids), g)
-    offs_np = np.asarray(offs)
-    ok_np = np.asarray(ok)
     stats.envelopes_checked += len(env_idx)
+    verify_windows(windows, np.repeat(np.asarray(sids), g),
+                   np.asarray(offs), np.asarray(ok), pq, p.znorm, pool,
+                   stats, eps2=eps2, collector=collector)
 
+
+def verify_windows(windows, all_sids: np.ndarray, offs_np: np.ndarray,
+                   ok_np: np.ndarray, pq, znorm: bool, pool: TopK,
+                   stats: SearchStats, *, eps2: Optional[float] = None,
+                   collector: Optional[list] = None):
+    """Distance tiers + pool/collector update for gathered candidate
+    windows (B*g, qlen).
+
+    The verification half of `verify_envelopes`, split out so every
+    host-side caller shares ONE copy of the cut and padding rules —
+    the index-driven reference path and the distributed range
+    continuation (`engine._host_range_tail`, which gathers its windows
+    from a host array instead of an index): the inclusive range-query
+    cuts and the pow2-padded DTW survivor batch must never diverge
+    between them.
+    """
     if pq.measure == "ed":
-        d2 = np.asarray(ed_batch(windows, pq.q, p.znorm), np.float64)
+        d2 = np.asarray(ed_batch(windows, pq.q, znorm), np.float64)
         d2[~ok_np] = np.inf
         stats.true_dist_computations += int(ok_np.sum())
     else:
-        lb2, wn = lb_keogh_batch(windows, pq.dtw_lo, pq.dtw_hi, p.znorm)
+        lb2, wn = lb_keogh_batch(windows, pq.dtw_lo, pq.dtw_hi, znorm)
         lb2 = np.asarray(lb2, np.float64)
         lb2[~ok_np] = np.inf
         stats.dtw_lb_keogh += int(ok_np.sum())
@@ -330,6 +348,26 @@ def _chunk_candidates(csid, canc, cnm, keep, qlen: int, n: int, g: int):
     return ok, jnp.repeat(csid, g, axis=1), offs.reshape(b_sz, chunk * g)
 
 
+def _survivors_first(surv: jnp.ndarray) -> jnp.ndarray:
+    """Stable survivors-first position pack of a (B, M) mask.
+
+    The gather twin of `jnp.argsort(~surv)`: position j of the result
+    is the j-th True column (binary search over the mask cumsum);
+    positions >= nsurv carry clamped duplicates, which every consumer
+    masks by `pos < nsurv`.  Two reasons over argsort: (a) a sort is
+    ~the cost of a whole verification chunk on CPU while the cumsum
+    pack is a few fused elementwise passes, and (b) XLA's SPMD
+    partitioner rewrites sorts inside a while body into cross-device
+    all-reduce canonicalization even in a manual shard_map region —
+    which deadlocks the sharded scan, whose shards run data-dependent
+    trip counts between bsf syncs.
+    """
+    sc = jnp.cumsum(surv, axis=1)
+    ranks = jnp.arange(surv.shape[1], dtype=jnp.int32) + 1
+    sidx = jax.vmap(jnp.searchsorted, in_axes=(0, None))(sc, ranks)
+    return jnp.minimum(sidx, surv.shape[1] - 1).astype(jnp.int32)
+
+
 def _survivor_bucket(data, qs, cand_sid, cand_off, sidx, mu, sd, j,
                      *, sb: int, r: int, znorm: bool):
     """Gather + normalize + DP one masked survivor bucket (DTW tier).
@@ -363,6 +401,102 @@ def _survivor_bucket(data, qs, cand_sid, cand_off, sidx, mu, sd, j,
     return pos, bi, bs, bo, db
 
 
+def _pool_merge(pool, cd2, csid, coff, k: int):
+    """Merge (B, M) candidates into a (B, k) sorted pool.
+
+    Keeps rows sorted by d2; incumbents win ties (they come first in
+    the concatenation).  Shared by the local scan core and the sharded
+    distributed scan (distributed/ulisse.py)."""
+    pd2, psid, poff = pool
+    alld = jnp.concatenate([pd2, cd2], axis=1)
+    alls = jnp.concatenate([psid, csid], axis=1)
+    allo = jnp.concatenate([poff, coff], axis=1)
+    neg, sel = jax.lax.top_k(-alld, k)
+    return (-neg, jnp.take_along_axis(alls, sel, axis=1),
+            jnp.take_along_axis(allo, sel, axis=1))
+
+
+def _first_lb2(lbs2, i, chunk: int):
+    """The (B,) squared lower bound heading chunk i of the packed plan —
+    the LB-sorted order makes it the chunk's (and every later chunk's)
+    best case, so it alone decides the scan's stop/skip tests."""
+    n_pad = lbs2.shape[1]
+    return jax.lax.dynamic_slice_in_dim(
+        lbs2, jnp.minimum(i * chunk, n_pad - 1), 1, axis=1)[:, 0]
+
+
+def _scan_chunk_step(data, csum, csum2, cslo, cs2lo, center, sids,
+                     anchors, n_master, lbs2, qs, dtw_lo, dtw_hi, i,
+                     pool, kth, active, *, k: int, g: int, chunk: int,
+                     znorm: bool, measure: str, r: int, sb: int,
+                     interpret: bool):
+    """Verify chunk `i` of the packed plan into the (B, k) pool.
+
+    THE shared k-NN chunk step: the local device scan
+    (`_device_scan_core`) and the sharded distributed scan
+    (`distributed/ulisse._sharded_knn_scan`) both run their loops over
+    this function — the only difference between the two is the `kth`
+    cut the caller prunes with (the pool's own kth locally; the min of
+    the local kth and the mesh-wide broadcast bsf on a sharded scan).
+
+    Returns (pool, dstats) where dstats (B, 5) holds the per-query
+    increments of [chunks, envelopes_checked, true_dists, lb_keogh,
+    dtw_full].
+    """
+    n = data.shape[1]
+    b_sz, qlen = qs.shape
+    zeros = jnp.zeros((b_sz,), jnp.int32)
+    csid, canc, cnm, clb2 = _chunk_slice(sids, anchors, n_master,
+                                         lbs2, i, chunk)
+    keep = (clb2 < kth[:, None]) & active[:, None]  # bsf pruning
+    ok, cand_sid, cand_off = _chunk_candidates(csid, canc, cnm,
+                                               keep, qlen, n, g)
+    checked = jnp.sum(keep, axis=1, dtype=jnp.int32)
+    tdist = nlbk = ndtw = zeros
+    if measure == "ed":
+        d2 = fused_gather_ed(data, csum, csum2, cslo, cs2lo, center,
+                             csid.reshape(-1), canc.reshape(-1),
+                             qs, g=g, rows=chunk, znorm=znorm,
+                             interpret=interpret)
+        d2 = jnp.where(ok, d2.reshape(b_sz, chunk * g), jnp.inf)
+        pool = _pool_merge(pool, d2, cand_sid, cand_off, k)
+        tdist = jnp.sum(ok, axis=1, dtype=jnp.int32)
+    else:
+        lb2w, mu, sd = fused_gather_lb_keogh(
+            data, csum, csum2, cslo, cs2lo, center,
+            csid.reshape(-1), canc.reshape(-1), dtw_lo, dtw_hi,
+            g=g, rows=chunk, znorm=znorm, interpret=interpret)
+        lb2w = jnp.where(ok, lb2w.reshape(b_sz, chunk * g), jnp.inf)
+        mu = mu.reshape(b_sz, chunk * g)
+        sd = sd.reshape(b_sz, chunk * g)
+        nlbk = jnp.sum(ok, axis=1, dtype=jnp.int32)
+        # masked survivor buckets: pack LB survivors to the front,
+        # run the banded DP bucket by bucket, stop when every
+        # query's packed prefix is exhausted — static shapes,
+        # data-dependent work
+        surv = lb2w < kth[:, None]
+        nsurv = jnp.sum(surv, axis=1, dtype=jnp.int32)
+        sidx = _survivors_first(surv)
+
+        def inner_body(st):
+            j, ipool, indtw = st
+            pos, _, bs, bo, db = _survivor_bucket(
+                data, qs, cand_sid, cand_off, sidx, mu, sd, j,
+                sb=sb, r=r, znorm=znorm)
+            m = pos[None, :] < nsurv[:, None]
+            ipool = _pool_merge(ipool, jnp.where(m, db, jnp.inf), bs,
+                                bo, k)
+            return (j + 1, ipool,
+                    indtw + jnp.sum(m, axis=1, dtype=jnp.int32))
+
+        _, pool, ndtw = jax.lax.while_loop(
+            lambda st: jnp.any(st[0] * sb < nsurv), inner_body,
+            (jnp.int32(0), pool, ndtw))
+        tdist = nsurv
+    return pool, jnp.stack([active.astype(jnp.int32), checked, tdist,
+                            nlbk, ndtw], axis=1)
+
+
 def _device_scan_core(data, csum, csum2, cslo, cs2lo, center, sids,
                       anchors, n_master, lbs2, qs, dtw_lo, dtw_hi,
                       seed_d2, seed_sid, seed_off, *, k: int, g: int,
@@ -385,90 +519,33 @@ def _device_scan_core(data, csum, csum2, cslo, cs2lo, center, sids,
     envelopes must already be excluded from the scan order, so the pool
     never sees a (sid, off) twice and needs no dedup.
     """
-    n = data.shape[1]
-    b_sz, qlen = qs.shape
+    b_sz = qs.shape[0]
     n_pad = sids.shape[1]
     n_chunks = n_pad // chunk
 
-    def merge(pool, cd2, csid, coff):
-        # pool (B, k) each; candidates (B, M); keeps rows sorted by d2,
-        # incumbents win ties (they come first in the concatenation)
-        pd2, psid, poff = pool
-        alld = jnp.concatenate([pd2, cd2], axis=1)
-        alls = jnp.concatenate([psid, csid], axis=1)
-        allo = jnp.concatenate([poff, coff], axis=1)
-        neg, sel = jax.lax.top_k(-alld, k)
-        return (-neg, jnp.take_along_axis(alls, sel, axis=1),
-                jnp.take_along_axis(allo, sel, axis=1))
-
     def active_at(i, pool):
-        first = jax.lax.dynamic_slice_in_dim(
-            lbs2, jnp.minimum(i * chunk, n_pad - 1), 1, axis=1)[:, 0]
+        first = _first_lb2(lbs2, i, chunk)
         return ((i < n_chunks) & jnp.isfinite(first)
                 & (first < pool[0][:, k - 1]))
 
     def body(state):
-        i, pool, nchunks, checked, tdist, nlbk, ndtw = state
+        i, pool, stats = state
         active = active_at(i, pool)
-        nchunks = nchunks + active.astype(jnp.int32)
-        csid, canc, cnm, clb2 = _chunk_slice(sids, anchors, n_master,
-                                             lbs2, i, chunk)
         kth = pool[0][:, k - 1]
-        keep = (clb2 < kth[:, None]) & active[:, None]  # bsf pruning
-        ok, cand_sid, cand_off = _chunk_candidates(csid, canc, cnm,
-                                                   keep, qlen, n, g)
-        checked = checked + jnp.sum(keep, axis=1, dtype=jnp.int32)
-        if measure == "ed":
-            d2 = fused_gather_ed(data, csum, csum2, cslo, cs2lo, center,
-                                 csid.reshape(-1), canc.reshape(-1),
-                                 qs, g=g, rows=chunk, znorm=znorm,
-                                 interpret=interpret)
-            d2 = jnp.where(ok, d2.reshape(b_sz, chunk * g), jnp.inf)
-            pool = merge(pool, d2, cand_sid, cand_off)
-            tdist = tdist + jnp.sum(ok, axis=1, dtype=jnp.int32)
-        else:
-            lb2w, mu, sd = fused_gather_lb_keogh(
-                data, csum, csum2, cslo, cs2lo, center,
-                csid.reshape(-1), canc.reshape(-1), dtw_lo, dtw_hi,
-                g=g, rows=chunk, znorm=znorm, interpret=interpret)
-            lb2w = jnp.where(ok, lb2w.reshape(b_sz, chunk * g), jnp.inf)
-            mu = mu.reshape(b_sz, chunk * g)
-            sd = sd.reshape(b_sz, chunk * g)
-            nlbk = nlbk + jnp.sum(ok, axis=1, dtype=jnp.int32)
-            # masked survivor buckets: pack LB survivors to the front,
-            # run the banded DP bucket by bucket, stop when every
-            # query's packed prefix is exhausted — static shapes,
-            # data-dependent work
-            surv = lb2w < kth[:, None]
-            nsurv = jnp.sum(surv, axis=1, dtype=jnp.int32)
-            sidx = jnp.argsort(~surv, axis=1)   # stable: survivors first
-
-            def inner_body(st):
-                j, ipool, indtw = st
-                pos, _, bs, bo, db = _survivor_bucket(
-                    data, qs, cand_sid, cand_off, sidx, mu, sd, j,
-                    sb=sb, r=r, znorm=znorm)
-                m = pos[None, :] < nsurv[:, None]
-                ipool = merge(ipool, jnp.where(m, db, jnp.inf), bs, bo)
-                return (j + 1, ipool,
-                        indtw + jnp.sum(m, axis=1, dtype=jnp.int32))
-
-            _, pool, ndtw = jax.lax.while_loop(
-                lambda st: jnp.any(st[0] * sb < nsurv), inner_body,
-                (jnp.int32(0), pool, ndtw))
-            tdist = tdist + nsurv
-        return i + 1, pool, nchunks, checked, tdist, nlbk, ndtw
+        pool, ds = _scan_chunk_step(
+            data, csum, csum2, cslo, cs2lo, center, sids, anchors,
+            n_master, lbs2, qs, dtw_lo, dtw_hi, i, pool, kth, active,
+            k=k, g=g, chunk=chunk, znorm=znorm, measure=measure, r=r,
+            sb=sb, interpret=interpret)
+        return i + 1, pool, stats + ds
 
     def cond(state):
         return jnp.any(active_at(state[0], state[1]))
 
-    zeros = jnp.zeros((b_sz,), jnp.int32)
-    state = (jnp.int32(0), (seed_d2, seed_sid, seed_off), zeros, zeros,
-             zeros, zeros, zeros)
-    (_, pool, nchunks, checked, tdist, nlbk,
-     ndtw) = jax.lax.while_loop(cond, body, state)
-    return pool[0], pool[1], pool[2], jnp.stack(
-        [nchunks, checked, tdist, nlbk, ndtw], axis=1)
+    state = (jnp.int32(0), (seed_d2, seed_sid, seed_off),
+             jnp.zeros((b_sz, 5), jnp.int32))
+    _, pool, stats = jax.lax.while_loop(cond, body, state)
+    return pool[0], pool[1], pool[2], stats
 
 
 @functools.lru_cache(maxsize=None)
@@ -588,7 +665,7 @@ def _device_range_core(data, csum, csum2, cslo, cs2lo, center, sids,
             nlbk = nlbk + jnp.sum(ok, axis=1, dtype=jnp.int32)
             surv = lb2w <= eps2[:, None]                   # INCLUSIVE
             nsurv = jnp.sum(surv, axis=1, dtype=jnp.int32)
-            sidx = jnp.argsort(~surv, axis=1)   # stable: survivors first
+            sidx = _survivors_first(surv)
 
             def inner_body(st):
                 j, d2acc, indtw = st

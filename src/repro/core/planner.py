@@ -285,6 +285,36 @@ def device_scan_pack(env_sid, env_anchor, env_nm, lbs, comb_idx,
 
 
 @partial(jax.jit, static_argnames=("n_pad",))
+def device_shard_pack(env_sid, env_anchor, env_nm, lbs, n_pad: int):
+    """LB-sort + pack ONE SHARD's candidate rows on device.
+
+    The per-shard twin of `device_scan_pack`, consumed by the sharded
+    distributed scan (distributed/ulisse.py): inside `shard_map` every
+    shard packs its own local envelope slice into ascending-lower-bound
+    order.  There is no approximate pass on the sharded path — the
+    first chunks of the LB order play its bsf-priming role — so the
+    scatter-exclusion machinery of `device_scan_pack` is skipped
+    entirely (it is the expensive half of that pack on CPU).
+
+    `lbs` (B, N_local) are the shard's lower bounds (env_* are the
+    shard-local envelope columns, series ids already localized).
+    Returns (sids, anchors, n_master, lbs2): (B, n_pad) plan arrays
+    right-padded with +inf bounds past the N_local real rows.
+    """
+    pad = n_pad - lbs.shape[1]
+    order = jnp.argsort(lbs, axis=1)
+    lbs_sorted = jnp.take_along_axis(lbs, order, axis=1)
+
+    def pack(col):
+        out = jnp.take(col, order).astype(jnp.int32)
+        return jnp.pad(out, ((0, 0), (0, pad)))
+
+    lbs2 = jnp.pad((lbs_sorted ** 2).astype(jnp.float32),
+                   ((0, 0), (0, pad)), constant_values=jnp.inf)
+    return pack(env_sid), pack(env_anchor), pack(env_nm), lbs2
+
+
+@partial(jax.jit, static_argnames=("n_pad",))
 def device_range_pack(env_sid, env_anchor, env_nm, lbs, eps2,
                       n_pad: int):
     """Pack the eps-range scan's candidates ON DEVICE — no sort.

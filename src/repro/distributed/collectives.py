@@ -42,6 +42,69 @@ def bsf_allreduce(bsf: jnp.ndarray, axis_name) -> jnp.ndarray:
     return jax.lax.pmin(bsf, axis_name)
 
 
+def global_kth(d2_pool: jnp.ndarray, k: int, axis_name) -> jnp.ndarray:
+    """The shared squared bsf of the sharded scan: the k-th smallest
+    distance in the union of every shard's (B, k) local pool.
+
+    Each shard's pool holds only its OWN verified candidates (disjoint
+    (sid, off) universes), so the union has no duplicates and its k-th
+    value is a sound upper bound on the exact global k-NN radius — the
+    bound every shard prunes its remaining LB-ordered chunks against
+    after each broadcast round.  One (B, k) all-gather + one top_k; the
+    periodic cadence is the caller's (`QuerySpec.sync_every`).
+    """
+    all_d = jax.lax.all_gather(d2_pool, axis_name, axis=1, tiled=True)
+    neg, _ = jax.lax.top_k(-all_d, k)
+    return -neg[:, k - 1]
+
+
+def allgather_topk_merge(d2, sid, off, k: int, axis_name):
+    """Global (B, k) pool merge carrying codes: all-gather + re-select.
+
+    Requires disjoint per-shard candidate universes (no dedup).  Used
+    for multi-axis meshes where the ring variant below has no single
+    ring order; returns identical pools on every shard.
+    """
+    alld = jax.lax.all_gather(d2, axis_name, axis=1, tiled=True)
+    alls = jax.lax.all_gather(sid, axis_name, axis=1, tiled=True)
+    allo = jax.lax.all_gather(off, axis_name, axis=1, tiled=True)
+    neg, sel = jax.lax.top_k(-alld, k)
+    return (-neg, jnp.take_along_axis(alls, sel, axis=1),
+            jnp.take_along_axis(allo, sel, axis=1))
+
+
+def ring_topk_merge(d2, sid, off, k: int, axis_name, axis_size: int):
+    """Exact global top-k merge of disjoint per-shard pools over a
+    ppermute ring — the final cross-shard merge of the sharded scan.
+
+    Each step forwards the pool RECEIVED last step (never the running
+    accumulation): every shard's original pool then enters each
+    accumulator exactly once, whereas forwarding the accumulation would
+    re-inject already-merged candidates and let one (sid, off) occupy
+    several of the k slots.  axis_size - 1 steps of 3 (B, k) permutes;
+    peak buffer stays (B, 2k) instead of all_gather's (B, P*k).  Every
+    shard ends with the identical global pool.
+    """
+    perm = [(j, (j + 1) % axis_size) for j in range(axis_size)]
+
+    def step(_, carry):
+        (rd, rs, ro), (ad, as_, ao) = carry
+        rd = jax.lax.ppermute(rd, axis_name, perm)
+        rs = jax.lax.ppermute(rs, axis_name, perm)
+        ro = jax.lax.ppermute(ro, axis_name, perm)
+        alld = jnp.concatenate([ad, rd], axis=1)
+        alls = jnp.concatenate([as_, rs], axis=1)
+        allo = jnp.concatenate([ao, ro], axis=1)
+        neg, sel = jax.lax.top_k(-alld, k)
+        acc = (-neg, jnp.take_along_axis(alls, sel, axis=1),
+               jnp.take_along_axis(allo, sel, axis=1))
+        return (rd, rs, ro), acc
+
+    _, acc = jax.lax.fori_loop(0, axis_size - 1, step,
+                               ((d2, sid, off), (d2, sid, off)))
+    return acc
+
+
 # --------------------------------------------------------------------------
 # int8 error-feedback compressed all-reduce (gradient compression)
 # --------------------------------------------------------------------------

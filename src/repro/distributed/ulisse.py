@@ -1,23 +1,29 @@
 """Distributed ULISSE: sharded index build + query answering on a mesh.
 
-Sharding model (DESIGN.md §6): the collection (and therefore the
+Sharding model (DESIGN.md §6/§10): the collection (and therefore the
 envelopes) shard over the data-parallel axes; index build is
-embarrassingly parallel (each device summarizes its own series); a k-NN
-query broadcasts Q, every shard computes lower bounds + local
-verification, and a k-sized top-k merge (collectives.topk_merge) yields
-the exact global answer.  The paper's bsf pruning survives as a
-two-phase protocol: phase 1 a cheap local approximate pass + global bsf
-min-reduce; phase 2 the LB-sorted verification where every shard prunes
-with the *global* bsf.
+embarrassingly parallel (each device summarizes its own series); a query
+broadcasts Q and every shard runs the SAME device-resident pruned scan
+core as the local backend (core/executor.py §8/§9) over its own
+LB-ordered leaf pack, with a periodically broadcast global best-so-far
+(collectives.global_kth) so each shard prunes against the mesh-wide
+candidate pool rather than its local one, one final cross-shard top-k
+merge (collectives.ring_topk_merge), and ONE host sync per batch.
 
-The per-shard algorithm is assembled from the same planner/executor
-halves as the local backend (core/planner.py masked_prepare for query
-prep, core/executor.py gather_bucket_windows + masked_ed for
-verification) — the distributed program is the local search's inner loop
-vmapped over a (B, bucket) query batch inside shard_map, so one compiled
-executable serves every query length in a bucket and every concurrent
-user in a batch.  One program, any mesh size; the same code runs the
-4-device test and the 512-chip dry-run.
+The distributed backend is a thin sharding layer over one shared scan
+core: `make_sharded_knn_query` / `make_sharded_range_query` compose
+`planner.device_shard_pack` (per-shard LB packing), the executor's
+`_scan_chunk_step` / `_device_range_core` (the fused gather+verify
+chunk machinery of the local device pipeline, DTW tier included), and
+the collectives above inside `shard_map` — one program, any mesh size;
+the same code runs the 4-device test and the 512-chip dry-run.
+
+`make_batched_distributed_query` below is the PR-1-era unpruned
+per-shard verify (top-`verify_top` LB candidates verified, certificate
++ host escalation).  It is retired from the engine's default path but
+kept as the `scan_backend="host"` distributed reference oracle and the
+benchmark baseline the pruned sharded scan is measured against
+(benchmarks/bench_kernels.py::bench_distributed_scan).
 """
 from __future__ import annotations
 
@@ -28,7 +34,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import bounds, executor, planner
 from repro.core.envelope import build_envelope_set
-from repro.core.types import Collection, EnvelopeParams
+from repro.core.types import Collection, EnvelopeParams, EnvelopeSet
+from repro.distributed import collectives
 from repro.distributed.compat import shard_map
 
 
@@ -59,6 +66,301 @@ def shard_host_arrays(sharded) -> list:
 def decode_id(code):
     """codes are (sid, off) int32 pairs stacked on the last axis."""
     return code[..., 0], code[..., 1]
+
+
+# --------------------------------------------------------------------------
+# the sharded device scan (PR 5 tentpole, DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+# field order of the sharded index tuple produced by build_sharded_index
+# and consumed (in this order) by the query programs' in_specs
+SHARDED_INDEX_FIELDS = (
+    "data", "csum", "csum2", "csum_lo", "csum2_lo", "center",
+    "paa_lo", "paa_hi", "sym_lo", "sym_hi",
+    "series_id", "anchor", "n_master", "valid",
+)
+
+
+def build_sharded_index(mesh, p: EnvelopeParams, breakpoints, data,
+                        axes=("data",), data_sharded=None):
+    """Build the collection + envelope arrays ONCE on host and lay both
+    out row-sharded over the mesh.
+
+    The PR-1 path rebuilt every shard's envelopes in-graph on every
+    query; here the summarization runs once at engine construction —
+    through the same host `Collection.from_array` (float64-split prefix
+    sums) and `build_envelope_set` as the local backend, so per-shard
+    window statistics and envelope bounds are numerically identical to
+    a local build over the same series.  `build_envelope_set` flattens
+    per series (rows [s*n_env, (s+1)*n_env) belong to series s), so a
+    series-divisible mesh shards the envelope rows evenly with plain
+    row sharding — no padding, no re-grouping.
+
+    Returns a dict of sharded jax.Arrays keyed by SHARDED_INDEX_FIELDS;
+    `data_sharded` (if given) is reused as the "data" entry so the raw
+    series are not duplicated on device.
+    """
+    coll = Collection.from_array(np.asarray(data, np.float32))
+    env = build_envelope_set(coll, p, breakpoints)
+    spec = P(axes if len(axes) > 1 else axes[0])
+
+    def put(x):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    out = {
+        "data": data_sharded if data_sharded is not None
+        else put(coll.data),
+        "csum": put(coll.csum), "csum2": put(coll.csum2),
+        "csum_lo": put(coll.csum_lo), "csum2_lo": put(coll.csum2_lo),
+        "center": put(coll.center),
+        "paa_lo": put(env.paa_lo), "paa_hi": put(env.paa_hi),
+        "sym_lo": put(env.sym_lo), "sym_hi": put(env.sym_hi),
+        "series_id": put(env.series_id), "anchor": put(env.anchor),
+        "n_master": put(env.n_master), "valid": put(env.valid),
+    }
+    return out
+
+
+def _shard_row_index(mesh, axes):
+    """Linear shard index over the (possibly multi-axis) row sharding."""
+    idx = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _sharded_knn_scan(coll: Collection, sids, anchors, n_master, lbs2,
+                      qs, dtw_lo, dtw_hi, *, k: int, g: int, chunk: int,
+                      znorm: bool, measure: str, r: int, sb: int,
+                      sync_every: int, budget_chunks: int, axis_name,
+                      interpret: bool):
+    """One shard's half of the globally-pruned k-NN scan (paper Alg. 5/7
+    on a mesh).
+
+    Runs the shared chunk step (`executor._scan_chunk_step`) over this
+    shard's LB-sorted pack, pruning every chunk with
+    min(local pool kth, gkth) where gkth is the mesh-wide squared bsf
+    re-broadcast every `sync_every` chunks (collectives.global_kth).
+    The loop itself is round-structured: `sync_every` chunk steps, one
+    bsf broadcast, one replicated continue-flag all-reduce — the
+    while_loop condition must be identical on every shard or the
+    collectives inside the body deadlock, so the flag is reduced in the
+    body and carried, never recomputed locally in `cond`.
+
+    `budget_chunks` > 0 caps the per-shard scan depth (the distributed
+    approximate mode: the first LB-ordered chunks ARE the paper's
+    best-first leaf visits); 0 means scan to convergence.  Returns
+    (pool, stats (B, 5), cert (B,)) — `cert` is the in-graph exactness
+    certificate: True iff no shard's first unvisited chunk could still
+    improve the final global pool (always True with no budget, because
+    that is the loop's only exit).
+    """
+    b_sz = qs.shape[0]
+    n_pad = sids.shape[1]
+    n_chunks = n_pad // chunk
+    budget = min(budget_chunks, n_chunks) if budget_chunks else n_chunks
+
+    def local_active(i, pool, gkth):
+        kth = jnp.minimum(pool[0][:, k - 1], gkth)
+        f = executor._first_lb2(lbs2, i, chunk)
+        return (i < budget) & jnp.isfinite(f) & (f < kth)
+
+    def chunk_step(j, carry):
+        i0, pool, gkth, stats = carry
+        i = i0 + j
+        active = local_active(i, pool, gkth)
+        kth = jnp.minimum(pool[0][:, k - 1], gkth)
+        pool, ds = executor._scan_chunk_step(
+            coll.data, coll.csum, coll.csum2, coll.csum_lo,
+            coll.csum2_lo, coll.center, sids, anchors, n_master, lbs2,
+            qs, dtw_lo, dtw_hi, i, pool, kth, active, k=k, g=g,
+            chunk=chunk, znorm=znorm, measure=measure, r=r, sb=sb,
+            interpret=interpret)
+        return (i0, pool, gkth, stats + ds)
+
+    def round_body(state):
+        i, pool, gkth, _, stats = state
+        _, pool, gkth, stats = jax.lax.fori_loop(
+            0, sync_every, chunk_step, (i, pool, gkth, stats))
+        i = i + sync_every
+        gkth = collectives.global_kth(pool[0], k, axis_name)
+        rem = jnp.any(local_active(i, pool, gkth))
+        cont = jax.lax.pmax(rem.astype(jnp.int32), axis_name) > 0
+        return (i, pool, gkth, cont, stats)
+
+    pool0 = (jnp.full((b_sz, k), jnp.inf, jnp.float32),
+             jnp.full((b_sz, k), -1, jnp.int32),
+             jnp.full((b_sz, k), -1, jnp.int32))
+    gkth0 = jnp.full((b_sz,), jnp.inf, jnp.float32)
+    cont0 = jax.lax.pmax(
+        jnp.any(local_active(jnp.int32(0), pool0, gkth0))
+        .astype(jnp.int32), axis_name) > 0
+    state = (jnp.int32(0), pool0, gkth0, cont0,
+             jnp.zeros((b_sz, 5), jnp.int32))
+    _, pool, _, _, stats = jax.lax.while_loop(
+        lambda s: s[3], round_body, state)
+
+    # in-graph exactness certificate: the pack is LB-ascending, so the
+    # chunk at `budget` heads everything unvisited; once pruned it stays
+    # pruned (kth only shrinks), so checking it against the FINAL bound
+    # covers every earlier per-query stop too
+    gkth = collectives.global_kth(pool[0], k, axis_name)
+    kth = jnp.minimum(pool[0][:, k - 1], gkth)
+    f = executor._first_lb2(lbs2, jnp.int32(budget), chunk)
+    rem = (budget < n_chunks) & jnp.isfinite(f) & (f < kth)
+    cert = jax.lax.pmax(rem.astype(jnp.int32), axis_name) == 0
+    return pool, stats, cert
+
+
+def _shard_prelude(p, breakpoints, use_paa, mesh, axes, data, e_sid,
+                   e_anc, e_nm, e_valid, e_paalo, e_paahi, e_symlo,
+                   e_symhi, qb, qh, qlen):
+    """Shared per-shard query prelude: localize series ids, rebuild the
+    EnvelopeSet view, compute lower bounds for the batch.  Returns
+    (shard_idx, local sids, lbs (B, N_local))."""
+    s_local = data.shape[0]
+    shard_idx = _shard_row_index(mesh, axes)
+    lsid = (e_sid - shard_idx * s_local).astype(jnp.int32)
+    env = EnvelopeSet(paa_lo=e_paalo, paa_hi=e_paahi, sym_lo=e_symlo,
+                      sym_hi=e_symhi, series_id=lsid, anchor=e_anc,
+                      n_master=e_nm, valid=e_valid)
+    nseg = p.query_segments(qlen)
+    lbs = planner.env_lower_bounds_batch(qb, qh, env, breakpoints,
+                                         p.seg_len, nseg, use_paa)
+    return shard_idx, lsid, lbs
+
+
+def make_sharded_knn_query(mesh, p: EnvelopeParams, breakpoints, *,
+                           k: int, measure: str = "ed", r: int = 0,
+                           use_paa: bool = False, chunk_size: int = 512,
+                           sync_every: int = 8, budget_chunks: int = 0,
+                           axes=("data",), interpret=None):
+    """Build the jitted sharded k-NN program (exact or, with
+    `budget_chunks` > 0, the budget-capped approximate mode).
+
+    Returns query_fn(*sharded_index, qs, dlo, dhi, qb, qh) ->
+    (d2 (B, k) ascending squared distances, sid (B, k) GLOBAL series
+    ids, off (B, k), stats (P, B, 5) per-shard counter stacks,
+    cert (B,) exactness certificates).  `sharded_index` is the
+    build_sharded_index tuple in SHARDED_INDEX_FIELDS order; query
+    length is read from qs.shape (one retrace per (B, qlen) shape, no
+    per-length maker).
+    """
+    if interpret is None:
+        from repro.kernels.common import default_interpret
+        interpret = default_interpret()
+    axis = axes if len(axes) > 1 else axes[0]
+    shards = _shards(mesh, axes)
+    g = p.gamma + 1
+
+    def local_fn(data, csum, csum2, cslo, cs2lo, center, paa_lo, paa_hi,
+                 sym_lo, sym_hi, e_sid, e_anc, e_nm, e_valid, qs, dlo,
+                 dhi, qb, qh):
+        qlen = qs.shape[1]
+        shard_idx, lsid, lbs = _shard_prelude(
+            p, breakpoints, use_paa, mesh, axes, data, e_sid, e_anc,
+            e_nm, e_valid, paa_lo, paa_hi, sym_lo, sym_hi, qb, qh, qlen)
+        n_pad = executor.pow2ceil(e_sid.shape[0])
+        sids, anc, nm, lbs2 = planner.device_shard_pack(
+            lsid, e_anc, e_nm, lbs, n_pad=n_pad)
+        chunk = min(executor.pow2ceil(chunk_size), n_pad)
+        coll = Collection(data=data, csum=csum, csum2=csum2,
+                          center=center, csum_lo=cslo, csum2_lo=cs2lo)
+        pool, stats, cert = _sharded_knn_scan(
+            coll, sids, anc, nm, lbs2, qs, dlo, dhi, k=k, g=g,
+            chunk=chunk, znorm=p.znorm, measure=measure, r=r,
+            sb=min(128, chunk * g), sync_every=sync_every,
+            budget_chunks=budget_chunks, axis_name=axis,
+            interpret=interpret)
+        d2, psid, poff = pool
+        gsid = jnp.where(psid >= 0, psid + shard_idx * data.shape[0],
+                         -1).astype(jnp.int32)
+        if shards == 1:
+            md2, msid, moff = d2, gsid, poff
+        elif len(axes) == 1:
+            md2, msid, moff = collectives.ring_topk_merge(
+                d2, gsid, poff, k, axis, shards)
+        else:
+            md2, msid, moff = collectives.allgather_topk_merge(
+                d2, gsid, poff, k, axis)
+        return md2, msid, moff, stats[None], cert
+
+    spec_data = P(axes if len(axes) > 1 else axes[0])
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=tuple([spec_data] * 14 + [P()] * 5),
+        out_specs=(P(), P(), P(), spec_data, P()), check=False)
+    return jax.jit(fn)
+
+
+def make_sharded_range_query(mesh, p: EnvelopeParams, breakpoints, *,
+                             capacity: int, n_rows_per_shard: int,
+                             measure: str = "ed", r: int = 0,
+                             use_paa: bool = False,
+                             chunk_size: int = 512, axes=("data",),
+                             interpret=None):
+    """Build the jitted sharded eps-range program.
+
+    Each shard packs its candidates (lb2 <= eps2, sortless — the cut
+    never moves) and runs the §9 fixed-capacity hit-buffer core over
+    them; there is no bsf to share, so the scan needs NO collectives at
+    all — hits stay in per-shard buffers that concatenate on the output
+    spec.  Returns (query_fn, chunk): query_fn(*sharded_index, qs, dlo,
+    dhi, qb, qh, eps2) -> (bd2 (B, P*cap), bsid GLOBAL, boff, cnt
+    (P, B), ovf (P, B), stats (P, B, 5), plan_sid/plan_anc/plan_nm/
+    plan_lbs2 (P, B, n_pad)); the plan arrays (GLOBAL series ids) let
+    the host replay chunks [ovf, n_chunks) of an overflowed
+    (query, shard) pair through the §9 continuation without re-deriving
+    the shard's pack.  `chunk` is the plan-row chunking the program
+    scans with — the continuation must resume at row
+    `ovf * chunk`, and returning it (like device_range_scan does) keeps
+    the engine from re-deriving (and drifting from) the internal
+    chunking; `n_rows_per_shard` pins the packing width the same way.
+    """
+    if interpret is None:
+        from repro.kernels.common import default_interpret
+        interpret = default_interpret()
+    g = p.gamma + 1
+    cap = executor.pow2ceil(capacity)
+    n_pad = executor.pow2ceil(n_rows_per_shard)
+    chunk = min(executor.pow2ceil(chunk_size), n_pad)
+
+    def local_fn(data, csum, csum2, cslo, cs2lo, center, paa_lo, paa_hi,
+                 sym_lo, sym_hi, e_sid, e_anc, e_nm, e_valid, qs, dlo,
+                 dhi, qb, qh, eps2):
+        qlen = qs.shape[1]
+        shard_idx, lsid, lbs = _shard_prelude(
+            p, breakpoints, use_paa, mesh, axes, data, e_sid, e_anc,
+            e_nm, e_valid, paa_lo, paa_hi, sym_lo, sym_hi, qb, qh, qlen)
+        sids, anc, nm, lbs2, _ = planner.device_range_pack(
+            lsid, e_anc, e_nm, lbs, eps2, n_pad=n_pad)
+        bd2, bsid, boff, cnt, ovf, st = executor._device_range_core(
+            data, csum, csum2, cslo, cs2lo, center, sids, anc, nm,
+            lbs2, qs, dlo, dhi, eps2, cap=cap, g=g, chunk=chunk,
+            znorm=p.znorm, measure=measure, r=r,
+            sb=min(128, chunk * g), interpret=interpret)
+        off0 = shard_idx * data.shape[0]
+        gbsid = jnp.where(bsid >= 0, bsid + off0, bsid)
+        return (bd2, gbsid.astype(jnp.int32), boff, cnt[None],
+                ovf[None], st[None], (sids + off0).astype(jnp.int32)[None],
+                anc[None], nm[None], lbs2[None])
+
+    spec_data = P(axes if len(axes) > 1 else axes[0])
+    row0 = axes if len(axes) > 1 else axes[0]
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=tuple([spec_data] * 14 + [P()] * 6),
+        out_specs=(P(None, row0), P(None, row0), P(None, row0),
+                   spec_data, spec_data, spec_data, spec_data,
+                   spec_data, spec_data, spec_data), check=False)
+    return jax.jit(fn), chunk
+
+
+def _shards(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
 
 
 def make_batched_distributed_query(mesh, p: EnvelopeParams, breakpoints,
@@ -170,13 +472,23 @@ def make_distributed_query(mesh, p: EnvelopeParams, breakpoints,
 
 
 def distributed_index_stats(mesh, p: EnvelopeParams, num_series: int,
-                            series_len: int) -> dict:
-    """Analytic size/balance report for the sharded index."""
-    n_env = p.num_envelopes(series_len) * num_series
+                            series_len: int,
+                            delta_envelopes: int = 0) -> dict:
+    """Analytic size/balance report for the sharded index.
+
+    `delta_envelopes`: envelopes sitting in an ingestion delta buffer
+    (`UlisseEngine.delta_size`) on top of the bulk-built set.  They are
+    part of every shard's resident working set once the grown index is
+    re-opened onto the mesh, so capacity planning that ignored them
+    (the pre-PR-5 behavior) under-reported bytes_per_device after
+    appends.
+    """
+    n_env = p.num_envelopes(series_len) * num_series + delta_envelopes
     shards = mesh.size
     return {
         "envelopes_total": n_env,
-        "envelopes_per_device": n_env // shards,
-        "bytes_per_device": n_env // shards * (2 * p.w + 8),
+        "envelopes_delta": delta_envelopes,
+        "envelopes_per_device": -(-n_env // shards),
+        "bytes_per_device": -(-n_env // shards) * (2 * p.w + 8),
         "query_wire_bytes": mesh.size * 8 * 2,   # k-NN merge traffic
     }

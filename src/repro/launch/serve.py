@@ -3,9 +3,13 @@
     python -m repro.launch.serve --devices 8 --series 2048 --queries 20
 
 Builds a sharded collection behind one `UlisseEngine` and answers a
-mixed-length query stream, reporting latency and escalations.  The
-engine buckets query lengths (one compiled program per power-of-two
-bucket) and batches up to --batch queries per device program.
+mixed-length query stream, reporting latency and pruning power.  The
+default backend is the sharded pruned device scan (DESIGN.md §10):
+every shard runs the device scan core over its own LB-ordered pack,
+pruning against the global best-so-far broadcast every --sync-every
+chunks; exactness is structural (no verify_top escalation).  One
+compiled program serves every query length (retraced per shape), and
+up to --batch queries fuse into one device program.
 """
 import argparse
 import os
@@ -22,6 +26,9 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--batch", type=int, default=4,
                     help="max queries fused into one device program")
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="chunks each shard scans between global "
+                         "best-so-far broadcasts")
     args = ap.parse_args(argv)
 
     if args.devices:
@@ -42,7 +49,7 @@ def main(argv=None):
                        znorm=True)
     engine = UlisseEngine.distributed(mesh, p, data,
                                       max_batch=args.batch)
-    spec = QuerySpec(k=args.k, verify_top=128)
+    spec = QuerySpec(k=args.k, sync_every=args.sync_every)
     lengths = sorted({p.lmin, (p.lmin + p.lmax) // 2 // 16 * 16, p.lmax})
     print(f"serving {ns} series x {args.series_len} over {n_dev} "
           f"devices; query lengths {lengths}")
@@ -60,7 +67,8 @@ def main(argv=None):
         lats.append(time.perf_counter() - t0)
         print(f"  |Q|={qlen} nn=({res.series[0]},{res.offsets[0]}) "
               f"d={res.dists[0]:.4f} "
-              f"escalations={res.stats.escalations} "
+              f"pruning={res.stats.pruning_power:.3f} "
+              f"chunks/shard={res.stats.shard_chunks} "
               f"{lats[-1] * 1e3:.1f}ms")
     print(f"median latency {np.median(lats[1:]) * 1e3:.1f}ms")
     return 0

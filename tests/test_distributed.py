@@ -55,8 +55,10 @@ def test_distributed_query_exactness():
 
 
 def test_distributed_engine_batched_mixed_lengths():
-    """UlisseEngine distributed backend: one batched bucket-padded program
-    per (length-bucket, spec); every exact answer matches brute force."""
+    """UlisseEngine distributed backend (sharded pruned scan): mixed
+    query lengths through ONE compiled program object (retraced per
+    (B, qlen) shape); every exact answer matches brute force, on both
+    the device default and the legacy host reference backend."""
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import (Collection, EnvelopeParams, QuerySpec,
@@ -73,15 +75,25 @@ def test_distributed_engine_batched_mixed_lengths():
             o = rng.integers(0, 128 - ql + 1)
             qs.append(data[qi, o:o + ql]
                       + rng.normal(size=ql).astype(np.float32) * .02)
-        out = eng.search(qs, QuerySpec(k=5, verify_top=256))
+        out = eng.search(qs, QuerySpec(k=5))
         coll = Collection.from_array(data)
         for q, r in zip(qs, out):
             ref = brute_force_knn(coll, q, k=5, znorm=True)
             # 5e-3: dot-identity ED (brute oracle) cancels near d=0
             assert np.allclose(r.dists, ref.dists, atol=5e-3), \\
                 (r.dists, ref.dists)
-        # lengths {64, 80, 96} bucket to {64, 96}: 2 compiled programs
-        assert sorted(b for (b, _, _) in eng._programs) == [64, 96], \\
+        # one sharded-scan program serves all three lengths
+        assert len(eng._programs) == 1, list(eng._programs)
+        # legacy host reference (PR-1 unpruned verify + escalation)
+        out_h = eng.search(qs, QuerySpec(k=5, verify_top=256,
+                                         scan_backend="host"))
+        for r, rh in zip(out, out_h):
+            assert np.allclose(r.dists, rh.dists, atol=5e-3), \\
+                (r.dists, rh.dists)
+        # host path adds its (bucket, k, verify_top) programs: lengths
+        # {64, 80, 96} bucket to {64, 96}
+        assert sorted(k[0] for k in eng._programs
+                      if isinstance(k[0], int)) == [64, 96], \\
             sorted(eng._programs)
         print("ok")
     """)

@@ -38,17 +38,24 @@ def test_spec_validation():
 
 
 def test_distributed_k_exceeds_verified_candidates(walk_collection):
-    """k > verify_top * (gamma+1) * shards must escalate (padded +inf
-    merge rows fail the certificate), not crash at trace time."""
+    """Legacy host backend: k > verify_top * (gamma+1) * shards must
+    escalate (padded +inf merge rows fail the certificate), not crash
+    at trace time.  The sharded device scan has no escalation — its
+    pruned scan runs to convergence — and must return the same answer
+    with a large k directly."""
     mesh = jax.make_mesh((1,), ("data",))
     p = EnvelopeParams(gamma=0, znorm=True, **PARAMS)
     engine = UlisseEngine.distributed(mesh, p, walk_collection)
     coll = Collection.from_array(walk_collection)
     q = walk_collection[2, 5:69].astype(np.float32)
-    res = engine.search(q, QuerySpec(k=40, verify_top=2))
+    res = engine.search(q, QuerySpec(k=40, verify_top=2,
+                                     scan_backend="host"))
     ref = brute_force_knn(coll, q, k=40, znorm=True)
     assert res.stats.escalations >= 1
     np.testing.assert_allclose(res.dists, ref.dists, atol=5e-3)
+    dev = engine.search(q, QuerySpec(k=40))
+    assert dev.stats.escalations == 0
+    np.testing.assert_allclose(dev.dists, ref.dists, atol=5e-3)
 
 
 @pytest.mark.parametrize("spec", [
@@ -92,9 +99,10 @@ def test_engine_batch_input_forms(engine, walk_collection):
 
 
 def test_distributed_escalation_returns_exact(walk_collection):
-    """The exactness-certificate escalation path: verify_top too small to
-    certify on the first attempt -> the engine retries internally with
-    doubled verify_top and still returns the brute-force answer."""
+    """Legacy host backend's exactness-certificate escalation path:
+    verify_top too small to certify on the first attempt -> the engine
+    retries internally with doubled verify_top and still returns the
+    brute-force answer."""
     mesh = jax.make_mesh((1,), ("data",))
     p = EnvelopeParams(gamma=8, znorm=True, **PARAMS)
     engine = UlisseEngine.distributed(mesh, p, walk_collection,
@@ -103,26 +111,43 @@ def test_distributed_escalation_returns_exact(walk_collection):
     q = walk_collection[5, 30:94].astype(np.float32)
     ref = brute_force_knn(coll, q, k=5, znorm=True)
 
-    res = engine.search(q, QuerySpec(k=5, verify_top=2))
+    res = engine.search(q, QuerySpec(k=5, verify_top=2,
+                                     scan_backend="host"))
     assert res.stats.escalations >= 1, \
         "verify_top=2 must fail the certificate at least once"
     np.testing.assert_allclose(res.dists, ref.dists, atol=5e-3)
 
     # a comfortable verify_top certifies without escalation
-    res2 = engine.search(q, QuerySpec(k=5, verify_top=256))
+    res2 = engine.search(q, QuerySpec(k=5, verify_top=256,
+                                      scan_backend="host"))
     assert res2.stats.escalations == 0
     np.testing.assert_allclose(res2.dists, ref.dists, atol=5e-3)
 
 
-def test_distributed_rejects_unsupported_shapes(walk_collection):
+def test_distributed_host_backend_rejects_unsupported_shapes(
+        walk_collection):
+    """Only the LEGACY host reference is ED/kNN-only; the sharded
+    device scan (the default) answers DTW and range on a mesh."""
     mesh = jax.make_mesh((1,), ("data",))
     p = EnvelopeParams(gamma=8, znorm=True, **PARAMS)
     engine = UlisseEngine.distributed(mesh, p, walk_collection)
     q = walk_collection[0, 0:64]
     with pytest.raises(NotImplementedError):
-        engine.search(q, QuerySpec(k=1, measure="dtw", r=5))
+        engine.search(q, QuerySpec(k=1, measure="dtw", r=5,
+                                   scan_backend="host"))
     with pytest.raises(NotImplementedError):
-        engine.search(q, QuerySpec(eps=1.0))
+        engine.search(q, QuerySpec(eps=1.0, scan_backend="host"))
+    # the device default answers both (1-shard mesh == local semantics)
+    coll = Collection.from_array(walk_collection)
+    local = UlisseEngine.from_collection(coll, p)
+    dd = engine.search(q, QuerySpec(k=1, measure="dtw", r=5))
+    dl = local.search(q, QuerySpec(k=1, measure="dtw", r=5))
+    np.testing.assert_allclose(dd.dists, dl.dists, atol=2e-3)
+    eps = float(dl.dists[0]) + 0.5
+    rd = engine.search(q, QuerySpec(eps=eps))
+    rl = local.search(q, QuerySpec(eps=eps))
+    assert (set(zip(rd.series, rd.offsets))
+            == set(zip(rl.series, rl.offsets)))
 
 
 def test_legacy_wrappers_deprecated(engine, walk_collection):
