@@ -9,10 +9,20 @@ Compares the ``results`` sections of two BENCH_kernels.json artifacts
 
   * timing sections (``us_per_call``) regress when the implied qps
     (1e6 / us_per_call) drops by more than the section's tolerance;
-  * ratio sections (``device_vs_host`` speedups) regress when the ratio
-    itself drops by more than the tolerance — these are
-    machine-relative, so they stay meaningful on CI runners whose
-    absolute qps differs from the baseline machine's.
+  * ratio sections (``device_vs_host`` speedups, serving ``ratio``
+    speedups) regress when the ratio itself drops by more than the
+    tolerance — these are machine-relative, so they stay meaningful on
+    CI runners whose absolute qps differs from the baseline machine's.
+
+Absolute qps comparisons are additionally **runner-calibrated**: run.py
+stamps the wall time of a fixed numpy-only reference workload into the
+artifact (``calibration.reference_us``) when it writes it, and the gate
+re-measures the same workload on the machine it runs on, scaling the
+baseline's expected qps by the speed ratio.  A CI runner 2x slower than
+the machine that committed the baseline then gates against half the
+committed qps instead of reading machine variance as a regression.
+``--no-calibrate`` (or a baseline artifact without the stamp) disables
+the scaling.
 
 Sections only in one file are skipped (new benchmarks don't fail the
 gate; removed ones don't linger).  The default tolerance is 25%
@@ -26,8 +36,39 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
 
 DEFAULT_TOL = 0.25
+
+# sanity bounds on the calibration speed ratio: outside this range the
+# probe is measuring something other than CPU speed (throttling spike,
+# container cold start) and scaling would hide real regressions
+SCALE_MIN, SCALE_MAX = 0.2, 5.0
+
+
+def reference_workload_us(repeats: int = 5) -> float:
+    """Runner-speed probe: median wall microseconds of a fixed
+    numpy-only workload (matmul chain + a sliding-ED-shaped reduction —
+    the two compute shapes the benches spend their time in).  No jax,
+    no compile cache, no filesystem: the number tracks only how fast
+    the machine executing it is, so the ratio of two measurements is a
+    portable speed factor between the baseline machine and this one."""
+    import numpy as np
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(256, 256)).astype(np.float32)
+    w = rng.normal(size=(4096, 128)).astype(np.float32)
+    q = rng.normal(size=(128,)).astype(np.float32)
+    ts = []
+    for _ in range(repeats + 1):          # first rep warms caches
+        t0 = time.perf_counter()
+        b = a
+        for _ in range(8):
+            b = b @ a
+        d = ((w - q) ** 2).sum(axis=1)
+        float(b.sum() + d.min())
+        ts.append(time.perf_counter() - t0)
+    ts = sorted(ts[1:])
+    return float(ts[len(ts) // 2] * 1e6)
 
 # fraction-of-qps (or fraction-of-ratio) drop tolerated per section;
 # first match by prefix wins.  Host-path and storage timings are
@@ -46,6 +87,7 @@ PREFIX_TOL = [
     ("range_scan_speedup", 0.50),
     ("approx_batched_", 0.50),
     ("distributed_scan_speedup", 0.50),
+    ("serving_", 0.50),             # thread-scheduling jitter on CI
 ]
 
 
@@ -56,24 +98,33 @@ def tolerance(name: str, default: float) -> float:
     return default
 
 
-def _results(path: str) -> dict:
+def _load(path: str) -> dict:
     with open(path) as f:
-        return json.load(f).get("results", {})
+        return json.load(f)
 
 
-def compare(baseline: dict, fresh: dict, default_tol: float):
-    """Yields (section, kind, base, new, drop, tol, failed) rows."""
+def compare(baseline: dict, fresh: dict, default_tol: float,
+            scale: float = 1.0):
+    """Yields (section, kind, base, new, drop, tol, failed) rows.
+
+    ``scale`` is the runner-speed factor applied to the baseline's
+    absolute qps (baseline-machine reference time / this machine's):
+    ratio sections are machine-relative and never scaled."""
     for name in sorted(set(baseline) & set(fresh)):
         b, f = baseline[name], fresh[name]
         tol = tolerance(name, default_tol)
         if "us_per_call" in b and "us_per_call" in f:
-            qb = 1e6 / max(float(b["us_per_call"]), 1e-9)
+            qb = scale * 1e6 / max(float(b["us_per_call"]), 1e-9)
             qf = 1e6 / max(float(f["us_per_call"]), 1e-9)
             drop = 1.0 - qf / qb
             yield (name, "qps", qb, qf, drop, tol, drop > tol)
         elif "device_vs_host" in b and "device_vs_host" in f:
             rb = float(b["device_vs_host"])
             rf = float(f["device_vs_host"])
+            drop = 1.0 - rf / max(rb, 1e-9)
+            yield (name, "ratio", rb, rf, drop, tol, drop > tol)
+        elif "ratio" in b and "ratio" in f:
+            rb, rf = float(b["ratio"]), float(f["ratio"])
             drop = 1.0 - rf / max(rb, 1e-9)
             yield (name, "ratio", rb, rf, drop, tol, drop > tol)
 
@@ -87,10 +138,30 @@ def main() -> int:
     ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
                     help="default tolerated fractional qps drop "
                          "(per-section overrides in PREFIX_TOL)")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip the runner-speed probe; compare raw qps")
     args = ap.parse_args()
 
-    rows = list(compare(_results(args.baseline), _results(args.fresh),
-                        args.tol))
+    base_doc, fresh_doc = _load(args.baseline), _load(args.fresh)
+    scale = 1.0
+    ref_base = base_doc.get("calibration", {}).get("reference_us")
+    if not args.no_calibrate and ref_base:
+        ref_here = reference_workload_us()
+        scale = float(ref_base) / ref_here
+        clamped = min(max(scale, SCALE_MIN), SCALE_MAX)
+        note = "" if clamped == scale else \
+            f" (clamped from {scale:.2f} — probe outside sane range)"
+        scale = clamped
+        print(f"calibration: baseline machine {float(ref_base):.0f}us, "
+              f"this machine {ref_here:.0f}us -> baseline qps scaled "
+              f"by {scale:.2f}{note}")
+    elif not args.no_calibrate:
+        print("calibration: baseline artifact carries no reference_us "
+              "stamp — comparing raw qps")
+
+    rows = list(compare(base_doc.get("results", {}),
+                        fresh_doc.get("results", {}),
+                        args.tol, scale))
     if not rows:
         print("check_regression: no overlapping sections — nothing "
               "to gate (fresh run produced disjoint benchmarks?)")

@@ -11,8 +11,12 @@ run refreshes its own rows without wiping everyone else's) and
 ``trajectory`` appends one run record per invocation — git sha,
 timestamp, backend/device count, and the sections this run produced —
 so the artifact CI uploads preserves the perf history across PRs
-instead of only the final overwrite.  benchmarks/check_regression.py
-gates CI on the ``results`` sections.
+instead of only the final overwrite.  Each write also stamps
+``calibration.reference_us`` — the wall time of a fixed numpy-only
+workload on the machine producing the artifact — which
+benchmarks/check_regression.py re-measures at gate time to normalize
+the committed qps by runner speed before gating the ``results``
+sections.
 """
 from __future__ import annotations
 
@@ -40,6 +44,7 @@ def write_json(path: str) -> None:
     import jax
 
     from benchmarks.common import RESULTS
+    from benchmarks.check_regression import reference_workload_us
 
     doc = {}
     if os.path.exists(path):
@@ -59,8 +64,13 @@ def write_json(path: str) -> None:
         "devices": jax.device_count(),
         "results": dict(RESULTS),
     })
+    # runner-speed stamp: check_regression re-measures this fixed
+    # numpy workload at gate time and scales the committed qps by the
+    # ratio, so the gate compares work, not machines
+    calibration = {"reference_us": round(reference_workload_us(), 1)}
     with open(path, "w") as f:
         json.dump({"backend": jax.default_backend(),
+                   "calibration": calibration,
                    "results": merged,
                    "trajectory": trajectory}, f, indent=2,
                   sort_keys=True)

@@ -1,13 +1,15 @@
-"""ULISSE similarity-search service: batched, variable-length queries
-against a sharded collection (the paper's workload as a serving system).
+"""ULISSE similarity-search service: the serving tier under real
+concurrency (the paper's workload as a serving system).
 
-One `UlisseEngine` serves every query shape through the sharded pruned
-device scan (DESIGN.md §10): each shard runs the device scan core over
-its own LB-ordered pack, prunes against the broadcast global
-best-so-far, and one cross-shard merge returns the exact answer — no
-verify_top escalation loop, exactness is structural.  One compiled
-program serves every query length (retraced per shape); concurrent
-queries batch into one device program.
+One `UlisseEngine` answers every query shape through the device scan
+core; `repro.serve.UlisseServer` puts the asynchronous serving tier in
+front of it (DESIGN.md §11): client threads submit queries, the
+dispatcher coalesces them into pow2 length buckets, holds each bucket
+a few ms, and dispatches ONE padded device program per bucket —
+finally exploiting the batched scan core under load.  Admission
+control sheds overload with a typed error, and `append()`/`compact()`
+ride the writer lane: applied between dispatches, so every in-flight
+batch sees one consistent index snapshot.
 
 The serving state is durable: the first run saves the shard payloads
 (`engine.save`); later runs — on ANY device count, restore re-shards —
@@ -21,6 +23,7 @@ Set ULISSE_SERVE_DIR to choose where the shards live.
 """
 import os
 import tempfile
+import threading
 import time
 
 import numpy as np
@@ -30,8 +33,40 @@ from repro.core import (Collection, EnvelopeParams, QuerySpec,
                         UlisseEngine)
 from repro.core.search import brute_force_knn
 from repro.distributed.ulisse import distributed_index_stats
+from repro.serve import ServeConfig, UlisseServer
 from repro.storage import IndexCompatibilityError, IndexFormatError
 from repro.train.data import series_batches
+
+LENGTHS = [96, 128, 160]
+
+
+def drive(server, data, queries, p, n_clients=6):
+    """Closed-loop multi-client driver: each client submits, waits,
+    submits the next; every answer is checked against brute force."""
+    coll = Collection.from_array(data)
+    results = [None] * len(queries)
+
+    def client(cid):
+        for i in range(cid, len(queries), n_clients):
+            results[i] = server.search(queries[i], timeout=300)
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    for q, res in zip(queries, results):
+        ref = brute_force_knn(coll, q, k=5, znorm=p.znorm)
+        # compare SQUARED distances: the oracle's dot-identity f32 ED
+        # carries cancellation noise ~eps_f32 * 2L on d^2 (the engine's
+        # float64 re-scored side no longer shares it), so the noise
+        # floor is uniform on d^2 but blows up on d as d -> 0
+        assert np.allclose(res.dists ** 2, ref.dists ** 2,
+                           atol=1e-3, rtol=1e-3)
+    return dt, results
 
 
 def main():
@@ -67,60 +102,71 @@ def main():
     print(f"capacity: {stats['envelopes_per_device']} envelopes/device"
           f" (~{stats['bytes_per_device'] / 1e6:.2f} MB/device)")
 
-    # growing the corpus: appends land in a LOCAL engine's ingestion
-    # delta (the mesh re-shards at the next reopen); replan the mesh
-    # capacity BEFORE promoting — delta rows live in every shard's
-    # working set too, so sizing from the bulk-built count alone
-    # under-provisions after appends.
-    grower = UlisseEngine.from_collection(Collection.from_array(data), p)
-    grower.append(series_batches(32 * n_dev, 192, seed=9))
-    plan = distributed_index_stats(mesh, p, data.shape[0],
-                                   data.shape[1],
-                                   delta_envelopes=grower.delta_size)
-    print(f"replan after appending {32 * n_dev} series: "
-          f"{plan['envelopes_per_device']} envelopes/device "
-          f"({plan['envelopes_delta']} delta rows)")
+    rng = np.random.default_rng(0)
+
+    def make_query(i):
+        qlen = LENGTHS[i % len(LENGTHS)]
+        src = rng.integers(0, data.shape[0])
+        off = rng.integers(0, data.shape[1] - qlen + 1)
+        return (data[src, off:off + qlen]
+                + rng.normal(size=qlen).astype(np.float32) * 0.02)
+
+    queries = [make_query(i) for i in range(24)]
     spec = QuerySpec(k=5)
 
-    rng = np.random.default_rng(0)
-    coll = Collection.from_array(data)
-    lat = []
-    for i in range(12):
-        qlen = [96, 128, 160][i % 3]
-        src = rng.integers(0, data.shape[0])
-        off = rng.integers(0, 192 - qlen + 1)
-        q = (data[src, off:off + qlen]
-             + rng.normal(size=qlen).astype(np.float32) * 0.02)
-        t0 = time.perf_counter()
-        res = engine.search(q, spec)
-        dt = time.perf_counter() - t0
-        lat.append(dt)
-        ref = brute_force_knn(coll, q, k=5, znorm=p.znorm)
-        # 1e-2: near d=0 the baseline's dot-identity f32 ED carries
-        # cancellation noise (~eps_f32 * 2L on d^2) that the engine's
-        # float64 re-scored distances no longer share — the engine side
-        # is the accurate one, the tolerance absorbs the oracle's noise
-        ok = np.allclose(res.dists, ref.dists, atol=1e-2)
-        print(f"q{i:02d} |Q|={qlen} -> nn=(series {res.series[0]}, "
-              f"off {res.offsets[0]}) d={res.dists[0]:.4f} "
-              f"pruning={res.stats.pruning_power:.3f} "
-              f"brute-match={ok} {dt * 1e3:.1f}ms")
-        assert ok
-    print(f"median latency {np.median(lat) * 1e3:.1f}ms "
-          f"(first call per length bucket includes compile)")
-
-    # batched serving: amortize dispatch across concurrent users
-    qlen = 128
-    batch = [data[rng.integers(0, data.shape[0]), o:o + qlen]
-             + rng.normal(size=qlen).astype(np.float32) * 0.02
-             for o in rng.integers(0, 192 - qlen + 1, size=8)]
-    engine.search(batch[:4], spec)   # warm the full-batch program shape
+    # serial baseline: the old one-request-at-a-time loop
+    engine.warmup(LENGTHS, [1], spec)
     t0 = time.perf_counter()
-    results = engine.search(batch, spec)
-    dt = time.perf_counter() - t0
-    assert all(len(r.dists) == 5 for r in results)
-    print(f"batch of {len(batch)}: {dt * 1e3:.1f}ms total, "
-          f"{len(batch) / dt:.0f} queries/s")
+    for q in queries:
+        engine.search(q, spec)
+    dt_serial = time.perf_counter() - t0
+
+    # the serving tier: mixed-length traffic coalesced per pow2 bucket
+    server = UlisseServer(engine, spec,
+                          ServeConfig(window_ms=2.0, max_batch=4))
+    server.warmup(LENGTHS)     # pre-trace every (bucket, fill) program
+    server.metrics.reset()
+    dt, results = drive(server, data, queries, p)
+    server.close()
+    m = server.metrics.snapshot()
+    print(f"served {len(queries)} queries (all brute-force-verified): "
+          f"{len(queries) / dt:.1f} qps vs serial "
+          f"{len(queries) / dt_serial:.1f} qps "
+          f"({dt_serial / dt:.2f}x)")
+    for bucket, bm in m["buckets"].items():
+        print(f"  bucket {bucket}: dispatches={bm['dispatches']} "
+              f"mean_fill={bm['mean_fill']} "
+              f"latency p50/p99={bm['latency_ms']['p50']}/"
+              f"{bm['latency_ms']['p99']}ms")
+
+    # live ingestion under load: the writer lane on a LOCAL engine
+    # (appends land in the ingestion delta; the mesh re-shards at the
+    # next reopen).  Appends/compacts interleave with in-flight query
+    # batches without ever racing a scan: the dispatcher swaps the
+    # index snapshot only between dispatches.
+    local = UlisseEngine.from_collection(Collection.from_array(data), p,
+                                         max_batch=4)
+    lserver = UlisseServer(local, spec,
+                           ServeConfig(window_ms=2.0, max_batch=4))
+    lserver.warmup(LENGTHS)
+    grown = series_batches(32 * n_dev, 192, seed=9)
+    append_ticket = lserver.append(grown + 1000.0)  # far from queries
+    dt, _ = drive(lserver, data, queries[:12], p, n_clients=4)
+    v = append_ticket.result(60)
+    print(f"ingested {grown.shape[0]} series mid-traffic (snapshot "
+          f"v{v}, delta={local.delta_size} envelopes); queries stayed "
+          "exact throughout")
+    # replan the mesh capacity BEFORE promoting — delta rows live in
+    # every shard's working set too, so sizing from the bulk-built
+    # count alone under-provisions after appends
+    plan = distributed_index_stats(mesh, p, data.shape[0],
+                                   data.shape[1],
+                                   delta_envelopes=local.delta_size)
+    print(f"replan: {plan['envelopes_per_device']} envelopes/device "
+          f"({plan['envelopes_delta']} delta rows)")
+    lserver.compact().result(120)
+    print(f"compacted between dispatches (delta={local.delta_size})")
+    lserver.close()
 
 
 if __name__ == "__main__":

@@ -127,7 +127,7 @@ class QuerySpec:
 
 
 def _pow2_bucket(qlen: int, cap: int) -> int:
-    return min(executor.pow2ceil(qlen), cap)
+    return planner.length_bucket(qlen, cap)
 
 
 def _shards_of(mesh, axes) -> int:
@@ -188,18 +188,21 @@ class UlisseEngine:
     # ------------------------------------------------------------------
 
     @classmethod
-    def from_index(cls, index: UlisseIndex) -> "UlisseEngine":
+    def from_index(cls, index: UlisseIndex,
+                   max_batch: int = 8) -> "UlisseEngine":
         """Wrap an already-built local index."""
-        return cls(index=index)
+        return cls(index=index, max_batch=max_batch)
 
     @classmethod
     def from_collection(cls, collection: Collection, params: EnvelopeParams,
                         breakpoints=None, block_size: int = 64,
-                        num_levels: int = 2) -> "UlisseEngine":
+                        num_levels: int = 2,
+                        max_batch: int = 8) -> "UlisseEngine":
         """Build the index and the engine in one step (local backend)."""
         return cls(index=build_index(collection, params, breakpoints,
                                      block_size=block_size,
-                                     num_levels=num_levels))
+                                     num_levels=num_levels),
+                   max_batch=max_batch)
 
     @classmethod
     def distributed(cls, mesh, params: EnvelopeParams, data,
@@ -250,7 +253,9 @@ class UlisseEngine:
                 max_batch=(manifest.get("max_batch", 8)
                            if max_batch is None else max_batch))
         return cls.from_index(store.open_index(path, params=params,
-                                               mmap=mmap))
+                                               mmap=mmap),
+                              max_batch=8 if max_batch is None
+                              else max_batch)
 
     def save(self, path: str) -> str:
         """Persist this engine's index to `path` (atomic commit).
@@ -362,6 +367,32 @@ class UlisseEngine:
         else:
             results = [self._search_local(q, spec) for q in qs]
         return results[0] if single else results
+
+    def warmup(self, lengths: Sequence[int],
+               batch_sizes: Sequence[int] = (1,),
+               spec: QuerySpec = QuerySpec()) -> int:
+        """Pre-trace the per-(batch, length) device programs.
+
+        Runs one throwaway search per (length, batch-size) pair on a
+        deterministic synthetic query so the jit caches hold every
+        program shape the given traffic mix needs BEFORE the first real
+        request arrives — first-request latency becomes serving
+        latency, not compile latency.  Batch sizes round up to their
+        pow2 bucket exactly as real dispatches do, so warming
+        `batch_sizes=(max_batch,)` plus `(1,)` covers the common fills.
+        Returns the number of (length, batch) shapes exercised.
+        """
+        traced = 0
+        for qlen in sorted({int(x) for x in lengths}):
+            self._bucket(qlen)            # validates the length range
+            # non-degenerate values: znormalize needs a nonzero std
+            q = np.sin(np.linspace(0.0, 6.0, qlen)).astype(np.float32)
+            for bsz in sorted({int(x) for x in batch_sizes}):
+                if bsz < 1:
+                    raise ValueError("batch sizes must be >= 1")
+                self.search([q] * bsz, spec)
+                traced += 1
+        return traced
 
     def _normalize_queries(self, queries):
         if isinstance(queries, (list, tuple)):
@@ -512,6 +543,19 @@ class UlisseEngine:
             by_len.setdefault(len(q), []).append(i)
         return sorted(by_len.items())
 
+    def _padded_batches(self, qs, idxs):
+        """max_batch-sized sub-batches of one length group, the query
+        list padded to the pow2 batch bucket by repeating the last
+        query.  Scan rows are independent (a padded duplicate row never
+        touches another row's pool), so results are bit-identical to
+        the unpadded program while compiles stay bounded at
+        log2(max_batch)+1 batch shapes per length — the property the
+        serving tier's variable dispatch fills rely on."""
+        for sub, b in self._device_batches(idxs):
+            queries = [qs[i] for i in sub]
+            queries += [queries[-1]] * (b - len(sub))
+            yield sub, queries, b
+
     def _stack_prepared(self, queries, spec: QuerySpec):
         """Shared per-length-group query prep: ONE jitted batched call
         (planner.prepare_query_batch), device arrays, no sync."""
@@ -628,52 +672,54 @@ class UlisseEngine:
         env = index.search_envelopes()
         n_comb = env.size
         for qlen, idxs in self._group_by_len(qs):
-            queries = [qs[i] for i in idxs]
-            nseg, qstack, dlo, dhi, qb, qh = self._stack_prepared(
-                queries, spec)
-            b = len(queries)
-            if spec.approx_first:
-                (seed, ast, cert, leaf_v, comb_idx, visited, achunk,
-                 nblk) = self._device_approx_stage(
-                    qstack, dlo, dhi, qb, qh, nseg, k, spec)
-            else:
-                seed = (jnp.full((b, k), jnp.inf, jnp.float32),
-                        jnp.full((b, k), -1, jnp.int32),
-                        jnp.full((b, k), -1, jnp.int32))
-                ast = jnp.zeros((b, 5), jnp.int32)
-                cert = jnp.zeros((b,), bool)
-                leaf_v = jnp.zeros((b,), jnp.int32)
-                comb_idx = jnp.full((b, 1), n_comb, jnp.int32)
-                visited = jnp.zeros((b,), jnp.int32)
-                achunk, nblk = 1, 0
-            lbs = planner.env_lower_bounds_batch(
-                qb, qh, env, index.breakpoints, self.params.seg_len,
-                nseg, spec.use_paa_bounds)
-            ssids, sanc, snm, slbs2, _ = planner.device_scan_pack(
-                env.series_id, env.anchor, env.n_master, lbs, comb_idx,
-                visited, chunk=achunk, n_pad=executor.pow2ceil(n_comb))
-            d2, sid, off, st = executor.device_exact_scan(
-                index.collection, ssids, sanc, snm, slbs2, qstack, dlo,
-                dhi, *seed, k=k, g=g, measure=spec.measure, r=spec.r,
-                znorm=self.params.znorm, chunk_size=spec.chunk_size)
-            # THE one host sync of the batch
-            d2, sid, off, st, ast, cert, leaf_v = jax.device_get(
-                (d2, sid, off, st, ast, cert, leaf_v))
-            for row, i in enumerate(idxs):
-                stats = SearchStats(
-                    envelopes_total=n_comb,
-                    lb_computations=n_comb + (nblk if spec.approx_first
-                                              else 0),
-                    leaves_visited=int(leaf_v[row]),
-                    exact_from_approx=bool(cert[row]),
-                    chunks_visited=int(st[row, 0]),
-                    envelopes_checked=int(ast[row, 1]) + int(st[row, 1]),
-                    true_dist_computations=(int(ast[row, 2])
-                                            + int(st[row, 2])),
-                    dtw_lb_keogh=int(ast[row, 3]) + int(st[row, 3]),
-                    dtw_full=int(ast[row, 4]) + int(st[row, 4]))
-                results[i] = self._knn_result_rows(
-                    qs[i], spec, d2[row], sid[row], off[row], stats)
+            for sub, queries, b in self._padded_batches(qs, idxs):
+                nseg, qstack, dlo, dhi, qb, qh = self._stack_prepared(
+                    queries, spec)
+                if spec.approx_first:
+                    (seed, ast, cert, leaf_v, comb_idx, visited, achunk,
+                     nblk) = self._device_approx_stage(
+                        qstack, dlo, dhi, qb, qh, nseg, k, spec)
+                else:
+                    seed = (jnp.full((b, k), jnp.inf, jnp.float32),
+                            jnp.full((b, k), -1, jnp.int32),
+                            jnp.full((b, k), -1, jnp.int32))
+                    ast = jnp.zeros((b, 5), jnp.int32)
+                    cert = jnp.zeros((b,), bool)
+                    leaf_v = jnp.zeros((b,), jnp.int32)
+                    comb_idx = jnp.full((b, 1), n_comb, jnp.int32)
+                    visited = jnp.zeros((b,), jnp.int32)
+                    achunk, nblk = 1, 0
+                lbs = planner.env_lower_bounds_batch(
+                    qb, qh, env, index.breakpoints, self.params.seg_len,
+                    nseg, spec.use_paa_bounds)
+                ssids, sanc, snm, slbs2, _ = planner.device_scan_pack(
+                    env.series_id, env.anchor, env.n_master, lbs,
+                    comb_idx, visited, chunk=achunk,
+                    n_pad=executor.pow2ceil(n_comb))
+                d2, sid, off, st = executor.device_exact_scan(
+                    index.collection, ssids, sanc, snm, slbs2, qstack,
+                    dlo, dhi, *seed, k=k, g=g, measure=spec.measure,
+                    r=spec.r, znorm=self.params.znorm,
+                    chunk_size=spec.chunk_size)
+                # THE one host sync of the batch
+                d2, sid, off, st, ast, cert, leaf_v = jax.device_get(
+                    (d2, sid, off, st, ast, cert, leaf_v))
+                for row, i in enumerate(sub):
+                    stats = SearchStats(
+                        envelopes_total=n_comb,
+                        lb_computations=n_comb
+                        + (nblk if spec.approx_first else 0),
+                        leaves_visited=int(leaf_v[row]),
+                        exact_from_approx=bool(cert[row]),
+                        chunks_visited=int(st[row, 0]),
+                        envelopes_checked=(int(ast[row, 1])
+                                           + int(st[row, 1])),
+                        true_dist_computations=(int(ast[row, 2])
+                                                + int(st[row, 2])),
+                        dtw_lb_keogh=int(ast[row, 3]) + int(st[row, 3]),
+                        dtw_full=int(ast[row, 4]) + int(st[row, 4]))
+                    results[i] = self._knn_result_rows(
+                        qs[i], spec, d2[row], sid[row], off[row], stats)
         return results
 
     def _local_approx_device(self, qs, spec: QuerySpec):
@@ -683,24 +729,26 @@ class UlisseEngine:
         results: List[Optional[SearchResult]] = [None] * len(qs)
         n_comb = self._index.search_envelopes().size
         for qlen, idxs in self._group_by_len(qs):
-            nseg, qstack, dlo, dhi, qb, qh = self._stack_prepared(
-                [qs[i] for i in idxs], spec)
-            (ad2, asid, aoff), ast, cert, leaf_v, _, _, _, nblk = \
-                self._device_approx_stage(qstack, dlo, dhi, qb, qh,
-                                          nseg, k, spec)
-            ad2, asid, aoff, ast, cert, leaf_v = jax.device_get(
-                (ad2, asid, aoff, ast, cert, leaf_v))
-            for row, i in enumerate(idxs):
-                stats = SearchStats(
-                    envelopes_total=n_comb, lb_computations=nblk,
-                    leaves_visited=int(leaf_v[row]),
-                    exact_from_approx=bool(cert[row]),
-                    envelopes_checked=int(ast[row, 1]),
-                    true_dist_computations=int(ast[row, 2]),
-                    dtw_lb_keogh=int(ast[row, 3]),
-                    dtw_full=int(ast[row, 4]))
-                results[i] = self._knn_result_rows(
-                    qs[i], spec, ad2[row], asid[row], aoff[row], stats)
+            for sub, queries, b in self._padded_batches(qs, idxs):
+                nseg, qstack, dlo, dhi, qb, qh = self._stack_prepared(
+                    queries, spec)
+                (ad2, asid, aoff), ast, cert, leaf_v, _, _, _, nblk = \
+                    self._device_approx_stage(qstack, dlo, dhi, qb, qh,
+                                              nseg, k, spec)
+                ad2, asid, aoff, ast, cert, leaf_v = jax.device_get(
+                    (ad2, asid, aoff, ast, cert, leaf_v))
+                for row, i in enumerate(sub):
+                    stats = SearchStats(
+                        envelopes_total=n_comb, lb_computations=nblk,
+                        leaves_visited=int(leaf_v[row]),
+                        exact_from_approx=bool(cert[row]),
+                        envelopes_checked=int(ast[row, 1]),
+                        true_dist_computations=int(ast[row, 2]),
+                        dtw_lb_keogh=int(ast[row, 3]),
+                        dtw_full=int(ast[row, 4]))
+                    results[i] = self._knn_result_rows(
+                        qs[i], spec, ad2[row], asid[row], aoff[row],
+                        stats)
         return results
 
     def _local_range_device(self, qs, spec: QuerySpec):
@@ -714,74 +762,80 @@ class UlisseEngine:
         the chunks before `ovf`, so the union is exact with no dedup
         (DESIGN.md §9).
         """
+        results: List[Optional[SearchResult]] = [None] * len(qs)
+        for qlen, idxs in self._group_by_len(qs):
+            for sub, queries, b in self._padded_batches(qs, idxs):
+                self._range_device_sub(qs, sub, queries, b, spec,
+                                       results)
+        return results
+
+    def _range_device_sub(self, qs, sub, queries, b: int,
+                          spec: QuerySpec, results) -> None:
+        """One padded same-length sub-batch of the device range scan."""
         index, p = self._index, self.params
         env = index.search_envelopes()
         n_comb = env.size
         eps2 = float(spec.eps) ** 2
-        results: List[Optional[SearchResult]] = [None] * len(qs)
-        for qlen, idxs in self._group_by_len(qs):
-            nseg, qstack, dlo, dhi, qb, qh = self._stack_prepared(
-                [qs[i] for i in idxs], spec)
-            b = len(idxs)
-            lbs = planner.env_lower_bounds_batch(
-                qb, qh, env, index.breakpoints, p.seg_len, nseg,
-                spec.use_paa_bounds)
-            n_pad = executor.pow2ceil(n_comb)
-            ssids, sanc, snm, slbs2, order = planner.device_range_pack(
-                env.series_id, env.anchor, env.n_master, lbs,
-                jnp.full((b,), eps2, jnp.float32), n_pad=n_pad)
-            (bd2, bsid, boff, cnt, ovf, st,
-             chunk) = executor.device_range_scan(
-                index.collection, ssids, sanc, snm, slbs2, qstack, dlo,
-                dhi, jnp.full((b,), eps2, jnp.float32),
-                capacity=spec.range_capacity, g=p.gamma + 1,
-                measure=spec.measure, r=spec.r, znorm=p.znorm,
-                chunk_size=spec.chunk_size)
-            # THE one host sync of the batch (overflow excepted)
-            bd2, bsid, boff, cnt, ovf, st = jax.device_get(
-                (bd2, bsid, boff, cnt, ovf, st))
-            n_chunks = n_pad // chunk
-            order_h = slbs2_h = None
-            for row, i in enumerate(idxs):
-                stats = SearchStats(
-                    envelopes_total=n_comb, lb_computations=n_comb,
-                    chunks_visited=int(st[row, 0]),
-                    envelopes_checked=int(st[row, 1]),
-                    true_dist_computations=int(st[row, 2]),
-                    dtw_lb_keogh=int(st[row, 3]),
-                    dtw_full=int(st[row, 4]))
-                c = int(cnt[row])
-                rows: list = []
-                if c:
-                    rows.append(np.stack(
-                        [bsid[row, :c].astype(np.float64),
-                         boff[row, :c].astype(np.float64),
-                         bd2[row, :c].astype(np.float64)], axis=1))
-                o = int(ovf[row])
-                if o < n_chunks:     # buffer overflowed: host tail
-                    stats.range_overflows += 1
-                    if order_h is None:        # lazy: overflow only
-                        order_h = np.asarray(order)
-                        slbs2_h = np.asarray(slbs2, np.float64)
-                    pq = planner.prepare_query(qs[i], p, spec.measure,
-                                               spec.r)
-                    sink = TopK(1)   # unused (collector path)
-                    pos = o * chunk
-                    while pos < n_pad:
-                        seg = slbs2_h[row, pos:pos + chunk]
-                        # packed rows are all true candidates
-                        # (lb2 <= eps2); +inf marks the padding tail
-                        keep = np.isfinite(seg)
-                        if not keep[0]:
-                            break
-                        executor.verify_envelopes(
-                            index, pq, order_h[row,
-                                               pos:pos + chunk][keep],
-                            sink, stats, eps2=eps2, collector=rows)
-                        stats.chunks_visited += 1
-                        pos += chunk
-                results[i] = self._range_result_rows(rows, stats)
-        return results
+        nseg, qstack, dlo, dhi, qb, qh = self._stack_prepared(
+            queries, spec)
+        lbs = planner.env_lower_bounds_batch(
+            qb, qh, env, index.breakpoints, p.seg_len, nseg,
+            spec.use_paa_bounds)
+        n_pad = executor.pow2ceil(n_comb)
+        ssids, sanc, snm, slbs2, order = planner.device_range_pack(
+            env.series_id, env.anchor, env.n_master, lbs,
+            jnp.full((b,), eps2, jnp.float32), n_pad=n_pad)
+        (bd2, bsid, boff, cnt, ovf, st,
+         chunk) = executor.device_range_scan(
+            index.collection, ssids, sanc, snm, slbs2, qstack, dlo,
+            dhi, jnp.full((b,), eps2, jnp.float32),
+            capacity=spec.range_capacity, g=p.gamma + 1,
+            measure=spec.measure, r=spec.r, znorm=p.znorm,
+            chunk_size=spec.chunk_size)
+        # THE one host sync of the batch (overflow excepted)
+        bd2, bsid, boff, cnt, ovf, st = jax.device_get(
+            (bd2, bsid, boff, cnt, ovf, st))
+        n_chunks = n_pad // chunk
+        order_h = slbs2_h = None
+        for row, i in enumerate(sub):
+            stats = SearchStats(
+                envelopes_total=n_comb, lb_computations=n_comb,
+                chunks_visited=int(st[row, 0]),
+                envelopes_checked=int(st[row, 1]),
+                true_dist_computations=int(st[row, 2]),
+                dtw_lb_keogh=int(st[row, 3]),
+                dtw_full=int(st[row, 4]))
+            c = int(cnt[row])
+            rows: list = []
+            if c:
+                rows.append(np.stack(
+                    [bsid[row, :c].astype(np.float64),
+                     boff[row, :c].astype(np.float64),
+                     bd2[row, :c].astype(np.float64)], axis=1))
+            o = int(ovf[row])
+            if o < n_chunks:     # buffer overflowed: host tail
+                stats.range_overflows += 1
+                if order_h is None:            # lazy: overflow only
+                    order_h = np.asarray(order)
+                    slbs2_h = np.asarray(slbs2, np.float64)
+                pq = planner.prepare_query(qs[i], p, spec.measure,
+                                           spec.r)
+                sink = TopK(1)   # unused (collector path)
+                pos = o * chunk
+                while pos < n_pad:
+                    seg = slbs2_h[row, pos:pos + chunk]
+                    # packed rows are all true candidates
+                    # (lb2 <= eps2); +inf marks the padding tail
+                    keep = np.isfinite(seg)
+                    if not keep[0]:
+                        break
+                    executor.verify_envelopes(
+                        index, pq,
+                        order_h[row, pos:pos + chunk][keep],
+                        sink, stats, eps2=eps2, collector=rows)
+                    stats.chunks_visited += 1
+                    pos += chunk
+            results[i] = self._range_result_rows(rows, stats)
 
     def _local_range(self, q, spec: QuerySpec) -> SearchResult:
         """All subsequences within eps of Q (Alg. 5 with bsf := eps)."""

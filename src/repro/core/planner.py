@@ -90,6 +90,48 @@ def prepare_query_batch(q: jnp.ndarray, seg_len: int, znorm: bool,
 
 
 # --------------------------------------------------------------------------
+# per-request admission planning (host, cheap — the serving tier's half)
+# --------------------------------------------------------------------------
+
+def length_bucket(qlen: int, cap: int) -> int:
+    """The pow2 length bucket (capped at `cap`, normally lmax).
+
+    This is the compiled-program routing key shared by the engine's
+    distributed batch path and the serving tier's request queues: two
+    queries land in the same bucket iff they can share one padded
+    device program, so coalescing by bucket is coalescing by program.
+    """
+    return min(1 << max(qlen - 1, 0).bit_length(), cap)
+
+
+def admit_query(q, p: EnvelopeParams) -> Tuple[np.ndarray, int]:
+    """Admission-time planning for one request: validate + route.
+
+    Everything that can be decided per request WITHOUT touching the
+    index or a device happens here, on the submitting thread — dtype
+    coercion, shape/finiteness checks, the length-range check, and the
+    pow2 bucket assignment.  Malformed requests are rejected at the
+    door with ValueError instead of poisoning a whole dispatched batch;
+    execution (device, batched, per bucket) never sees them.
+
+    Returns (query as float32 ndarray, bucket).
+    """
+    arr = np.asarray(q, np.float32)
+    if arr.ndim != 1:
+        raise ValueError(
+            f"a request is one 1-D query (got shape {arr.shape}); "
+            "submit batch members individually — the serving tier does "
+            "the batching")
+    if arr.size == 0 or not np.all(np.isfinite(arr)):
+        raise ValueError("query values must be finite and non-empty")
+    if not (p.lmin <= arr.size <= p.lmax):
+        raise ValueError(
+            f"query length {arr.size} outside the index's "
+            f"[{p.lmin}, {p.lmax}]")
+    return arr, length_bucket(arr.size, p.lmax)
+
+
+# --------------------------------------------------------------------------
 # jitted lower-bound kernels
 # --------------------------------------------------------------------------
 

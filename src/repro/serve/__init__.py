@@ -1,0 +1,8 @@
+"""repro.serve: async serving tier with length-bucket dynamic batching
+under live ingestion (DESIGN.md §11)."""
+from repro.serve.metrics import ServeMetrics
+from repro.serve.server import (AdmissionError, ServeConfig,
+                                ServerClosed, Ticket, UlisseServer)
+
+__all__ = ["AdmissionError", "ServeConfig", "ServeMetrics",
+           "ServerClosed", "Ticket", "UlisseServer"]

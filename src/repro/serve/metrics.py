@@ -1,0 +1,143 @@
+"""Serving metrics: per-bucket throughput, batch fill, queue wait and
+end-to-end latency, surfaced like `SearchStats`.
+
+The dispatcher thread is the only writer on the hot path, but
+`snapshot()` may be called from any thread (benches poll it while
+clients are in flight), so every mutation takes the (uncontended)
+metrics lock.  Latency and queue-wait samples live in bounded deques —
+a long-running server must not grow O(requests) host state just to
+report a p99.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import Counter, deque
+from typing import Dict, List
+
+import numpy as np
+
+MAX_SAMPLES = 65536          # per-bucket latency/wait sample window
+
+
+def _pctiles_ms(samples: List[float]) -> Dict[str, float]:
+    """{p50, p95, p99} in milliseconds (zeros when empty)."""
+    if not samples:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    arr = np.asarray(samples, np.float64) * 1e3
+    p50, p95, p99 = np.percentile(arr, (50.0, 95.0, 99.0))
+    return {"p50": round(float(p50), 3), "p95": round(float(p95), 3),
+            "p99": round(float(p99), 3)}
+
+
+class _BucketMetrics:
+    __slots__ = ("admitted", "rejected", "completed", "failed",
+                 "dispatches", "fill_hist", "queue_wait", "latency")
+
+    def __init__(self):
+        self.admitted = 0
+        self.rejected = 0        # shed by admission control
+        self.completed = 0
+        self.failed = 0          # dispatch raised; tickets carry the error
+        self.dispatches = 0
+        self.fill_hist = Counter()           # batch fill -> dispatches
+        self.queue_wait = deque(maxlen=MAX_SAMPLES)   # submit -> dispatch
+        self.latency = deque(maxlen=MAX_SAMPLES)      # submit -> response
+
+    def as_dict(self, elapsed: float) -> dict:
+        fills = sorted(self.fill_hist.items())
+        total_fill = sum(f * c for f, c in fills)
+        return {
+            "admitted": self.admitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "failed": self.failed,
+            "dispatches": self.dispatches,
+            "qps": round(self.completed / max(elapsed, 1e-9), 2),
+            "mean_fill": round(total_fill / max(self.dispatches, 1), 3),
+            "fill_hist": {int(f): int(c) for f, c in fills},
+            "queue_wait_ms": _pctiles_ms(list(self.queue_wait)),
+            "latency_ms": _pctiles_ms(list(self.latency)),
+        }
+
+
+class ServeMetrics:
+    """Aggregated serving counters, exportable as one dict."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._buckets: Dict[int, _BucketMetrics] = {}
+        self._t0 = time.perf_counter()
+
+    def reset(self) -> None:
+        """Restart the measurement window (benches call this after
+        warmup so steady-state qps is not diluted by compile time)."""
+        with self._lock:
+            self._buckets = {}
+            self._t0 = time.perf_counter()
+
+    def _bucket(self, bucket: int) -> _BucketMetrics:
+        bm = self._buckets.get(bucket)
+        if bm is None:
+            bm = self._buckets[bucket] = _BucketMetrics()
+        return bm
+
+    def record_admit(self, bucket: int) -> None:
+        with self._lock:
+            self._bucket(bucket).admitted += 1
+
+    def record_reject(self, bucket: int) -> None:
+        with self._lock:
+            self._bucket(bucket).rejected += 1
+
+    def record_dispatch(self, bucket: int, fill: int,
+                        waits: List[float]) -> None:
+        with self._lock:
+            bm = self._bucket(bucket)
+            bm.dispatches += 1
+            bm.fill_hist[fill] += 1
+            bm.queue_wait.extend(waits)
+
+    def record_done(self, bucket: int, latencies: List[float]) -> None:
+        with self._lock:
+            bm = self._bucket(bucket)
+            bm.completed += len(latencies)
+            bm.latency.extend(latencies)
+
+    def record_failed(self, bucket: int, n: int) -> None:
+        with self._lock:
+            self._bucket(bucket).failed += n
+
+    def snapshot(self) -> dict:
+        """One nested dict: per-bucket rows + a `total` fold — the
+        serving analogue of SearchStats, consumed by benches, the
+        example, and tests."""
+        with self._lock:
+            elapsed = time.perf_counter() - self._t0
+            buckets = {b: bm.as_dict(elapsed)
+                       for b, bm in sorted(self._buckets.items())}
+            all_lat: List[float] = []
+            all_wait: List[float] = []
+            for bm in self._buckets.values():
+                all_lat.extend(bm.latency)
+                all_wait.extend(bm.queue_wait)
+            completed = sum(bm.completed
+                            for bm in self._buckets.values())
+            dispatches = sum(bm.dispatches
+                             for bm in self._buckets.values())
+            total = {
+                "admitted": sum(bm.admitted
+                                for bm in self._buckets.values()),
+                "completed": completed,
+                "rejected": sum(bm.rejected
+                                for bm in self._buckets.values()),
+                "failed": sum(bm.failed
+                              for bm in self._buckets.values()),
+                "dispatches": dispatches,
+                "qps": round(completed / max(elapsed, 1e-9), 2),
+                "mean_fill": round(completed / max(dispatches, 1), 3),
+                "queue_wait_ms": _pctiles_ms(all_wait),
+                "latency_ms": _pctiles_ms(all_lat),
+            }
+        return {"elapsed_s": round(elapsed, 3), "total": total,
+                "buckets": buckets}

@@ -1,0 +1,405 @@
+"""`UlisseServer`: the asynchronous serving tier in front of one
+`UlisseEngine` (DESIGN.md §11).
+
+The engine's whole design — pow2 length buckets, padded batch
+programs, one host sync per same-length batch — is built for batching;
+this module is what exploits it under load:
+
+  * **Length-bucket dynamic batching.**  `submit()` runs the
+    per-request half of the planner split (`planner.admit_query`:
+    validation + pow2 bucket routing, host, cheap, on the client
+    thread) and enqueues into that bucket's queue.  The dispatcher
+    holds a bucket for `window_ms` (or until it fills to `max_batch`),
+    then dispatches the coalesced batch as ONE `engine.search` call —
+    the execution half: device, batched, per bucket.
+  * **Admission control.**  Total queued requests are bounded by
+    `max_pending`; a submit over the bound is shed immediately with a
+    typed `AdmissionError` (backpressure the caller can act on)
+    instead of growing an unbounded queue.
+  * **Writer lane.**  `append()`/`compact()` (and `warmup()`) enqueue
+    writer ops that the dispatcher applies BETWEEN dispatches, on the
+    same thread that runs queries.  The engine's index reference is
+    therefore only ever swapped when no scan is in flight: every query
+    batch runs against one consistent index snapshot, and a compact
+    can never race a scan.  Responses carry the snapshot version they
+    executed under (`Ticket.snapshot`).
+  * **Metrics.**  Per-bucket qps, batch-fill histogram, queue wait and
+    p50/p95/p99 end-to-end latency, exported as a dict
+    (`server.metrics.snapshot()`) — the serving analogue of
+    `SearchStats`.
+
+Typical use::
+
+    server = UlisseServer(engine, QuerySpec(k=5),
+                          ServeConfig(window_ms=2.0, max_batch=8))
+    server.warmup([96, 128, 160])
+    res = server.search(q)                   # blocking convenience
+    t = server.submit(q); ...; res = t.result()
+    server.append(new_series).result()       # via the writer lane
+    server.close()
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Deque, Dict, Optional, Sequence
+
+from repro.core import planner
+from repro.core.engine import QuerySpec, UlisseEngine
+from repro.serve.metrics import ServeMetrics
+
+
+class AdmissionError(RuntimeError):
+    """The serving queue is full: the request was shed, not queued.
+
+    Carries the queue state so callers can implement retry/backoff.
+    """
+
+    def __init__(self, msg: str, *, pending: int, max_pending: int,
+                 bucket: Optional[int] = None):
+        super().__init__(msg)
+        self.pending = pending
+        self.max_pending = max_pending
+        self.bucket = bucket
+
+
+class ServerClosed(RuntimeError):
+    """The server no longer accepts work (closed or closing)."""
+
+
+class Ticket:
+    """Completion handle for one admitted request or writer op.
+
+    `snapshot` is the index version the work executed under (writer
+    ops bump it); set at dispatch, valid once `done()`.
+    """
+
+    __slots__ = ("bucket", "snapshot", "t_submit", "_event", "_value",
+                 "_error")
+
+    def __init__(self, bucket: Optional[int] = None):
+        self.bucket = bucket
+        self.snapshot: Optional[int] = None
+        self.t_submit = 0.0
+        self._event = threading.Event()
+        self._value = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        """Block until the response is ready; re-raises the dispatch
+        error if the request failed."""
+        if not self._event.wait(timeout):
+            raise TimeoutError("request still pending")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    def _complete(self, value) -> None:
+        self._value = value
+        self._event.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self._event.set()
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving knobs.
+
+    window_ms:   how long a non-full bucket is held before dispatch —
+                 the latency the slowest request of a batch donates to
+                 coalescing (0 disables holding: dispatch whatever is
+                 queued the moment the dispatcher is free).
+    max_batch:   requests coalesced into one dispatch.  At or below
+                 the engine's own `max_batch` a dispatch is exactly one
+                 padded device program per exact length present.
+    max_pending: admission bound on TOTAL queued (not yet dispatched)
+                 requests across buckets; submits beyond it raise
+                 AdmissionError.
+    """
+
+    window_ms: float = 2.0
+    max_batch: int = 8
+    max_pending: int = 256
+
+    def __post_init__(self):
+        if self.window_ms < 0:
+            raise ValueError("window_ms must be >= 0")
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.max_pending < 1:
+            raise ValueError("max_pending must be >= 1")
+
+
+class _Request:
+    __slots__ = ("q", "ticket")
+
+    def __init__(self, q, ticket: Ticket):
+        self.q = q
+        self.ticket = ticket
+
+
+class _WriterOp:
+    __slots__ = ("kind", "payload", "ticket")
+
+    def __init__(self, kind: str, payload, ticket: Ticket):
+        self.kind = kind
+        self.payload = payload
+        self.ticket = ticket
+
+
+class UlisseServer:
+    """Dynamic-batching request server over one `UlisseEngine`."""
+
+    def __init__(self, engine: UlisseEngine,
+                 spec: QuerySpec = QuerySpec(),
+                 config: ServeConfig = ServeConfig(),
+                 start: bool = True):
+        self.engine = engine
+        self.spec = spec
+        self.config = config
+        self.metrics = ServeMetrics()
+        self._cond = threading.Condition()
+        self._buckets: Dict[int, Deque[_Request]] = {}
+        self._writer: Deque[_WriterOp] = deque()
+        self._pending = 0
+        self._version = 0
+        self._closed = False
+        self._drain = True
+        self._thread: Optional[threading.Thread] = None
+        if start:
+            self.start()
+
+    # -- lifecycle -----------------------------------------------------
+
+    def start(self) -> None:
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._thread = threading.Thread(target=self._loop,
+                                        name="ulisse-serve-dispatch",
+                                        daemon=True)
+        self._thread.start()
+
+    def close(self, drain: bool = True,
+              timeout: Optional[float] = None) -> None:
+        """Stop accepting work.  `drain=True` answers everything
+        already queued (windows are cut short); `drain=False` fails
+        queued tickets with ServerClosed."""
+        with self._cond:
+            self._closed = True
+            self._drain = drain
+            if not drain:
+                for dq in self._buckets.values():
+                    while dq:
+                        dq.popleft().ticket._fail(
+                            ServerClosed("server closed before "
+                                         "dispatch"))
+                while self._writer:
+                    self._writer.popleft().ticket._fail(
+                        ServerClosed("server closed before apply"))
+                self._pending = 0
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def __enter__(self) -> "UlisseServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))
+
+    @property
+    def version(self) -> int:
+        """Current index snapshot version (writer ops bump it)."""
+        return self._version
+
+    @property
+    def pending(self) -> int:
+        """Requests queued and not yet dispatched."""
+        with self._cond:
+            return self._pending
+
+    # -- client surface ------------------------------------------------
+
+    def submit(self, q) -> Ticket:
+        """Admit one query: validate + route (planner.admit_query, on
+        this thread), enqueue into its length bucket.  Raises
+        ValueError (malformed request), AdmissionError (queue full) or
+        ServerClosed."""
+        arr, bucket = planner.admit_query(q, self.engine.params)
+        ticket = Ticket(bucket)
+        with self._cond:
+            if self._closed:
+                raise ServerClosed("server is closed")
+            if self._pending >= self.config.max_pending:
+                self.metrics.record_reject(bucket)
+                raise AdmissionError(
+                    f"queue full ({self._pending} pending >= "
+                    f"max_pending={self.config.max_pending}); retry "
+                    "with backoff", pending=self._pending,
+                    max_pending=self.config.max_pending, bucket=bucket)
+            ticket.t_submit = time.perf_counter()
+            self._buckets.setdefault(bucket, deque()).append(
+                _Request(arr, ticket))
+            self._pending += 1
+            self.metrics.record_admit(bucket)
+            self._cond.notify()
+        return ticket
+
+    def search(self, q, timeout: Optional[float] = None):
+        """Blocking convenience: submit + wait for the SearchResult."""
+        return self.submit(q).result(timeout)
+
+    def append(self, series) -> Ticket:
+        """Ingest series through the writer lane: applied between
+        dispatches, bumps the snapshot version.  The ticket completes
+        once the series are searchable."""
+        return self._submit_writer("append", series)
+
+    def compact(self) -> Ticket:
+        """Merge the ingestion delta between dispatches (never racing
+        an in-flight scan)."""
+        return self._submit_writer("compact", None)
+
+    def warmup(self, lengths: Sequence[int],
+               batch_sizes: Optional[Sequence[int]] = None,
+               timeout: Optional[float] = None) -> int:
+        """Pre-trace the bucket programs for a traffic mix (engine
+        warmup routed through the writer lane, so all engine use stays
+        on the dispatcher thread).  Blocks; returns shapes traced.
+
+        The default batch sizes are every power of two up to
+        `max_batch` — dispatch fills pad to their pow2 bucket, so this
+        covers EVERY fill the dispatcher can produce: after warmup no
+        request ever waits on a retrace."""
+        if batch_sizes is None:
+            sizes, b = {self.config.max_batch}, 1
+            while b < self.config.max_batch:
+                sizes.add(b)
+                b *= 2
+            batch_sizes = sorted(sizes)
+        op = self._submit_writer("warmup", (tuple(lengths),
+                                            tuple(batch_sizes)))
+        return op.result(timeout)
+
+    def _submit_writer(self, kind: str, payload) -> Ticket:
+        ticket = Ticket()
+        with self._cond:
+            if self._closed:
+                raise ServerClosed("server is closed")
+            self._writer.append(_WriterOp(kind, payload, ticket))
+            self._cond.notify()
+        return ticket
+
+    # -- dispatcher ----------------------------------------------------
+
+    def _loop(self) -> None:
+        window = self.config.window_ms / 1e3
+        while True:
+            op = batch = bucket = None
+            with self._cond:
+                while True:
+                    if self._writer:
+                        op = self._writer.popleft()
+                        break
+                    bucket, batch = self._pick_ripe_locked(window)
+                    if batch is not None:
+                        break
+                    if self._closed:
+                        return       # drained (or flushed by close)
+                    self._cond.wait(self._timeout_locked(window))
+            if op is not None:
+                self._apply_writer(op)
+            else:
+                self._dispatch(bucket, batch)
+
+    def _pick_ripe_locked(self, window: float):
+        """The ripest bucket's batch, or (None, None).
+
+        Ripe = full to max_batch, or its oldest request has waited out
+        the window (always, once closing).  Among ripe buckets the one
+        with the oldest head dispatches first (FIFO across buckets
+        prevents a hot bucket starving a cold one)."""
+        now = time.perf_counter()
+        best, best_t = None, None
+        for bucket, dq in self._buckets.items():
+            if not dq:
+                continue
+            head_t = dq[0].ticket.t_submit
+            ripe = (len(dq) >= self.config.max_batch
+                    or now - head_t >= window or self._closed)
+            if ripe and (best_t is None or head_t < best_t):
+                best, best_t = bucket, head_t
+        if best is None:
+            return None, None
+        dq = self._buckets[best]
+        batch = [dq.popleft()
+                 for _ in range(min(len(dq), self.config.max_batch))]
+        self._pending -= len(batch)
+        return best, batch
+
+    def _timeout_locked(self, window: float) -> Optional[float]:
+        """Sleep until the earliest bucket deadline (None = until
+        notified)."""
+        deadline = None
+        for dq in self._buckets.values():
+            if dq:
+                t = dq[0].ticket.t_submit + window
+                deadline = t if deadline is None else min(deadline, t)
+        if deadline is None:
+            return None
+        return max(deadline - time.perf_counter(), 1e-4)
+
+    def _dispatch(self, bucket: int, batch) -> None:
+        t0 = time.perf_counter()
+        self.metrics.record_dispatch(
+            bucket, fill=len(batch),
+            waits=[t0 - r.ticket.t_submit for r in batch])
+        version = self._version
+        try:
+            # ONE engine call: per exact length present this is one
+            # padded device program with one host sync (the engine's
+            # pow2 sub-batching keeps compile count bounded across
+            # variable fills)
+            results = self.engine.search([r.q for r in batch],
+                                         self.spec)
+        except Exception as e:     # noqa: BLE001 — fail the tickets,
+            for r in batch:        # keep serving
+                r.ticket._fail(e)
+            self.metrics.record_failed(bucket, len(batch))
+            return
+        t1 = time.perf_counter()
+        for r, res in zip(batch, results):
+            r.ticket.snapshot = version
+            r.ticket._complete(res)
+        self.metrics.record_done(
+            bucket, [t1 - r.ticket.t_submit for r in batch])
+
+    def _apply_writer(self, op: _WriterOp) -> None:
+        """Index mutation between dispatches: the only place the
+        engine's snapshot is swapped, on the only thread that runs
+        scans — a batch can never observe a half-applied index."""
+        try:
+            if op.kind == "append":
+                self.engine.append(op.payload)
+                self._version += 1
+                op.ticket.snapshot = self._version
+                op.ticket._complete(self._version)
+            elif op.kind == "compact":
+                self.engine.compact()
+                self._version += 1
+                op.ticket.snapshot = self._version
+                op.ticket._complete(self._version)
+            else:                  # warmup
+                lengths, batch_sizes = op.payload
+                traced = self.engine.warmup(lengths, batch_sizes,
+                                            spec=self.spec)
+                op.ticket._complete(traced)
+        except Exception as e:     # noqa: BLE001
+            op.ticket._fail(e)

@@ -1,0 +1,204 @@
+"""repro.serve: the dynamic-batching serving tier (DESIGN.md §11).
+
+The load-bearing claim is that coalescing never changes an answer:
+whatever the dispatcher batches together, every response is bit-equal
+to a serial `engine.search` on the same snapshot.  Admission control,
+warmup pre-tracing, and the writer lane (append/compact between
+dispatches) are exercised against that same exactness bar.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Collection, EnvelopeParams, QuerySpec,
+                        UlisseEngine)
+from repro.core.search import brute_force_knn
+from repro.serve import (AdmissionError, ServeConfig, ServerClosed,
+                         UlisseServer)
+
+PARAMS = dict(lmin=64, lmax=128, seg_len=16, card=64)
+LENGTHS = [64, 96, 128]       # buckets 64, 128, 128: one dispatch may
+                              # mix exact lengths inside bucket 128
+
+
+@pytest.fixture(scope="module")
+def engine(walk_collection):
+    coll = Collection.from_array(walk_collection)
+    p = EnvelopeParams(gamma=8, znorm=True, **PARAMS)
+    return UlisseEngine.from_collection(coll, p, max_batch=4)
+
+
+def _queries(data, rng, n=6):
+    qs = []
+    for i in range(n):
+        qlen = LENGTHS[i % len(LENGTHS)]
+        s = int(rng.integers(0, data.shape[0]))
+        o = int(rng.integers(0, data.shape[1] - qlen + 1))
+        qs.append(data[s, o:o + qlen]
+                  + rng.normal(size=qlen).astype(np.float32) * 0.05)
+    return qs
+
+
+def _assert_same(res, ref):
+    assert np.array_equal(res.dists, ref.dists)
+    assert np.array_equal(res.series, ref.series)
+    assert np.array_equal(res.offsets, ref.offsets)
+
+
+@pytest.mark.parametrize("spec", [
+    QuerySpec(k=3),
+    QuerySpec(k=3, measure="dtw", r=5),
+    QuerySpec(eps=5.0),
+    QuerySpec(eps=5.0, measure="dtw", r=5),
+], ids=["ed_knn", "dtw_knn", "ed_range", "dtw_range"])
+def test_coalesced_bit_equal_vs_serial(engine, walk_collection, rng,
+                                       spec):
+    """A burst of mixed-length requests, coalesced into padded bucket
+    dispatches, answers bit-equal to one-at-a-time engine.search —
+    across ED/DTW x kNN/range."""
+    qs = _queries(walk_collection, rng)
+    refs = [engine.search(q, spec) for q in qs]
+    server = UlisseServer(engine, spec,
+                          ServeConfig(window_ms=50.0, max_batch=4))
+    tickets = [server.submit(q) for q in qs]      # burst: forces fills
+    results = [t.result(timeout=300) for t in tickets]
+    server.close()
+    for res, ref in zip(results, refs):
+        _assert_same(res, ref)
+
+    m = server.metrics.snapshot()
+    assert m["total"]["admitted"] == len(qs)
+    assert m["total"]["completed"] == len(qs)
+    assert m["total"]["failed"] == 0
+    # the burst must actually have coalesced (fill >= 2 somewhere)
+    fills = [f for bm in m["buckets"].values()
+             for f in bm["fill_hist"]]
+    assert max(fills) >= 2
+
+
+def test_admission_control(engine, walk_collection, rng):
+    """Submits beyond max_pending shed with a typed AdmissionError;
+    close(drain=True) still answers everything admitted."""
+    qs = _queries(walk_collection, rng, n=3)
+    refs = [engine.search(q, QuerySpec(k=3)) for q in qs]
+    # a window too long to expire and a batch too large to fill: the
+    # queue can only move when close() cuts the window short
+    server = UlisseServer(engine, QuerySpec(k=3),
+                          ServeConfig(window_ms=60_000.0, max_batch=8,
+                                      max_pending=2))
+    t0 = server.submit(qs[0])
+    t1 = server.submit(qs[1])
+    assert server.pending == 2
+    with pytest.raises(AdmissionError) as exc:
+        server.submit(qs[2])
+    assert exc.value.pending == 2
+    assert exc.value.max_pending == 2
+    assert exc.value.bucket in (64, 128)
+    m = server.metrics.snapshot()
+    assert m["total"]["rejected"] == 1
+
+    server.close(drain=True)          # answers the two admitted
+    _assert_same(t0.result(0), refs[0])
+    _assert_same(t1.result(0), refs[1])
+    with pytest.raises(ServerClosed):
+        server.submit(qs[0])
+
+
+def test_close_without_drain_fails_queued(engine, walk_collection, rng):
+    q = _queries(walk_collection, rng, n=1)[0]
+    server = UlisseServer(engine, QuerySpec(k=3),
+                          ServeConfig(window_ms=60_000.0, max_batch=8))
+    t = server.submit(q)
+    server.close(drain=False)
+    with pytest.raises(ServerClosed):
+        t.result(0)
+
+
+def test_admission_validates_on_client_thread(engine):
+    server = UlisseServer(engine, QuerySpec(k=3),
+                          ServeConfig(window_ms=1.0, max_batch=4))
+    with pytest.raises(ValueError):
+        server.submit(np.zeros((2, 64), np.float32))     # not 1-D
+    bad = np.ones(64, np.float32)
+    bad[3] = np.nan
+    with pytest.raises(ValueError):
+        server.submit(bad)                               # non-finite
+    with pytest.raises(ValueError):
+        server.submit(np.ones(32, np.float32))           # < lmin
+    with pytest.raises(ValueError):
+        server.submit(np.ones(200, np.float32))          # > lmax
+    server.close()
+
+
+def test_warmup_removes_first_request_retrace(engine, walk_collection):
+    """After warmup() every (bucket, pow2 fill) program is traced, so
+    the first real request pays no compile.  Length 104 is used by no
+    other test in this module: its programs are cold until warmup."""
+    qlen = 104
+    q = walk_collection[1, 11:11 + qlen].copy()
+    server = UlisseServer(engine, QuerySpec(k=3),
+                          ServeConfig(window_ms=0.0, max_batch=4))
+    t0 = time.perf_counter()
+    traced = server.warmup([qlen])
+    dt_warm = time.perf_counter() - t0
+    assert traced == 3                   # fills 1, 2, 4
+    t0 = time.perf_counter()
+    server.search(q, timeout=300)
+    dt_first = time.perf_counter() - t0
+    server.close()
+    # the compile cost lives in warmup, not the first request: even on
+    # a noisy runner tracing is an order of magnitude above a served
+    # query, so a 2x margin is conservative
+    assert dt_first < dt_warm / 2
+
+
+def test_append_compact_while_querying(walk_collection, rng):
+    """Live ingestion under concurrent query load: every answer is
+    exact against brute force over the snapshot it reports, and writer
+    ops bump the version monotonically."""
+    p = EnvelopeParams(gamma=8, znorm=True, **PARAMS)
+    engine = UlisseEngine.from_collection(
+        Collection.from_array(walk_collection), p, max_batch=4)
+    grown = np.cumsum(
+        np.random.default_rng(77).normal(size=(8, 192)),
+        axis=-1).astype(np.float32)
+    datasets = {0: walk_collection}        # snapshot -> admitted set
+    after = np.concatenate([walk_collection, grown])
+    datasets[1] = datasets[2] = after      # compact keeps the content
+
+    server = UlisseServer(engine, QuerySpec(k=3),
+                          ServeConfig(window_ms=1.0, max_batch=4))
+    server.warmup(LENGTHS)
+    qs = _queries(walk_collection, rng, n=18)
+    out = [None] * len(qs)
+
+    def client(cid):
+        for i in range(cid, len(qs), 3):
+            t = server.submit(qs[i])
+            out[i] = (t, t.result(timeout=300))
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(3)]
+    for t in threads:
+        t.start()
+    time.sleep(0.03)
+    append_ticket = server.append(grown)       # mid-traffic
+    assert append_ticket.result(timeout=300) == 1
+    compact_ticket = server.compact()
+    assert compact_ticket.result(timeout=300) == 2
+    for t in threads:
+        t.join()
+    assert server.version == 2
+    server.close()
+
+    snapshots = [ticket.snapshot for ticket, _ in out]
+    assert all(s in datasets for s in snapshots)
+    for q, (ticket, res) in zip(qs, out):
+        coll = Collection.from_array(datasets[ticket.snapshot])
+        ref = brute_force_knn(coll, q, k=3, znorm=True)
+        # squared distances: the f32 oracle's cancellation noise lives
+        # on d^2 (the engine's f64-polished side is the accurate one)
+        np.testing.assert_allclose(res.dists ** 2, ref.dists ** 2,
+                                   atol=1e-3, rtol=1e-3)
