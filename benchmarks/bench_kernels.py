@@ -470,7 +470,70 @@ def bench_storage():
         shutil.rmtree(root, ignore_errors=True)
 
 
+def bench_obs_overhead():
+    """The tracer's disabled-path contract (DESIGN.md §12): engine and
+    server call ``span()`` unconditionally, so the disabled call must
+    cost <=1% of a B=1 device exact-scan query.  Measures the
+    nanosecond cost of a disabled span directly (tight loop), bounds
+    the per-query instrumentation budget at a generous span count, and
+    RAISES when the budget exceeds 1% of the measured query time — CI
+    runs this as the obs acceptance gate, not just a trend line."""
+    import time
+    from repro import obs
+    from repro.core import Collection, EnvelopeParams, QuerySpec, \
+        UlisseEngine
+
+    tracer = obs.get_tracer()
+    assert not tracer.enabled, "overhead bench needs the default-off tracer"
+
+    # disabled span cost: one attribute check + shared null singleton
+    span = tracer.span
+    n_calls = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n_calls):
+        with span("x"):
+            pass
+    t_span = (time.perf_counter() - t0) / n_calls
+    emit("obs_span_disabled", t_span, f"ns={t_span * 1e9:.1f}")
+
+    # the per-query exact-scan time the budget is measured against —
+    # same workload shape as bench_exact_scan's device B=1 row
+    ns, n = 64, 256
+    data = np.cumsum(RNG.normal(size=(ns, n)), -1).astype(np.float32)
+    p = EnvelopeParams(lmin=96, lmax=160, gamma=16, seg_len=16,
+                       znorm=True)
+    engine = UlisseEngine.from_collection(Collection.from_array(data), p)
+    q = data[0, 7:7 + 128] + RNG.normal(size=128).astype(np.float32) * .05
+    spec = QuerySpec(k=10, approx_first=False, scan_backend="device")
+    engine.search(q, spec)                   # warm compile caches
+    samples = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        engine.search(q, spec)
+        samples.append(time.perf_counter() - t0)
+    t_query = float(np.median(samples))
+    emit("obs_exact_scan_query", t_query, f"qps={1 / t_query:.1f}")
+
+    # budget: a device query opens ~6 spans (root + prepare/approx/
+    # pack/scan/merge); 64 is a >10x safety margin covering serving
+    # spans, attribute kwargs, and future instrumentation growth
+    spans_per_query = 64
+    overhead = spans_per_query * t_span / t_query
+    print(f"# obs_overhead_pct = {overhead * 100:.4f}% "
+          f"({spans_per_query} spans x {t_span * 1e9:.1f}ns / "
+          f"{t_query * 1e3:.2f}ms query)", flush=True)
+    from benchmarks.common import RESULTS
+    RESULTS["obs_overhead_budget"] = {
+        "ratio": round(1.0 - overhead, 6),   # gated as a ratio: drops
+        "overhead_pct": round(overhead * 100, 4)}   # if overhead grows
+    if overhead > 0.01:
+        raise AssertionError(
+            f"disabled-tracer overhead {overhead * 100:.2f}% exceeds "
+            f"the 1% budget ({t_span * 1e9:.0f}ns/span x "
+            f"{spans_per_query} spans vs {t_query * 1e3:.2f}ms query)")
+
+
 ALL = [bench_mindist, bench_batch_ed, bench_lb_keogh, bench_dtw_band,
        bench_envelope_build, bench_engine_batched, bench_exact_scan,
        bench_range_scan, bench_approx_batched, bench_distributed_scan,
-       bench_serving, bench_storage]
+       bench_serving, bench_storage, bench_obs_overhead]

@@ -88,7 +88,33 @@ PREFIX_TOL = [
     ("approx_batched_", 0.50),
     ("distributed_scan_speedup", 0.50),
     ("serving_", 0.50),             # thread-scheduling jitter on CI
+    ("obs_span_disabled", 0.60),    # ~100ns loop: timer-resolution noisy
+    ("obs_exact_scan_query", 0.50), # same workload as exact_scan_device
 ]
+
+TRAJECTORY_KEYS = ("sha", "timestamp", "backend", "devices", "results")
+
+
+def check_trajectory(doc: dict, path: str) -> int:
+    """The artifact contract run.py promises: every gated
+    BENCH_kernels.json carries a non-empty ``trajectory`` of complete
+    run records, so the uploaded artifact preserves perf history
+    instead of only the final overwrite.  Returns the failure count."""
+    traj = doc.get("trajectory")
+    if not traj:
+        print(f"FAIL {path}: trajectory is missing or empty — run.py "
+              "--json must append one record per gated run")
+        return 1
+    bad = 0
+    for i, rec in enumerate(traj):
+        missing = [k for k in TRAJECTORY_KEYS if k not in rec]
+        if missing:
+            print(f"FAIL {path}: trajectory[{i}] missing {missing}")
+            bad += 1
+    if not bad:
+        print(f"trajectory: {len(traj)} run record(s) in {path}, "
+              "all complete")
+    return bad
 
 
 def tolerance(name: str, default: float) -> float:
@@ -159,14 +185,14 @@ def main() -> int:
         print("calibration: baseline artifact carries no reference_us "
               "stamp — comparing raw qps")
 
+    failures = check_trajectory(fresh_doc, args.fresh)
     rows = list(compare(base_doc.get("results", {}),
                         fresh_doc.get("results", {}),
                         args.tol, scale))
     if not rows:
         print("check_regression: no overlapping sections — nothing "
               "to gate (fresh run produced disjoint benchmarks?)")
-        return 0
-    failures = 0
+        return 1 if failures else 0
     for name, kind, base, new, drop, tol, failed in rows:
         mark = "FAIL" if failed else "ok"
         failures += failed

@@ -50,7 +50,18 @@ def main():
           f"({stats['index_bytes'] / 1e6:.2f} MB vs "
           f"{stats['raw_bytes'] / 1e6:.1f} MB raw)")
 
-    # 2. exact k-NN at three different lengths — one index, no rebuilds
+    # 2. exact k-NN at three different lengths — one index, no rebuilds.
+    #    every backend reports the same SearchStats schema, so the
+    #    per-query telemetry line below reads identically on the host
+    #    loops, the device pipeline, and the sharded scan (DESIGN §12)
+    def stats_line(st):
+        return (f"    stats: pruned {st.pruning_power:.0%} of "
+                f"{st.envelopes_total} envelopes "
+                f"({st.envelopes_pruned} cut mid-scan), chunks "
+                f"{st.chunks_visited}/{st.chunks_planned} "
+                f"scanned/planned, {st.true_dist_computations} true "
+                f"distances")
+
     rng = np.random.default_rng(1)
     for qlen in (160, 192, 256):
         src = rng.integers(0, 500)
@@ -60,16 +71,20 @@ def main():
         r = engine.search(q, QuerySpec(k=3))
         print(f"|Q|={qlen}: top-3 dists {np.round(r.dists, 3)} "
               f"(planted at series {src} offset {off}; found "
-              f"series {r.series[0]} offset {r.offsets[0]}; "
-              f"pruned {r.stats.pruning_power:.0%} of envelopes)")
+              f"series {r.series[0]} offset {r.offsets[0]})")
+        print(stats_line(r.stats))
 
     # 3. the same index under DTW, and an epsilon-range query
     q = data[7, 30:222].copy()
     rd = engine.search(q, QuerySpec(k=2, measure="dtw", r=19))
     print(f"DTW top-2: {np.round(rd.dists, 3)} "
-          f"(abandoned {rd.stats.abandoning_power:.0%} of DTW DPs)")
+          f"(LB_Keogh->full-DP funnel: {rd.stats.dtw_lb_keogh} -> "
+          f"{rd.stats.dtw_full}, abandoned "
+          f"{rd.stats.abandoning_power:.0%})")
+    print(stats_line(rd.stats))
     rr = engine.search(q, QuerySpec(eps=float(rd.dists[-1]) * 2))
     print(f"eps-range: {len(rr.dists)} hits")
+    print(stats_line(rr.stats))
 
     # 4. approximate search: a handful of leaf visits
     ra = engine.search(q, QuerySpec(k=3, mode="approx"))

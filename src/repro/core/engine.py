@@ -39,6 +39,7 @@ from repro.core import executor, planner
 from repro.core.executor import SearchResult, SearchStats, TopK
 from repro.core.index import UlisseIndex, build_index
 from repro.core.types import Collection, EnvelopeParams
+from repro.obs import span
 
 
 @dataclasses.dataclass(frozen=True)
@@ -410,11 +411,13 @@ class UlisseEngine:
 
     def _search_local(self, q, spec: QuerySpec) -> SearchResult:
         """Host-driven reference paths (scan_backend="host")."""
-        if spec.is_range:
-            return self._local_range(q, spec)
-        if spec.mode == "approx":
-            return self._local_approx(q, spec)
-        return self._local_exact(q, spec)
+        with span("query.host", qlen=len(q),
+                  shape="range" if spec.is_range else spec.mode):
+            if spec.is_range:
+                return self._local_range(q, spec)
+            if spec.mode == "approx":
+                return self._local_approx(q, spec)
+            return self._local_exact(q, spec)
 
     def _local_approx(self, q, spec: QuerySpec) -> SearchResult:
         pool, stats, _ = self._local_approx_impl(q, spec)
@@ -518,6 +521,7 @@ class UlisseEngine:
                                                     spec.use_paa_bounds)
         n = index.search_envelopes().size   # main ++ ingestion delta
         stats.lb_computations += n
+        stats.chunks_planned = -(-n // spec.chunk_size)
 
         pos = 0
         while pos < n:
@@ -527,10 +531,13 @@ class UlisseEngine:
                 break  # every remaining envelope is pruned
             end = min(pos + spec.chunk_size, n)
             sel = order[pos:end]
-            keep = (lbs_sorted[pos:end] ** 2) < pool.kth
-            keep &= np.isfinite(lbs_sorted[pos:end])
+            fin = np.isfinite(lbs_sorted[pos:end])
+            keep = fin & ((lbs_sorted[pos:end] ** 2) < pool.kth)
             if keep.any():
                 executor.verify_envelopes(index, pq, sel[keep], pool, stats)
+            # same convention as the device chunk step: envelopes cut by
+            # the bsf LB test inside a visited chunk count as pruned
+            stats.envelopes_pruned += int((fin & ~keep).sum())
             stats.chunks_visited += 1
             pos = end
         return pool.result(stats)
@@ -578,8 +585,9 @@ class UlisseEngine:
         derives the exactness certificate there too — nothing syncs.
 
         Returns (pool (d2, sid, off), stats, cert, leaf_v, comb_idx,
-        visited_chunks, chunk, nblk) — all device arrays but the static
-        ints.
+        visited_chunks, chunk, nblk, planned) — all device arrays but
+        the static ints (`planned` is the pack's chunk count, the
+        approx stage's share of `SearchStats.chunks_planned`).
         """
         index, p = self._index, self.params
         env = index.search_envelopes()
@@ -618,7 +626,7 @@ class UlisseEngine:
         cert = ((leaf_v >= nblk) | ~jnp.isfinite(next_lb)
                 | (next_lb.astype(jnp.float32) ** 2 >= kth2))
         return ((ad2, asid, aoff), ast, cert, leaf_v, comb_idx, visited,
-                chunk, nblk)
+                chunk, nblk, asids.shape[1] // chunk)
 
     def _knn_result_rows(self, q, spec: QuerySpec, d2, sid, off,
                          stats, data=None) -> SearchResult:
@@ -673,53 +681,79 @@ class UlisseEngine:
         n_comb = env.size
         for qlen, idxs in self._group_by_len(qs):
             for sub, queries, b in self._padded_batches(qs, idxs):
-                nseg, qstack, dlo, dhi, qb, qh = self._stack_prepared(
-                    queries, spec)
-                if spec.approx_first:
-                    (seed, ast, cert, leaf_v, comb_idx, visited, achunk,
-                     nblk) = self._device_approx_stage(
-                        qstack, dlo, dhi, qb, qh, nseg, k, spec)
-                else:
-                    seed = (jnp.full((b, k), jnp.inf, jnp.float32),
-                            jnp.full((b, k), -1, jnp.int32),
-                            jnp.full((b, k), -1, jnp.int32))
-                    ast = jnp.zeros((b, 5), jnp.int32)
-                    cert = jnp.zeros((b,), bool)
-                    leaf_v = jnp.zeros((b,), jnp.int32)
-                    comb_idx = jnp.full((b, 1), n_comb, jnp.int32)
-                    visited = jnp.zeros((b,), jnp.int32)
-                    achunk, nblk = 1, 0
-                lbs = planner.env_lower_bounds_batch(
-                    qb, qh, env, index.breakpoints, self.params.seg_len,
-                    nseg, spec.use_paa_bounds)
-                ssids, sanc, snm, slbs2, _ = planner.device_scan_pack(
-                    env.series_id, env.anchor, env.n_master, lbs,
-                    comb_idx, visited, chunk=achunk,
-                    n_pad=executor.pow2ceil(n_comb))
-                d2, sid, off, st = executor.device_exact_scan(
-                    index.collection, ssids, sanc, snm, slbs2, qstack,
-                    dlo, dhi, *seed, k=k, g=g, measure=spec.measure,
-                    r=spec.r, znorm=self.params.znorm,
-                    chunk_size=spec.chunk_size)
-                # THE one host sync of the batch
-                d2, sid, off, st, ast, cert, leaf_v = jax.device_get(
-                    (d2, sid, off, st, ast, cert, leaf_v))
-                for row, i in enumerate(sub):
-                    stats = SearchStats(
-                        envelopes_total=n_comb,
-                        lb_computations=n_comb
-                        + (nblk if spec.approx_first else 0),
-                        leaves_visited=int(leaf_v[row]),
-                        exact_from_approx=bool(cert[row]),
-                        chunks_visited=int(st[row, 0]),
-                        envelopes_checked=(int(ast[row, 1])
-                                           + int(st[row, 1])),
-                        true_dist_computations=(int(ast[row, 2])
-                                                + int(st[row, 2])),
-                        dtw_lb_keogh=int(ast[row, 3]) + int(st[row, 3]),
-                        dtw_full=int(ast[row, 4]) + int(st[row, 4]))
-                    results[i] = self._knn_result_rows(
-                        qs[i], spec, d2[row], sid[row], off[row], stats)
+                with span("query.exact_device", qlen=qlen, batch=b) as sp:
+                    with span("prepare"):
+                        (nseg, qstack, dlo, dhi, qb,
+                         qh) = self._stack_prepared(queries, spec)
+                    if spec.approx_first:
+                        with span("approx_pass"):
+                            (seed, ast, cert, leaf_v, comb_idx, visited,
+                             achunk, nblk,
+                             aplan) = self._device_approx_stage(
+                                qstack, dlo, dhi, qb, qh, nseg, k, spec)
+                    else:
+                        seed = (jnp.full((b, k), jnp.inf, jnp.float32),
+                                jnp.full((b, k), -1, jnp.int32),
+                                jnp.full((b, k), -1, jnp.int32))
+                        ast = jnp.zeros((b, executor.STATS_WIDTH),
+                                        jnp.int32)
+                        cert = jnp.zeros((b,), bool)
+                        leaf_v = jnp.zeros((b,), jnp.int32)
+                        comb_idx = jnp.full((b, 1), n_comb, jnp.int32)
+                        visited = jnp.zeros((b,), jnp.int32)
+                        achunk, nblk, aplan = 1, 0, 0
+                    with span("pack"):
+                        lbs = planner.env_lower_bounds_batch(
+                            qb, qh, env, index.breakpoints,
+                            self.params.seg_len, nseg,
+                            spec.use_paa_bounds)
+                        n_pad = executor.pow2ceil(n_comb)
+                        (ssids, sanc, snm, slbs2,
+                         _) = planner.device_scan_pack(
+                            env.series_id, env.anchor, env.n_master,
+                            lbs, comb_idx, visited, chunk=achunk,
+                            n_pad=n_pad)
+                    with span("device_scan"):
+                        d2, sid, off, st = executor.device_exact_scan(
+                            index.collection, ssids, sanc, snm, slbs2,
+                            qstack, dlo, dhi, *seed, k=k, g=g,
+                            measure=spec.measure, r=spec.r,
+                            znorm=self.params.znorm,
+                            chunk_size=spec.chunk_size)
+                        # THE one host sync of the batch
+                        (d2, sid, off, st, ast, cert,
+                         leaf_v) = jax.device_get(
+                            (d2, sid, off, st, ast, cert, leaf_v))
+                    # planned = the exact-scan pack's chunk count (the
+                    # approx stage's leaf plan is reported separately
+                    # via leaves_visited, mirroring chunks_visited
+                    # which counts scan chunks only)
+                    planned = n_pad // min(
+                        executor.pow2ceil(spec.chunk_size), n_pad)
+                    with span("merge"):
+                        for row, i in enumerate(sub):
+                            stats = SearchStats(
+                                envelopes_total=n_comb,
+                                lb_computations=n_comb
+                                + (nblk if spec.approx_first else 0),
+                                leaves_visited=int(leaf_v[row]),
+                                exact_from_approx=bool(cert[row]),
+                                chunks_visited=int(st[row, 0]),
+                                chunks_planned=planned,
+                                envelopes_checked=(int(ast[row, 1])
+                                                   + int(st[row, 1])),
+                                true_dist_computations=(
+                                    int(ast[row, 2]) + int(st[row, 2])),
+                                dtw_lb_keogh=(int(ast[row, 3])
+                                              + int(st[row, 3])),
+                                dtw_full=(int(ast[row, 4])
+                                          + int(st[row, 4])),
+                                envelopes_pruned=(int(ast[row, 5])
+                                                  + int(st[row, 5])))
+                            results[i] = self._knn_result_rows(
+                                qs[i], spec, d2[row], sid[row],
+                                off[row], stats)
+                    sp.set(chunks=int(st[:, 0].sum()))
         return results
 
     def _local_approx_device(self, qs, spec: QuerySpec):
@@ -730,25 +764,34 @@ class UlisseEngine:
         n_comb = self._index.search_envelopes().size
         for qlen, idxs in self._group_by_len(qs):
             for sub, queries, b in self._padded_batches(qs, idxs):
-                nseg, qstack, dlo, dhi, qb, qh = self._stack_prepared(
-                    queries, spec)
-                (ad2, asid, aoff), ast, cert, leaf_v, _, _, _, nblk = \
-                    self._device_approx_stage(qstack, dlo, dhi, qb, qh,
-                                              nseg, k, spec)
-                ad2, asid, aoff, ast, cert, leaf_v = jax.device_get(
-                    (ad2, asid, aoff, ast, cert, leaf_v))
-                for row, i in enumerate(sub):
-                    stats = SearchStats(
-                        envelopes_total=n_comb, lb_computations=nblk,
-                        leaves_visited=int(leaf_v[row]),
-                        exact_from_approx=bool(cert[row]),
-                        envelopes_checked=int(ast[row, 1]),
-                        true_dist_computations=int(ast[row, 2]),
-                        dtw_lb_keogh=int(ast[row, 3]),
-                        dtw_full=int(ast[row, 4]))
-                    results[i] = self._knn_result_rows(
-                        qs[i], spec, ad2[row], asid[row], aoff[row],
-                        stats)
+                with span("query.approx_device", qlen=qlen, batch=b):
+                    with span("prepare"):
+                        (nseg, qstack, dlo, dhi, qb,
+                         qh) = self._stack_prepared(queries, spec)
+                    with span("device_scan"):
+                        ((ad2, asid, aoff), ast, cert, leaf_v, _, _, _,
+                         nblk, aplan) = self._device_approx_stage(
+                            qstack, dlo, dhi, qb, qh, nseg, k, spec)
+                        (ad2, asid, aoff, ast, cert,
+                         leaf_v) = jax.device_get(
+                            (ad2, asid, aoff, ast, cert, leaf_v))
+                    with span("merge"):
+                        for row, i in enumerate(sub):
+                            stats = SearchStats(
+                                envelopes_total=n_comb,
+                                lb_computations=nblk,
+                                leaves_visited=int(leaf_v[row]),
+                                exact_from_approx=bool(cert[row]),
+                                envelopes_checked=int(ast[row, 1]),
+                                true_dist_computations=int(ast[row, 2]),
+                                dtw_lb_keogh=int(ast[row, 3]),
+                                dtw_full=int(ast[row, 4]),
+                                envelopes_pruned=int(ast[row, 5]),
+                                chunks_visited=int(ast[row, 0]),
+                                chunks_planned=aplan)
+                            results[i] = self._knn_result_rows(
+                                qs[i], spec, ad2[row], asid[row],
+                                aoff[row], stats)
         return results
 
     def _local_range_device(self, qs, spec: QuerySpec):
@@ -776,66 +819,79 @@ class UlisseEngine:
         env = index.search_envelopes()
         n_comb = env.size
         eps2 = float(spec.eps) ** 2
-        nseg, qstack, dlo, dhi, qb, qh = self._stack_prepared(
-            queries, spec)
-        lbs = planner.env_lower_bounds_batch(
-            qb, qh, env, index.breakpoints, p.seg_len, nseg,
-            spec.use_paa_bounds)
-        n_pad = executor.pow2ceil(n_comb)
-        ssids, sanc, snm, slbs2, order = planner.device_range_pack(
-            env.series_id, env.anchor, env.n_master, lbs,
-            jnp.full((b,), eps2, jnp.float32), n_pad=n_pad)
-        (bd2, bsid, boff, cnt, ovf, st,
-         chunk) = executor.device_range_scan(
-            index.collection, ssids, sanc, snm, slbs2, qstack, dlo,
-            dhi, jnp.full((b,), eps2, jnp.float32),
-            capacity=spec.range_capacity, g=p.gamma + 1,
-            measure=spec.measure, r=spec.r, znorm=p.znorm,
-            chunk_size=spec.chunk_size)
-        # THE one host sync of the batch (overflow excepted)
-        bd2, bsid, boff, cnt, ovf, st = jax.device_get(
-            (bd2, bsid, boff, cnt, ovf, st))
-        n_chunks = n_pad // chunk
-        order_h = slbs2_h = None
-        for row, i in enumerate(sub):
-            stats = SearchStats(
-                envelopes_total=n_comb, lb_computations=n_comb,
-                chunks_visited=int(st[row, 0]),
-                envelopes_checked=int(st[row, 1]),
-                true_dist_computations=int(st[row, 2]),
-                dtw_lb_keogh=int(st[row, 3]),
-                dtw_full=int(st[row, 4]))
-            c = int(cnt[row])
-            rows: list = []
-            if c:
-                rows.append(np.stack(
-                    [bsid[row, :c].astype(np.float64),
-                     boff[row, :c].astype(np.float64),
-                     bd2[row, :c].astype(np.float64)], axis=1))
-            o = int(ovf[row])
-            if o < n_chunks:     # buffer overflowed: host tail
-                stats.range_overflows += 1
-                if order_h is None:            # lazy: overflow only
-                    order_h = np.asarray(order)
-                    slbs2_h = np.asarray(slbs2, np.float64)
-                pq = planner.prepare_query(qs[i], p, spec.measure,
-                                           spec.r)
-                sink = TopK(1)   # unused (collector path)
-                pos = o * chunk
-                while pos < n_pad:
-                    seg = slbs2_h[row, pos:pos + chunk]
-                    # packed rows are all true candidates
-                    # (lb2 <= eps2); +inf marks the padding tail
-                    keep = np.isfinite(seg)
-                    if not keep[0]:
-                        break
-                    executor.verify_envelopes(
-                        index, pq,
-                        order_h[row, pos:pos + chunk][keep],
-                        sink, stats, eps2=eps2, collector=rows)
-                    stats.chunks_visited += 1
-                    pos += chunk
-            results[i] = self._range_result_rows(rows, stats)
+        with span("query.range_device", qlen=len(queries[0]),
+                  batch=b) as qsp:
+            with span("prepare"):
+                nseg, qstack, dlo, dhi, qb, qh = self._stack_prepared(
+                    queries, spec)
+            with span("pack"):
+                lbs = planner.env_lower_bounds_batch(
+                    qb, qh, env, index.breakpoints, p.seg_len, nseg,
+                    spec.use_paa_bounds)
+                n_pad = executor.pow2ceil(n_comb)
+                (ssids, sanc, snm, slbs2,
+                 order) = planner.device_range_pack(
+                    env.series_id, env.anchor, env.n_master, lbs,
+                    jnp.full((b,), eps2, jnp.float32), n_pad=n_pad)
+            with span("device_scan"):
+                (bd2, bsid, boff, cnt, ovf, st,
+                 chunk) = executor.device_range_scan(
+                    index.collection, ssids, sanc, snm, slbs2, qstack,
+                    dlo, dhi, jnp.full((b,), eps2, jnp.float32),
+                    capacity=spec.range_capacity, g=p.gamma + 1,
+                    measure=spec.measure, r=spec.r, znorm=p.znorm,
+                    chunk_size=spec.chunk_size)
+                # THE one host sync of the batch (overflow excepted)
+                bd2, bsid, boff, cnt, ovf, st = jax.device_get(
+                    (bd2, bsid, boff, cnt, ovf, st))
+            n_chunks = n_pad // chunk
+            order_h = slbs2_h = None
+            overflows = 0
+            for row, i in enumerate(sub):
+                stats = SearchStats(
+                    envelopes_total=n_comb, lb_computations=n_comb,
+                    chunks_visited=int(st[row, 0]),
+                    chunks_planned=n_chunks,
+                    envelopes_checked=int(st[row, 1]),
+                    true_dist_computations=int(st[row, 2]),
+                    dtw_lb_keogh=int(st[row, 3]),
+                    dtw_full=int(st[row, 4]),
+                    envelopes_pruned=int(st[row, 5]))
+                c = int(cnt[row])
+                rows: list = []
+                if c:
+                    rows.append(np.stack(
+                        [bsid[row, :c].astype(np.float64),
+                         boff[row, :c].astype(np.float64),
+                         bd2[row, :c].astype(np.float64)], axis=1))
+                o = int(ovf[row])
+                if o < n_chunks:     # buffer overflowed: host tail
+                    stats.range_overflows += 1
+                    overflows += 1
+                    with span("host_continuation", query=i):
+                        if order_h is None:        # lazy: overflow only
+                            order_h = np.asarray(order)
+                            slbs2_h = np.asarray(slbs2, np.float64)
+                        pq = planner.prepare_query(qs[i], p,
+                                                   spec.measure, spec.r)
+                        sink = TopK(1)   # unused (collector path)
+                        pos = o * chunk
+                        while pos < n_pad:
+                            seg = slbs2_h[row, pos:pos + chunk]
+                            # packed rows are all true candidates
+                            # (lb2 <= eps2); +inf marks the padding tail
+                            keep = np.isfinite(seg)
+                            if not keep[0]:
+                                break
+                            executor.verify_envelopes(
+                                index, pq,
+                                order_h[row, pos:pos + chunk][keep],
+                                sink, stats, eps2=eps2, collector=rows)
+                            stats.chunks_visited += 1
+                            pos += chunk
+                with span("merge", query=i):
+                    results[i] = self._range_result_rows(rows, stats)
+            qsp.set(overflows=overflows)
 
     def _local_range(self, q, spec: QuerySpec) -> SearchResult:
         """All subsequences within eps of Q (Alg. 5 with bsf := eps)."""
@@ -850,6 +906,7 @@ class UlisseEngine:
             self.params.seg_len, pq.nseg, spec.use_paa_bounds), np.float64)
         stats.lb_computations += env.size
         cand = np.nonzero((lbs ** 2) <= eps2)[0]
+        stats.chunks_planned = -(-len(cand) // spec.chunk_size)
         rows: list = []
         pool = TopK(1)  # unused sink for API symmetry
         for start in range(0, len(cand), spec.chunk_size):
@@ -938,18 +995,21 @@ class UlisseEngine:
             self._programs[key] = entry
         return entry
 
-    def _sharded_stats(self, st, row, n_env, extra_lb=0) -> SearchStats:
-        """Fold the (P, B, 5) per-shard counter stack into SearchStats
-        (sums over shards; the per-shard chunk counts are kept in
-        `shard_chunks` for pruning diagnostics/tests)."""
+    def _sharded_stats(self, st, row, n_env, extra_lb=0,
+                       chunks_planned=0) -> SearchStats:
+        """Fold the (P, B, executor.STATS_WIDTH) per-shard counter stack
+        into SearchStats (sums over shards; the per-shard chunk counts
+        are kept in `shard_chunks` for pruning diagnostics/tests)."""
         return SearchStats(
             envelopes_total=n_env,
             lb_computations=n_env + extra_lb,
             chunks_visited=int(st[:, row, 0].sum()),
+            chunks_planned=chunks_planned,
             envelopes_checked=int(st[:, row, 1].sum()),
             true_dist_computations=int(st[:, row, 2].sum()),
             dtw_lb_keogh=int(st[:, row, 3].sum()),
             dtw_full=int(st[:, row, 4].sum()),
+            envelopes_pruned=int(st[:, row, 5].sum()),
             shard_chunks=[int(x) for x in st[:, row, 0]])
 
     def _distributed_knn_device(self, qs, spec: QuerySpec):
@@ -964,23 +1024,34 @@ class UlisseEngine:
         fn = self._sharded_knn_program(spec, budget)
         n_env = (self.params.num_envelopes(self._series_len)
                  * self._num_series)
+        # per-shard plan geometry (mirrors make_sharded_knn_query):
+        # pow2-padded rows per shard, chunked like the local scan
+        n_pad = executor.pow2ceil(self._env_rows_per_shard)
+        chunk = min(executor.pow2ceil(spec.chunk_size), n_pad)
+        planned = self._shards * (n_pad // chunk)
         results: List[Optional[SearchResult]] = [None] * len(qs)
         for qlen, idxs in self._group_by_len(qs):
             self._bucket(qlen)             # length-range validation
             for sub, b in self._device_batches(idxs):
                 queries = [qs[i] for i in sub]
                 queries += [queries[0]] * (b - len(sub))
-                _, qstack, dlo, dhi, qb, qh = self._stack_prepared(
-                    queries, spec)
-                d2, sid, off, st, cert = jax.device_get(
-                    fn(*index_arrs, qstack, dlo, dhi, qb, qh))
-                for row, i in enumerate(sub):
-                    stats = self._sharded_stats(st, row, n_env)
-                    if budget:
-                        stats.exact_from_approx = bool(cert[row])
-                    results[i] = self._knn_result_rows(
-                        qs[i], spec, d2[row], sid[row], off[row],
-                        stats, data=self._host_data())
+                with span("query.sharded_knn", qlen=qlen, batch=b,
+                          shards=self._shards):
+                    with span("prepare"):
+                        (_, qstack, dlo, dhi, qb,
+                         qh) = self._stack_prepared(queries, spec)
+                    with span("device_scan"):
+                        d2, sid, off, st, cert = jax.device_get(
+                            fn(*index_arrs, qstack, dlo, dhi, qb, qh))
+                    with span("merge"):
+                        for row, i in enumerate(sub):
+                            stats = self._sharded_stats(
+                                st, row, n_env, chunks_planned=planned)
+                            if budget:
+                                stats.exact_from_approx = bool(cert[row])
+                            results[i] = self._knn_result_rows(
+                                qs[i], spec, d2[row], sid[row],
+                                off[row], stats, data=self._host_data())
         return results
 
     def _distributed_range_device(self, qs, spec: QuerySpec):
@@ -1002,38 +1073,53 @@ class UlisseEngine:
             for sub, b in self._device_batches(idxs):
                 queries = [qs[i] for i in sub]
                 queries += [queries[0]] * (b - len(sub))
-                _, qstack, dlo, dhi, qb, qh = self._stack_prepared(
-                    queries, spec)
-                out = fn(*index_arrs, qstack, dlo, dhi, qb, qh,
-                         jnp.full((b,), eps2, jnp.float32))
-                # THE one host sync of the batch (overflow excepted:
-                # the plan arrays stay on device unless needed)
-                bd2, bsid, boff, cnt, ovf, st = jax.device_get(out[:6])
-                plan, plan_h = out[6:], None
-                n_chunks = plan[3].shape[2] // chunk
-                for row, i in enumerate(sub):
-                    stats = self._sharded_stats(st, row, n_env)
-                    rows: list = []
-                    for sh in range(self._shards):
-                        c = int(cnt[sh, row])
-                        if c:
-                            lo = sh * cap
-                            rows.append(np.stack(
-                                [bsid[row, lo:lo + c].astype(np.float64),
-                                 boff[row, lo:lo + c].astype(np.float64),
-                                 bd2[row, lo:lo + c].astype(np.float64)],
-                                axis=1))
-                        o = int(ovf[sh, row])
-                        if o < n_chunks:   # this shard's buffer spilled
-                            stats.range_overflows += 1
-                            if plan_h is None:     # lazy: overflow only
-                                plan_h = jax.device_get(plan)
-                            self._host_range_tail(
-                                qs[i], spec, plan_h[0][sh, row],
-                                plan_h[1][sh, row], plan_h[2][sh, row],
-                                plan_h[3][sh, row], o * chunk, chunk,
-                                eps2, rows, stats)
-                    results[i] = self._range_result_rows(rows, stats)
+                with span("query.sharded_range", qlen=qlen, batch=b,
+                          shards=self._shards):
+                    with span("prepare"):
+                        (_, qstack, dlo, dhi, qb,
+                         qh) = self._stack_prepared(queries, spec)
+                    with span("device_scan"):
+                        out = fn(*index_arrs, qstack, dlo, dhi, qb, qh,
+                                 jnp.full((b,), eps2, jnp.float32))
+                        # THE one host sync of the batch (overflow
+                        # excepted: plan arrays stay on device)
+                        bd2, bsid, boff, cnt, ovf, st = jax.device_get(
+                            out[:6])
+                    plan, plan_h = out[6:], None
+                    n_chunks = plan[3].shape[2] // chunk
+                    for row, i in enumerate(sub):
+                        stats = self._sharded_stats(
+                            st, row, n_env,
+                            chunks_planned=self._shards * n_chunks)
+                        rows: list = []
+                        for sh in range(self._shards):
+                            c = int(cnt[sh, row])
+                            if c:
+                                lo = sh * cap
+                                rows.append(np.stack(
+                                    [bsid[row, lo:lo + c]
+                                     .astype(np.float64),
+                                     boff[row, lo:lo + c]
+                                     .astype(np.float64),
+                                     bd2[row, lo:lo + c]
+                                     .astype(np.float64)], axis=1))
+                            o = int(ovf[sh, row])
+                            if o < n_chunks:   # buffer spilled
+                                stats.range_overflows += 1
+                                with span("host_continuation",
+                                          query=i, shard=sh):
+                                    if plan_h is None:  # overflow only
+                                        plan_h = jax.device_get(plan)
+                                    self._host_range_tail(
+                                        qs[i], spec,
+                                        plan_h[0][sh, row],
+                                        plan_h[1][sh, row],
+                                        plan_h[2][sh, row],
+                                        plan_h[3][sh, row], o * chunk,
+                                        chunk, eps2, rows, stats)
+                        with span("merge", query=i):
+                            results[i] = self._range_result_rows(
+                                rows, stats)
         return results
 
     def _range_result_rows(self, rows, stats) -> SearchResult:

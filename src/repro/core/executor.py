@@ -36,16 +36,37 @@ from repro.kernels.fused_verify import (fused_gather_ed,
 # results + stats
 # --------------------------------------------------------------------------
 
+# Width of the per-query device stats vector carried through the scan
+# loops: [chunks_visited, envelopes_checked, true_dist_computations,
+# dtw_lb_keogh, dtw_full, envelopes_pruned].  Every consumer (engine
+# stats assembly, distributed per-shard stacks) keys off this constant.
+STATS_WIDTH = 6
+
+
 @dataclasses.dataclass
 class SearchStats:
+    """The ONE per-query stats schema every backend populates
+    (host, device, distributed-per-shard) — DESIGN.md §12.
+
+    Counter semantics are backend-independent: `envelopes_pruned`
+    counts envelopes cut by the bsf/eps lower-bound test *inside
+    visited chunks* (plan rows never reached because the scan stopped
+    early are neither checked nor pruned — the gap is
+    `chunks_planned - chunks_visited`); `chunks_planned` is the
+    dispatch plan's chunk count (device: padded plan rows / chunk
+    size; host: candidate batches the reference loop would run
+    unpruned; sharded: summed over shards).
+    """
     envelopes_total: int = 0
     envelopes_checked: int = 0       # envelopes whose raw data was read
+    envelopes_pruned: int = 0        # LB/bsf cuts inside visited chunks
     lb_computations: int = 0
     true_dist_computations: int = 0  # ED or DTW on raw windows
     dtw_lb_keogh: int = 0            # second-tier LB computations
     dtw_full: int = 0                # full banded DPs executed
     leaves_visited: int = 0
     chunks_visited: int = 0
+    chunks_planned: int = 0          # chunks in the dispatch plan
     exact_from_approx: bool = False
     escalations: int = 0             # exactness-certificate retries
     range_overflows: int = 0         # device hit-buffer overflows (range)
@@ -64,6 +85,14 @@ class SearchStats:
         if self.dtw_lb_keogh > 0:
             return 1.0 - self.dtw_full / max(self.dtw_lb_keogh, 1)
         return 0.0
+
+    def as_dict(self) -> dict:
+        """JSON-ready snapshot including the derived ratios — what the
+        obs exporters and examples print."""
+        d = dataclasses.asdict(self)
+        d["pruning_power"] = self.pruning_power
+        d["abandoning_power"] = self.abandoning_power
+        return d
 
 
 @dataclasses.dataclass
@@ -439,9 +468,9 @@ def _scan_chunk_step(data, csum, csum2, cslo, cs2lo, center, sids,
     cut the caller prunes with (the pool's own kth locally; the min of
     the local kth and the mesh-wide broadcast bsf on a sharded scan).
 
-    Returns (pool, dstats) where dstats (B, 5) holds the per-query
-    increments of [chunks, envelopes_checked, true_dists, lb_keogh,
-    dtw_full].
+    Returns (pool, dstats) where dstats (B, STATS_WIDTH) holds the
+    per-query increments of [chunks, envelopes_checked, true_dists,
+    lb_keogh, dtw_full, envelopes_pruned].
     """
     n = data.shape[1]
     b_sz, qlen = qs.shape
@@ -452,6 +481,10 @@ def _scan_chunk_step(data, csum, csum2, cslo, cs2lo, center, sids,
     ok, cand_sid, cand_off = _chunk_candidates(csid, canc, cnm,
                                                keep, qlen, n, g)
     checked = jnp.sum(keep, axis=1, dtype=jnp.int32)
+    # envelopes cut by the bsf LB test in this visited chunk (padding
+    # rows carry lbs2 = +inf and are excluded by the isfinite test)
+    pruned = jnp.sum(jnp.isfinite(clb2) & active[:, None] & ~keep,
+                     axis=1, dtype=jnp.int32)
     tdist = nlbk = ndtw = zeros
     if measure == "ed":
         d2 = fused_gather_ed(data, csum, csum2, cslo, cs2lo, center,
@@ -494,7 +527,7 @@ def _scan_chunk_step(data, csum, csum2, cslo, cs2lo, center, sids,
             (jnp.int32(0), pool, ndtw))
         tdist = nsurv
     return pool, jnp.stack([active.astype(jnp.int32), checked, tdist,
-                            nlbk, ndtw], axis=1)
+                            nlbk, ndtw, pruned], axis=1)
 
 
 def _device_scan_core(data, csum, csum2, cslo, cs2lo, center, sids,
@@ -543,7 +576,7 @@ def _device_scan_core(data, csum, csum2, cslo, cs2lo, center, sids,
         return jnp.any(active_at(state[0], state[1]))
 
     state = (jnp.int32(0), (seed_d2, seed_sid, seed_off),
-             jnp.zeros((b_sz, 5), jnp.int32))
+             jnp.zeros((b_sz, STATS_WIDTH), jnp.int32))
     _, pool, stats = jax.lax.while_loop(cond, body, state)
     return pool[0], pool[1], pool[2], stats
 
@@ -574,9 +607,10 @@ def device_exact_scan(collection, sids, anchors, n_master, lbs2, qs,
     seed_* the (B, k) pools from the approximate pass.
 
     Returns DEVICE arrays (d2 (B, k) f32 ascending, sid/off (B, k)
-    int32, stats (B, 5) int32 = [chunks, envelopes_checked, true_dists,
-    lb_keogh, dtw_full]); the caller performs the one host readback
-    (`jax.device_get`) for the whole batch.
+    int32, stats (B, STATS_WIDTH) int32 = [chunks, envelopes_checked,
+    true_dists, lb_keogh, dtw_full, envelopes_pruned]); the caller
+    performs the one host readback (`jax.device_get`) for the whole
+    batch.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -638,7 +672,7 @@ def _device_range_core(data, csum, csum2, cslo, cs2lo, center, sids,
 
     def body(state):
         (i, bd2, bsid, boff, cnt, ovf, nchunks, checked, tdist, nlbk,
-         ndtw) = state
+         ndtw, npruned) = state
         active = active_at(i, ovf)
         nchunks = nchunks + active.astype(jnp.int32)
         csid, canc, cnm, clb2 = _chunk_slice(sids, anchors, n_master,
@@ -647,6 +681,9 @@ def _device_range_core(data, csum, csum2, cslo, cs2lo, center, sids,
         ok, cand_sid, cand_off = _chunk_candidates(csid, canc, cnm,
                                                    keep, qlen, n, g)
         checked = checked + jnp.sum(keep, axis=1, dtype=jnp.int32)
+        npruned = npruned + jnp.sum(
+            jnp.isfinite(clb2) & active[:, None] & ~keep,
+            axis=1, dtype=jnp.int32)
         if measure == "ed":
             d2 = fused_gather_ed(data, csum, csum2, cslo, cs2lo, center,
                                  csid.reshape(-1), canc.reshape(-1),
@@ -710,7 +747,7 @@ def _device_range_core(data, csum, csum2, cslo, cs2lo, center, sids,
         cnt = jnp.where(ovf_now, cnt, cnt + nh)
         ovf = jnp.where(ovf_now & (ovf == no_ovf), i, ovf)
         return (i + 1, bd2, bsid, boff, cnt, ovf, nchunks, checked,
-                tdist, nlbk, ndtw)
+                tdist, nlbk, ndtw, npruned)
 
     def cond(state):
         return jnp.any(active_at(state[0], state[5]))
@@ -721,11 +758,11 @@ def _device_range_core(data, csum, csum2, cslo, cs2lo, center, sids,
              jnp.full((b_sz, cap), -1, jnp.int32),
              jnp.full((b_sz, cap), -1, jnp.int32),
              zeros, jnp.full((b_sz,), no_ovf, jnp.int32),
-             zeros, zeros, zeros, zeros, zeros)
+             zeros, zeros, zeros, zeros, zeros, zeros)
     (_, bd2, bsid, boff, cnt, ovf, nchunks, checked, tdist, nlbk,
-     ndtw) = jax.lax.while_loop(cond, body, state)
+     ndtw, npruned) = jax.lax.while_loop(cond, body, state)
     return bd2, bsid, boff, cnt, ovf, jnp.stack(
-        [nchunks, checked, tdist, nlbk, ndtw], axis=1)
+        [nchunks, checked, tdist, nlbk, ndtw, npruned], axis=1)
 
 
 @functools.lru_cache(maxsize=None)
@@ -745,7 +782,8 @@ def device_range_scan(collection, sids, anchors, n_master, lbs2, qs,
     """Batched device eps-range scan (no host sync — see engine).
 
     Returns (buf_d2 (B, cap) f32, buf_sid/buf_off (B, cap) int32,
-    cnt (B,), ovf_chunk (B,), stats (B, 5), chunk) — device arrays plus
+    cnt (B,), ovf_chunk (B,), stats (B, STATS_WIDTH), chunk) — device
+    arrays plus
     the static chunk size the scan actually used: `ovf_chunk` counts in
     units of `chunk` rows of the packed plan, and the host continuation
     of an overflowed query must resume at row `ovf_chunk * chunk` —

@@ -150,7 +150,8 @@ def _sharded_knn_scan(coll: Collection, sids, anchors, n_master, lbs2,
     `budget_chunks` > 0 caps the per-shard scan depth (the distributed
     approximate mode: the first LB-ordered chunks ARE the paper's
     best-first leaf visits); 0 means scan to convergence.  Returns
-    (pool, stats (B, 5), cert (B,)) — `cert` is the in-graph exactness
+    (pool, stats (B, executor.STATS_WIDTH), cert (B,)) — `cert` is the
+    in-graph exactness
     certificate: True iff no shard's first unvisited chunk could still
     improve the final global pool (always True with no budget, because
     that is the loop's only exit).
@@ -196,7 +197,7 @@ def _sharded_knn_scan(coll: Collection, sids, anchors, n_master, lbs2,
         jnp.any(local_active(jnp.int32(0), pool0, gkth0))
         .astype(jnp.int32), axis_name) > 0
     state = (jnp.int32(0), pool0, gkth0, cont0,
-             jnp.zeros((b_sz, 5), jnp.int32))
+             jnp.zeros((b_sz, executor.STATS_WIDTH), jnp.int32))
     _, pool, _, _, stats = jax.lax.while_loop(
         lambda s: s[3], round_body, state)
 
@@ -240,8 +241,8 @@ def make_sharded_knn_query(mesh, p: EnvelopeParams, breakpoints, *,
 
     Returns query_fn(*sharded_index, qs, dlo, dhi, qb, qh) ->
     (d2 (B, k) ascending squared distances, sid (B, k) GLOBAL series
-    ids, off (B, k), stats (P, B, 5) per-shard counter stacks,
-    cert (B,) exactness certificates).  `sharded_index` is the
+    ids, off (B, k), stats (P, B, executor.STATS_WIDTH) per-shard
+    counter stacks, cert (B,) exactness certificates).  `sharded_index` is the
     build_sharded_index tuple in SHARDED_INDEX_FIELDS order; query
     length is read from qs.shape (one retrace per (B, qlen) shape, no
     per-length maker).
@@ -307,8 +308,8 @@ def make_sharded_range_query(mesh, p: EnvelopeParams, breakpoints, *,
     all — hits stay in per-shard buffers that concatenate on the output
     spec.  Returns (query_fn, chunk): query_fn(*sharded_index, qs, dlo,
     dhi, qb, qh, eps2) -> (bd2 (B, P*cap), bsid GLOBAL, boff, cnt
-    (P, B), ovf (P, B), stats (P, B, 5), plan_sid/plan_anc/plan_nm/
-    plan_lbs2 (P, B, n_pad)); the plan arrays (GLOBAL series ids) let
+    (P, B), ovf (P, B), stats (P, B, executor.STATS_WIDTH),
+    plan_sid/plan_anc/plan_nm/plan_lbs2 (P, B, n_pad)); the plan arrays (GLOBAL series ids) let
     the host replay chunks [ovf, n_chunks) of an overflowed
     (query, shard) pair through the §9 continuation without re-deriving
     the shard's pack.  `chunk` is the plan-row chunking the program

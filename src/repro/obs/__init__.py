@@ -1,0 +1,98 @@
+"""repro.obs — unified tracing, pruning telemetry, and metrics export.
+
+One substrate, three surfaces (DESIGN.md §12):
+
+  * ``get_tracer()`` / ``span(...)`` — the process-wide sampling
+    `Tracer`.  Engine and server call ``span()`` unconditionally; it is
+    a near-free no-op until someone calls
+    ``get_tracer().configure(enabled=True)``.
+  * ``get_registry()`` — the process-wide `MetricsRegistry` that
+    `ServeMetrics` mirrors into and `record_search_stats` feeds, with
+    Prometheus text / JSON snapshot exporters.
+  * ``record_search_stats(stats, backend=...)`` — fold one query's
+    `SearchStats` into the registry as ``ulisse_engine_*`` counters.
+
+The engine populates a single `SearchStats` schema on every backend
+(host, device, distributed-per-shard); this module is where those
+numbers become scrapeable.
+"""
+from __future__ import annotations
+
+from .registry import DEFAULT_BUCKETS, MetricsRegistry
+from .tracer import Span, Tracer
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "MetricsRegistry",
+    "Span",
+    "Tracer",
+    "get_registry",
+    "get_tracer",
+    "record_search_stats",
+    "set_registry",
+    "set_tracer",
+    "span",
+]
+
+_tracer = Tracer()
+_registry = MetricsRegistry()
+
+
+def get_tracer() -> Tracer:
+    """The process-wide tracer (disabled until configured)."""
+    return _tracer
+
+
+def set_tracer(tracer: Tracer) -> Tracer:
+    """Swap the process-wide tracer (tests); returns the previous one."""
+    global _tracer
+    prev, _tracer = _tracer, tracer
+    return prev
+
+
+def span(name: str, **attrs):
+    """Open a span on the process-wide tracer — the one call sites use."""
+    return _tracer.span(name, **attrs)
+
+
+def get_registry() -> MetricsRegistry:
+    """The process-wide metrics registry."""
+    return _registry
+
+
+def set_registry(registry: MetricsRegistry) -> MetricsRegistry:
+    """Swap the process-wide registry (tests); returns the previous one."""
+    global _registry
+    prev, _registry = _registry, registry
+    return prev
+
+
+# SearchStats counter fields exported per query.  Everything here is a
+# monotone per-query count, so summing across queries stays meaningful.
+_STATS_COUNTERS = (
+    ("envelopes_total", "Envelopes in scope across queries"),
+    ("envelopes_checked", "Envelopes surviving LB pruning"),
+    ("envelopes_pruned", "Envelopes cut by LB/bsf inside visited chunks"),
+    ("lb_computations", "Envelope lower-bound evaluations"),
+    ("true_dist_computations", "True-distance window verifications"),
+    ("dtw_lb_keogh", "DTW LB_Keogh band evaluations"),
+    ("dtw_full", "Full DTW dynamic programs run"),
+    ("chunks_visited", "Scan chunks actually executed"),
+    ("chunks_planned", "Scan chunks in the dispatch plan"),
+    ("escalations", "verify_top escalation rounds"),
+    ("range_overflows", "Device range hits past capacity (host tail)"),
+)
+
+
+def record_search_stats(stats, backend: str = "local",
+                        registry: MetricsRegistry | None = None) -> None:
+    """Fold one query's `SearchStats` into ``ulisse_engine_*`` counters,
+    labelled by backend (host / device / distributed)."""
+    reg = registry if registry is not None else _registry
+    for field, help_text in _STATS_COUNTERS:
+        v = getattr(stats, field, 0)
+        if v:
+            reg.inc("ulisse_engine_" + field, float(v),
+                    help_text=help_text, backend=backend)
+    reg.inc("ulisse_engine_queries", 1.0,
+            help_text="Queries with recorded stats", backend=backend)

@@ -7,17 +7,32 @@ clients are in flight), so every mutation takes the (uncontended)
 metrics lock.  Latency and queue-wait samples live in bounded deques —
 a long-running server must not grow O(requests) host state just to
 report a p99.
+
+Every record_* call also mirrors into the process-wide
+`repro.obs.MetricsRegistry` as `ulisse_serve_*` counters/histograms
+labelled by length bucket, so one Prometheus scrape
+(`UlisseServer.metrics_text()`) sees serving latency next to the
+engine's pruning counters.  `reset()` restarts only the local
+measurement window — the registry is process-wide and monotone, as
+scrapers expect.
 """
 from __future__ import annotations
 
 import threading
 import time
 from collections import Counter, deque
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import obs
+
 MAX_SAMPLES = 65536          # per-bucket latency/wait sample window
+
+# fill is bounded by ServeConfig.max_batch (pow2-padded dispatches):
+# integer-edge buckets keep the histogram exact for the usual range
+_FILL_BUCKETS = (1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0, 32.0,
+                 64.0)
 
 
 def _pctiles_ms(samples: List[float]) -> Dict[str, float]:
@@ -62,16 +77,30 @@ class _BucketMetrics:
 
 
 class ServeMetrics:
-    """Aggregated serving counters, exportable as one dict."""
+    """Aggregated serving counters, exportable as one dict.
 
-    def __init__(self):
+    `registry` (default: the process-wide `repro.obs.get_registry()`)
+    receives a mirrored `ulisse_serve_*` stream of every record; pass
+    an isolated `MetricsRegistry` in tests to assert on exact values.
+    """
+
+    def __init__(self, registry: Optional["obs.MetricsRegistry"] = None):
         self._lock = threading.Lock()
         self._buckets: Dict[int, _BucketMetrics] = {}
         self._t0 = time.perf_counter()
+        self._registry = registry
+
+    @property
+    def registry(self) -> "obs.MetricsRegistry":
+        # late-bound so tests swapping obs.set_registry() take effect
+        return (self._registry if self._registry is not None
+                else obs.get_registry())
 
     def reset(self) -> None:
         """Restart the measurement window (benches call this after
-        warmup so steady-state qps is not diluted by compile time)."""
+        warmup so steady-state qps is not diluted by compile time).
+        The mirrored registry stream is NOT reset — it is process-wide
+        and monotone."""
         with self._lock:
             self._buckets = {}
             self._t0 = time.perf_counter()
@@ -85,10 +114,16 @@ class ServeMetrics:
     def record_admit(self, bucket: int) -> None:
         with self._lock:
             self._bucket(bucket).admitted += 1
+        self.registry.inc("ulisse_serve_admitted_total",
+                          help_text="Requests admitted to the queue",
+                          bucket=bucket)
 
     def record_reject(self, bucket: int) -> None:
         with self._lock:
             self._bucket(bucket).rejected += 1
+        self.registry.inc("ulisse_serve_rejected_total",
+                          help_text="Requests shed by admission control",
+                          bucket=bucket)
 
     def record_dispatch(self, bucket: int, fill: int,
                         waits: List[float]) -> None:
@@ -97,16 +132,36 @@ class ServeMetrics:
             bm.dispatches += 1
             bm.fill_hist[fill] += 1
             bm.queue_wait.extend(waits)
+        reg = self.registry
+        reg.inc("ulisse_serve_dispatches_total",
+                help_text="Coalesced batches dispatched", bucket=bucket)
+        reg.observe("ulisse_serve_batch_fill", float(fill),
+                    help_text="Requests coalesced per dispatch",
+                    buckets=_FILL_BUCKETS, bucket=bucket)
+        for w in waits:
+            reg.observe("ulisse_serve_queue_wait_seconds", w,
+                        help_text="Submit-to-dispatch wait",
+                        bucket=bucket)
 
     def record_done(self, bucket: int, latencies: List[float]) -> None:
         with self._lock:
             bm = self._bucket(bucket)
             bm.completed += len(latencies)
             bm.latency.extend(latencies)
+        reg = self.registry
+        reg.inc("ulisse_serve_completed_total", float(len(latencies)),
+                help_text="Requests answered", bucket=bucket)
+        for lat in latencies:
+            reg.observe("ulisse_serve_latency_seconds", lat,
+                        help_text="Submit-to-response latency",
+                        bucket=bucket)
 
     def record_failed(self, bucket: int, n: int) -> None:
         with self._lock:
             self._bucket(bucket).failed += n
+        self.registry.inc("ulisse_serve_failed_total", float(n),
+                          help_text="Requests failed at dispatch",
+                          bucket=bucket)
 
     def snapshot(self) -> dict:
         """One nested dict: per-bucket rows + a `total` fold — the
@@ -125,6 +180,13 @@ class ServeMetrics:
                             for bm in self._buckets.values())
             dispatches = sum(bm.dispatches
                              for bm in self._buckets.values())
+            # mean_fill must fold the per-bucket fill histograms, like
+            # the per-bucket rows do: completed/dispatches undercounts
+            # whenever a dispatch fails (its requests were coalesced
+            # but never complete), silently deflating the batching
+            # efficiency the serving tier exists to demonstrate
+            total_fill = sum(f * c for bm in self._buckets.values()
+                             for f, c in bm.fill_hist.items())
             total = {
                 "admitted": sum(bm.admitted
                                 for bm in self._buckets.values()),
@@ -135,7 +197,7 @@ class ServeMetrics:
                               for bm in self._buckets.values()),
                 "dispatches": dispatches,
                 "qps": round(completed / max(elapsed, 1e-9), 2),
-                "mean_fill": round(completed / max(dispatches, 1), 3),
+                "mean_fill": round(total_fill / max(dispatches, 1), 3),
                 "queue_wait_ms": _pctiles_ms(all_wait),
                 "latency_ms": _pctiles_ms(all_lat),
             }

@@ -23,10 +23,15 @@ this module is what exploits it under load:
     batch runs against one consistent index snapshot, and a compact
     can never race a scan.  Responses carry the snapshot version they
     executed under (`Ticket.snapshot`).
-  * **Metrics.**  Per-bucket qps, batch-fill histogram, queue wait and
-    p50/p95/p99 end-to-end latency, exported as a dict
+  * **Metrics + tracing.**  Per-bucket qps, batch-fill histogram,
+    queue wait and p50/p95/p99 end-to-end latency, exported as a dict
     (`server.metrics.snapshot()`) — the serving analogue of
-    `SearchStats`.
+    `SearchStats` — and mirrored into the process-wide
+    `repro.obs` registry together with every dispatched query's
+    engine pruning counters (`server.metrics_text()` = one Prometheus
+    scrape for the whole pipeline).  With `repro.obs` tracing enabled,
+    each request leaves admission -> queue_wait -> dispatch spans that
+    nest around the engine's prepare/pack/device-scan/merge spans.
 
 Typical use::
 
@@ -46,8 +51,10 @@ import time
 from collections import deque
 from typing import Deque, Dict, Optional, Sequence
 
+from repro import obs
 from repro.core import planner
 from repro.core.engine import QuerySpec, UlisseEngine
+from repro.obs import span
 from repro.serve.metrics import ServeMetrics
 
 
@@ -225,6 +232,25 @@ class UlisseServer:
         with self._cond:
             return self._pending
 
+    @property
+    def _backend_label(self) -> str:
+        """Registry label for engine stats recorded at dispatch."""
+        if self.engine.is_distributed:
+            return "distributed"
+        return self.spec.scan_backend
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the process registry: the
+        `ulisse_serve_*` stream this server mirrors (per-bucket latency
+        and queue-wait histograms, fill, admission counters) plus the
+        `ulisse_engine_*` pruning counters recorded per dispatched
+        query — one scrape surface for the whole pipeline."""
+        return self.metrics.registry.prometheus_text()
+
+    def metrics_json(self) -> dict:
+        """JSON snapshot of the same registry state as metrics_text()."""
+        return self.metrics.registry.snapshot()
+
     # -- client surface ------------------------------------------------
 
     def submit(self, q) -> Ticket:
@@ -232,25 +258,28 @@ class UlisseServer:
         this thread), enqueue into its length bucket.  Raises
         ValueError (malformed request), AdmissionError (queue full) or
         ServerClosed."""
-        arr, bucket = planner.admit_query(q, self.engine.params)
-        ticket = Ticket(bucket)
-        with self._cond:
-            if self._closed:
-                raise ServerClosed("server is closed")
-            if self._pending >= self.config.max_pending:
-                self.metrics.record_reject(bucket)
-                raise AdmissionError(
-                    f"queue full ({self._pending} pending >= "
-                    f"max_pending={self.config.max_pending}); retry "
-                    "with backoff", pending=self._pending,
-                    max_pending=self.config.max_pending, bucket=bucket)
-            ticket.t_submit = time.perf_counter()
-            self._buckets.setdefault(bucket, deque()).append(
-                _Request(arr, ticket))
-            self._pending += 1
-            self.metrics.record_admit(bucket)
-            self._cond.notify()
-        return ticket
+        with span("serve.admission") as sp:
+            arr, bucket = planner.admit_query(q, self.engine.params)
+            sp.set(bucket=bucket)
+            ticket = Ticket(bucket)
+            with self._cond:
+                if self._closed:
+                    raise ServerClosed("server is closed")
+                if self._pending >= self.config.max_pending:
+                    self.metrics.record_reject(bucket)
+                    raise AdmissionError(
+                        f"queue full ({self._pending} pending >= "
+                        f"max_pending={self.config.max_pending}); retry "
+                        "with backoff", pending=self._pending,
+                        max_pending=self.config.max_pending,
+                        bucket=bucket)
+                ticket.t_submit = time.perf_counter()
+                self._buckets.setdefault(bucket, deque()).append(
+                    _Request(arr, ticket))
+                self._pending += 1
+                self.metrics.record_admit(bucket)
+                self._cond.notify()
+            return ticket
 
     def search(self, q, timeout: Optional[float] = None):
         """Blocking convenience: submit + wait for the SearchResult."""
@@ -358,28 +387,41 @@ class UlisseServer:
 
     def _dispatch(self, bucket: int, batch) -> None:
         t0 = time.perf_counter()
-        self.metrics.record_dispatch(
-            bucket, fill=len(batch),
-            waits=[t0 - r.ticket.t_submit for r in batch])
-        version = self._version
-        try:
-            # ONE engine call: per exact length present this is one
-            # padded device program with one host sync (the engine's
-            # pow2 sub-batching keeps compile count bounded across
-            # variable fills)
-            results = self.engine.search([r.q for r in batch],
-                                         self.spec)
-        except Exception as e:     # noqa: BLE001 — fail the tickets,
-            for r in batch:        # keep serving
-                r.ticket._fail(e)
-            self.metrics.record_failed(bucket, len(batch))
-            return
-        t1 = time.perf_counter()
-        for r, res in zip(batch, results):
-            r.ticket.snapshot = version
-            r.ticket._complete(res)
-        self.metrics.record_done(
-            bucket, [t1 - r.ticket.t_submit for r in batch])
+        tracer = obs.get_tracer()
+        with span("serve.dispatch", bucket=bucket,
+                  fill=len(batch)) as sp:
+            # the waits happened across threads, before this span
+            # opened: record them as externally-timed queue_wait spans
+            # so a trace shows submit->dispatch next to the dispatch
+            for r in batch:
+                tracer.record_interval("serve.queue_wait",
+                                       r.ticket.t_submit, t0,
+                                       bucket=bucket)
+            self.metrics.record_dispatch(
+                bucket, fill=len(batch),
+                waits=[t0 - r.ticket.t_submit for r in batch])
+            version = self._version
+            try:
+                # ONE engine call: per exact length present this is one
+                # padded device program with one host sync (the
+                # engine's pow2 sub-batching keeps compile count
+                # bounded across variable fills)
+                results = self.engine.search([r.q for r in batch],
+                                             self.spec)
+            except Exception as e:  # noqa: BLE001 — fail the tickets,
+                for r in batch:     # keep serving
+                    r.ticket._fail(e)
+                self.metrics.record_failed(bucket, len(batch))
+                sp.set(failed=len(batch))
+                return
+            t1 = time.perf_counter()
+            for r, res in zip(batch, results):
+                r.ticket.snapshot = version
+                r.ticket._complete(res)
+                obs.record_search_stats(res.stats,
+                                        backend=self._backend_label)
+            self.metrics.record_done(
+                bucket, [t1 - r.ticket.t_submit for r in batch])
 
     def _apply_writer(self, op: _WriterOp) -> None:
         """Index mutation between dispatches: the only place the

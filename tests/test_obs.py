@@ -1,0 +1,314 @@
+"""repro.obs: tracer sampling/overhead contract, metrics registry +
+exporters, SearchStats export, serve-tier mirroring, and the one-query
+end-to-end trace the observability tier exists to produce
+(DESIGN.md §12).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import MetricsRegistry, Tracer
+from repro.obs.tracer import _NULL_SPAN
+from repro.serve.metrics import ServeMetrics
+
+
+# -------------------------------------------------------------------------
+# tracer
+# -------------------------------------------------------------------------
+
+def test_disabled_span_is_shared_null_singleton():
+    """The hot-path contract: while disabled, span() allocates nothing
+    — every call returns the same no-op object, and nothing records."""
+    tr = Tracer()
+    assert tr.span("a") is _NULL_SPAN
+    assert tr.span("b", attr=1) is tr.span("c")
+    with tr.span("a") as sp:
+        sp.set(k=1)              # attribute set is a no-op, not an error
+    tr.record_interval("w", 0.0, 1.0)
+    assert len(tr) == 0
+
+
+def test_nested_spans_record_depth_and_attrs():
+    tr = Tracer(enabled=True)
+    with tr.span("root", qlen=128) as r:
+        with tr.span("child") as c:
+            c.set(chunks=4)
+        r.set(batch=2)
+    spans = tr.drain()
+    assert [s.name for s in spans] == ["child", "root"]  # close order
+    child, root = spans
+    assert child.depth == 1 and root.depth == 0
+    assert root.attrs == {"qlen": 128, "batch": 2}
+    assert child.attrs == {"chunks": 4}
+    assert child.t0 >= root.t0
+    assert child.dur <= root.dur
+    assert len(tr) == 0          # drain cleared the ring
+
+
+def test_sampling_decision_is_per_root_and_inherited():
+    """1-in-N sampling keeps whole traces: an unsampled root's children
+    are dropped with it, a sampled root's children all record."""
+    tr = Tracer(enabled=True, sample_every=2)
+    kept = []
+    for i in range(6):
+        with tr.span("root"):
+            with tr.span("child"):
+                pass
+        kept.append(len(tr.drain()))
+    # deterministic counter: every other root records, always with its
+    # child (2 spans) — never a partial trace (1 span)
+    assert sorted(set(kept)) == [0, 2]
+    assert kept.count(2) == 3
+
+
+def test_ring_buffer_capacity_keeps_newest():
+    tr = Tracer(enabled=True, capacity=3)
+    for i in range(7):
+        with tr.span(f"s{i}"):
+            pass
+    names = [s.name for s in tr.snapshot()]
+    assert names == ["s4", "s5", "s6"]
+
+
+def test_record_interval_respects_enabled_only():
+    tr = Tracer(enabled=True, sample_every=1000)   # roots unsampled
+    tr.record_interval("queue_wait", 1.0, 1.5, bucket=128)
+    (s,) = tr.snapshot()
+    assert s.name == "queue_wait"
+    assert s.dur == pytest.approx(0.5)
+    assert s.attrs == {"bucket": "128"} or s.attrs == {"bucket": 128}
+
+
+def test_configure_validates_and_rebounds():
+    tr = Tracer()
+    with pytest.raises(ValueError):
+        tr.configure(sample_every=0)
+    with pytest.raises(ValueError):
+        tr.configure(capacity=0)
+    tr.configure(enabled=True, capacity=2)
+    for i in range(4):
+        with tr.span(f"s{i}"):
+            pass
+    assert [s.name for s in tr.snapshot()] == ["s2", "s3"]
+
+
+def test_chrome_trace_is_valid_json_with_microsecond_events():
+    tr = Tracer(enabled=True)
+    with tr.span("outer", qlen=96):
+        with tr.span("inner"):
+            pass
+    doc = json.loads(json.dumps(tr.chrome_trace()))
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert meta and meta[0]["args"]["name"] == "ulisse"
+    assert {e["name"] for e in xs} == {"outer", "inner"}
+    for e in xs:
+        assert e["ts"] >= 0 and e["dur"] >= 0       # microseconds
+        assert e["cat"] == "ulisse"
+    outer = next(e for e in xs if e["name"] == "outer")
+    assert outer["args"]["qlen"] == 96
+
+
+# -------------------------------------------------------------------------
+# registry
+# -------------------------------------------------------------------------
+
+def test_registry_counter_gauge_histogram_roundtrip():
+    reg = MetricsRegistry()
+    reg.inc("req_total", 2.0, help_text="requests", bucket=128)
+    reg.inc("req_total", bucket=128)
+    reg.inc("req_total", bucket=256)
+    reg.set_gauge("depth", 7.0, bucket=128)
+    reg.observe("lat_seconds", 0.004, buckets=(0.001, 0.01, 0.1))
+    reg.observe("lat_seconds", 0.04, buckets=(0.001, 0.01, 0.1))
+    assert reg.get("req_total", bucket=128) == 3.0
+    assert reg.get("req_total", bucket=256) == 1.0
+    assert reg.get("req_total", bucket=999) is None
+    assert reg.get("depth", bucket=128) == 7.0
+    snap = reg.snapshot()
+    (h,) = snap["lat_seconds"]["series"]
+    assert h["count"] == 2 and h["sum"] == pytest.approx(0.044)
+    # non-cumulative internal counts: each observation lands in
+    # exactly one bucket (0.004 -> le=0.01, 0.04 -> le=0.1)
+    assert [b["count"] for b in h["buckets"]] == [0, 1, 1]
+    json.loads(reg.json_text())                     # serializable
+
+
+def test_registry_kind_clash_and_negative_counter_raise():
+    reg = MetricsRegistry()
+    reg.inc("x_total")
+    with pytest.raises(ValueError, match="counter"):
+        reg.observe("x_total", 1.0)
+    with pytest.raises(ValueError, match="only go up"):
+        reg.inc("y_total", -1.0)
+    with pytest.raises(ValueError, match="invalid metric name"):
+        reg.inc("bad name")
+
+
+def test_prometheus_text_exposition_format():
+    """The scrape format the acceptance bar names: HELP/TYPE headers,
+    labelled series, histograms expanded to cumulative le= buckets with
+    +Inf, _sum and _count."""
+    reg = MetricsRegistry()
+    reg.inc("ulisse_serve_completed_total", 5, help_text="done",
+            bucket=128)
+    reg.observe("ulisse_serve_latency_seconds", 0.004,
+                buckets=(0.001, 0.01, 0.1), bucket=128)
+    reg.observe("ulisse_serve_latency_seconds", 0.05,
+                buckets=(0.001, 0.01, 0.1), bucket=128)
+    text = reg.prometheus_text()
+    lines = text.strip().splitlines()
+    assert "# HELP ulisse_serve_completed_total done" in lines
+    assert "# TYPE ulisse_serve_completed_total counter" in lines
+    assert 'ulisse_serve_completed_total{bucket="128"} 5' in lines
+    assert "# TYPE ulisse_serve_latency_seconds histogram" in lines
+    # cumulative buckets, le-ordered, +Inf == _count
+    assert ('ulisse_serve_latency_seconds_bucket'
+            '{bucket="128",le="0.001"} 0') in lines
+    assert ('ulisse_serve_latency_seconds_bucket'
+            '{bucket="128",le="0.01"} 1') in lines
+    assert ('ulisse_serve_latency_seconds_bucket'
+            '{bucket="128",le="0.1"} 2') in lines
+    assert ('ulisse_serve_latency_seconds_bucket'
+            '{bucket="128",le="+Inf"} 2') in lines
+    assert 'ulisse_serve_latency_seconds_count{bucket="128"} 2' in lines
+    assert any(line.startswith(
+        'ulisse_serve_latency_seconds_sum{bucket="128"}')
+        for line in lines)
+    assert text.endswith("\n")
+
+
+def test_record_search_stats_labels_by_backend():
+    from repro.core.executor import SearchStats
+    reg = MetricsRegistry()
+    st = SearchStats(envelopes_total=10, envelopes_checked=6,
+                     envelopes_pruned=4, lb_computations=10,
+                     true_dist_computations=40, chunks_visited=2,
+                     chunks_planned=3)
+    obs.record_search_stats(st, backend="device", registry=reg)
+    obs.record_search_stats(st, backend="host", registry=reg)
+    assert reg.get("ulisse_engine_envelopes_pruned", backend="device") == 4
+    assert reg.get("ulisse_engine_chunks_planned", backend="host") == 3
+    assert reg.get("ulisse_engine_queries", backend="device") == 1
+
+
+# -------------------------------------------------------------------------
+# serve metrics mirroring + the mean_fill fix
+# -------------------------------------------------------------------------
+
+def test_total_mean_fill_counts_failed_dispatches():
+    """Regression (satellite a): the total fold computed mean_fill as
+    completed/dispatches, so a failed dispatch — whose requests were
+    coalesced but never complete — silently deflated the batching
+    efficiency.  It must fold the per-bucket fill histograms exactly
+    like the per-bucket rows do."""
+    m = ServeMetrics(registry=MetricsRegistry())
+    m.record_dispatch(128, fill=4, waits=[0.001] * 4)
+    m.record_failed(128, 4)                        # whole batch fails
+    m.record_dispatch(256, fill=2, waits=[0.001] * 2)
+    m.record_done(256, latencies=[0.01, 0.02])
+    snap = m.snapshot()
+    assert snap["total"]["dispatches"] == 2
+    assert snap["total"]["completed"] == 2
+    assert snap["total"]["failed"] == 4
+    # (4 + 2) / 2 dispatches — NOT completed/dispatches == 1.0
+    assert snap["total"]["mean_fill"] == 3.0
+    assert snap["buckets"][128]["mean_fill"] == 4.0
+    assert snap["buckets"][256]["mean_fill"] == 2.0
+
+
+def test_serve_metrics_mirror_into_registry_and_reset_keeps_it():
+    reg = MetricsRegistry()
+    m = ServeMetrics(registry=reg)
+    m.record_admit(128)
+    m.record_dispatch(128, fill=2, waits=[0.001, 0.002])
+    m.record_done(128, latencies=[0.01, 0.02])
+    m.record_reject(128)
+    m.record_failed(128, 1)
+    assert reg.get("ulisse_serve_admitted_total", bucket=128) == 1
+    assert reg.get("ulisse_serve_dispatches_total", bucket=128) == 1
+    assert reg.get("ulisse_serve_completed_total", bucket=128) == 2
+    assert reg.get("ulisse_serve_rejected_total", bucket=128) == 1
+    assert reg.get("ulisse_serve_failed_total", bucket=128) == 1
+    snap = reg.snapshot()
+    (lat,) = snap["ulisse_serve_latency_seconds"]["series"]
+    assert lat["count"] == 2
+    m.reset()                    # local window restarts ...
+    assert m.snapshot()["total"]["dispatches"] == 0
+    assert reg.get("ulisse_serve_completed_total",   # ... registry is
+                   bucket=128) == 2                  # monotone
+
+
+# -------------------------------------------------------------------------
+# end-to-end: one served query traced admission -> dispatch -> scan
+# -------------------------------------------------------------------------
+
+def test_one_served_query_traced_end_to_end(walk_collection):
+    """The acceptance bar: a query through the serving tier produces a
+    valid Chrome trace covering admission -> queue wait -> dispatch ->
+    device scan -> merge, and metrics_text() emits parseable Prometheus
+    text with per-bucket latency histograms AND engine pruning
+    counters."""
+    from repro.core import (Collection, EnvelopeParams, QuerySpec,
+                            UlisseEngine)
+    from repro.serve import ServeConfig, UlisseServer
+
+    prev_tr = obs.set_tracer(Tracer(enabled=True))
+    prev_reg = obs.set_registry(MetricsRegistry())
+    try:
+        p = EnvelopeParams(lmin=64, lmax=128, seg_len=16, card=64,
+                           gamma=8, znorm=True)
+        engine = UlisseEngine.from_collection(
+            Collection.from_array(walk_collection), p, max_batch=2)
+        server = UlisseServer(engine, QuerySpec(k=3),
+                              ServeConfig(max_batch=2))
+        q = walk_collection[0, 5:5 + 96]
+        res = server.search(q, timeout=300)
+        text = server.metrics_text()
+        doc = json.loads(json.dumps(obs.get_tracer().chrome_trace()))
+        server.close()
+
+        assert res.stats.true_dist_computations > 0
+        names = {e["name"] for e in doc["traceEvents"]}
+        for required in ("serve.admission", "serve.queue_wait",
+                         "serve.dispatch", "device_scan", "merge"):
+            assert required in names, (required, sorted(names))
+        # the engine spans nest inside the dispatch span's interval
+        evs = {e["name"]: e for e in doc["traceEvents"]
+               if e["ph"] == "X"}
+        disp, scan = evs["serve.dispatch"], evs["device_scan"]
+        assert disp["ts"] <= scan["ts"]
+        assert scan["ts"] + scan["dur"] <= disp["ts"] + disp["dur"] + 1
+
+        assert "ulisse_serve_latency_seconds_bucket" in text
+        assert 'le="+Inf"' in text
+        assert "ulisse_serve_completed_total" in text
+        assert "ulisse_engine_true_dist_computations" in text
+        assert "ulisse_engine_envelopes_checked" in text
+        json.loads(server.metrics_json() and
+                   obs.get_registry().json_text())
+    finally:
+        obs.set_tracer(prev_tr)
+        obs.set_registry(prev_reg)
+
+
+def test_quickstart_stats_surface():
+    """examples/quickstart.py prints the unified stats after each
+    query; the fields it reads must exist on every SearchResult."""
+    from repro.core import (Collection, EnvelopeParams, QuerySpec,
+                            UlisseEngine)
+    rng = np.random.default_rng(0)
+    data = np.cumsum(rng.normal(size=(8, 128)), -1).astype(np.float32)
+    p = EnvelopeParams(lmin=48, lmax=64, gamma=8, seg_len=8, card=64,
+                       znorm=True)
+    engine = UlisseEngine.from_collection(Collection.from_array(data), p)
+    res = engine.search(data[0, 3:3 + 48], QuerySpec(k=2))
+    d = res.stats.as_dict()
+    for field in ("pruning_power", "chunks_visited", "chunks_planned",
+                  "envelopes_pruned", "true_dist_computations"):
+        assert field in d
+    assert 0.0 <= d["pruning_power"] <= 1.0
+    assert d["chunks_planned"] >= d["chunks_visited"] >= 0
