@@ -1,9 +1,8 @@
 """Benchmark driver: ``python -m benchmarks.run [--only substr]``.
 
 One function per paper table/figure (bench_paper) + kernel micros
-(bench_kernels).  Prints ``name,us_per_call,derived`` CSV; the roofline
-tables come from ``python -m benchmarks.roofline`` over the dry-run
-artifacts (results/dryrun_*.jsonl).
+(bench_kernels).  Prints ``name,us_per_call,derived`` CSV; per-program
+HLO cost summaries come from ``benchmarks.hlo_cost``.
 
 ``--json`` maintains BENCH_kernels.json as the recorded perf artifact:
 ``results`` holds the latest value per section (merged, so a --only'd

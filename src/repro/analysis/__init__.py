@@ -1,0 +1,31 @@
+"""repro.analysis — static auditor for the engine's compiled-program
+invariants (DESIGN.md §13).
+
+Two engines: the jaxpr/HLO auditor (rules R1–R5 over every program
+`UlisseEngine.audit_programs()` can emit, plus R6 module reachability)
+and the AST thread-discipline lint over `repro.serve` (T1).  Run it as
+
+    python -m repro.analysis --fail-on-new
+
+which diffs the findings against the committed
+``analysis_baseline.json`` and exits non-zero on anything new — the
+`static-audit` CI gate.  See `rules.RULE_CATALOG` for the catalog.
+"""
+from repro.analysis.rules import (Baseline, Finding, RULE_CATALOG,
+                                  diff_against_baseline, render_text)
+
+__all__ = [
+    "Baseline",
+    "Finding",
+    "RULE_CATALOG",
+    "diff_against_baseline",
+    "render_text",
+    "run_audit",
+]
+
+
+def run_audit(root, rules=None):
+    """Lazy forward to audit.run_audit (keeps `import repro.analysis`
+    free of jax so the lint rules stay usable in light tooling)."""
+    from repro.analysis.audit import run_audit as _run
+    return _run(root, rules)

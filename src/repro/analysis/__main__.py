@@ -1,0 +1,93 @@
+"""CLI: ``python -m repro.analysis [--fail-on-new] [--json] ...``.
+
+Exit status: 0 when every finding is baselined (or --fail-on-new is
+absent), 1 when new findings exist under --fail-on-new, 2 on bad
+usage.  `--write-baseline` accepts the current findings as the new
+committed baseline (reasons carry over for fingerprints that already
+had one).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis.audit import DEFAULT_RULES, run_audit
+from repro.analysis.rules import (Baseline, diff_against_baseline,
+                                  render_text)
+
+
+def _default_root() -> str:
+    # src/repro/analysis/__main__.py -> repo root; fall back to cwd
+    # for installed layouts
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    if os.path.isdir(os.path.join(root, "src", "repro")):
+        return root
+    return os.getcwd()
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static auditor: jaxpr/HLO program rules + serve "
+                    "thread-discipline lint (DESIGN.md §13).")
+    parser.add_argument("--root", default=_default_root(),
+                        help="repository root (default: autodetected)")
+    parser.add_argument("--baseline", default=None,
+                        help="baseline path (default: "
+                             "<root>/analysis_baseline.json)")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated subset, e.g. R1,R6,T1 "
+                             f"(default: {','.join(DEFAULT_RULES)})")
+    parser.add_argument("--json", action="store_true",
+                        help="machine-readable report on stdout")
+    parser.add_argument("--fail-on-new", action="store_true",
+                        help="exit 1 when findings absent from the "
+                             "baseline exist")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="accept current findings as the baseline")
+    args = parser.parse_args(argv)
+
+    rules = None
+    if args.rules:
+        rules = [r.strip().upper() for r in args.rules.split(",")
+                 if r.strip()]
+    baseline_path = args.baseline or os.path.join(
+        args.root, "analysis_baseline.json")
+
+    findings, meta = run_audit(args.root, rules)
+    baseline = Baseline.load(baseline_path)
+    if rules:
+        # a partial-rules run must not report out-of-scope baseline
+        # entries as stale
+        chosen = set(rules)
+        baseline = Baseline({fp: r for fp, r in baseline.entries.items()
+                             if fp.split("|", 1)[0] in chosen})
+    new, accepted, stale = diff_against_baseline(findings, baseline)
+
+    if args.write_baseline:
+        Baseline.write(baseline_path, findings,
+                       reasons=baseline.entries)
+        print(f"wrote {len(findings)} findings to {baseline_path}")
+        return 0
+
+    if args.json:
+        print(json.dumps({
+            "meta": meta,
+            "new": [f.as_dict() for f in new],
+            "accepted": [f.as_dict() for f in accepted],
+            "stale": stale,
+        }, indent=2))
+    else:
+        print(render_text(findings, baseline,
+                          elapsed=meta.get("elapsed_s", 0.0)))
+
+    if args.fail_on_new and new:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

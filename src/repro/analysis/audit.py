@@ -1,0 +1,329 @@
+"""The program auditor: run R1–R6 + T1 over the live codebase.
+
+Builds two tiny engines (local + distributed over every available
+device — the 4-virtual-device CI leg makes the shard_map rules real),
+pulls every compiled program family out of `engine.audit_programs()`,
+and applies:
+
+  R1  jaxpr walk + compiled-HLO corroboration (sort/collectives inside
+      data-dependent while bodies — the PR-5 deadlock class),
+  R2  dynamic host-sync counting on the device search paths (≤ 1
+      device_get, 0 numpy exports per steady-state batch),
+  R3  forward f64-taint from the hi/lo prefix-sum inputs,
+  R4  QuerySpec coverage of the declared program cache keys
+      (`engine.PROGRAM_KEY_SPECS` — perturb one field at a time, the
+      key must move or the field must be declared shape/data-only),
+  R5  cross-module constant drift (executor.STATS_COLUMNS vs the obs
+      exporter vs SearchStats vs the program's stats outvar width),
+  R6  module reachability (deadcode.py),
+  T1  serve thread-discipline lint (threads.py).
+
+Everything returns `Finding`s; main() diffs them against the committed
+`analysis_baseline.json` (rules.py) and fails CI only on NEW ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis import deadcode, jaxpr_walk, threads, transfers
+from repro.analysis.rules import Finding
+
+DEFAULT_RULES = ("R1", "R2", "R3", "R4", "R5", "R6", "T1")
+
+# tiny audit collection: big enough for non-degenerate envelopes and
+# plans, small enough that tracing + a handful of HLO compiles stay
+# far under the CI budget
+_AUDIT_PARAMS = dict(lmin=32, lmax=48, gamma=4, seg_len=8, card=64)
+_SERIES_LEN = 96
+
+
+def run_audit(root: str,
+              rules: Optional[Sequence[str]] = None
+              ) -> Tuple[List[Finding], Dict[str, object]]:
+    """(findings, meta) for the selected rules over the repo at
+    `root`."""
+    chosen = tuple(rules) if rules else DEFAULT_RULES
+    t0 = time.perf_counter()
+    findings: List[Finding] = []
+    meta: Dict[str, object] = {"rules": list(chosen)}
+    need_programs = bool({"R1", "R3", "R5"} & set(chosen))
+    need_engines = need_programs or "R2" in chosen
+    if need_engines:
+        local, dist = _tiny_engines()
+        meta["devices"] = _device_count()
+    if need_programs:
+        records = local.audit_programs() + dist.audit_programs()
+        meta["programs"] = [r["name"] for r in records]
+        for rec in records:
+            if "R1" in chosen:
+                findings.extend(jaxpr_walk.collectives_in_dynamic_loop(
+                    rec["jaxpr"], rec["name"]))
+            if "R3" in chosen:
+                findings.extend(jaxpr_walk.f64_downcasts(
+                    rec["jaxpr"], rec["name"], rec["taint_invars"]))
+        if "R1" in chosen:
+            findings.extend(_hlo_corroborate(records))
+        if "R5" in chosen:
+            findings.extend(_audit_constants(records))
+    if "R2" in chosen:
+        findings.extend(_audit_host_sync(local, dist))
+    if "R4" in chosen:
+        findings.extend(_audit_retrace_keys())
+    if "R6" in chosen:
+        findings.extend(deadcode.audit_deadcode(root))
+    if "T1" in chosen:
+        findings.extend(threads.lint_serve(root))
+    meta["elapsed_s"] = round(time.perf_counter() - t0, 2)
+    return findings, meta
+
+
+# ---------------------------------------------------------------------------
+# engines + program matrix
+# ---------------------------------------------------------------------------
+
+def _device_count() -> int:
+    import jax
+    return jax.device_count()
+
+
+def _tiny_engines():
+    import jax
+    import numpy as np
+
+    from repro.core import Collection, EnvelopeParams, UlisseEngine
+
+    rng = np.random.default_rng(0)
+    d = jax.device_count()
+    n_series = d * max(1, 4 // d)
+    data = np.cumsum(rng.normal(size=(n_series, _SERIES_LEN)), -1
+                     ).astype(np.float32)
+    p = EnvelopeParams(**_AUDIT_PARAMS)
+    local = UlisseEngine.from_collection(Collection.from_array(data), p,
+                                         max_batch=4)
+    mesh = jax.make_mesh((d,), ("data",))
+    dist = UlisseEngine.distributed(mesh, p, data, max_batch=4)
+    return local, dist
+
+
+def _hlo_corroborate(records) -> List[Finding]:
+    """R1 over optimized HLO for the distributed programs — the PR-5
+    artifact lived only there (the jaxpr was clean; XLA SPMD inserted
+    the collectives).  Local single-device programs cannot acquire
+    collectives, so they are skipped."""
+    findings: List[Finding] = []
+    for rec in records:
+        if rec["backend"] != "distributed":
+            continue
+        hlo = rec["lower"]().compile().as_text()
+        findings.extend(jaxpr_walk.hlo_while_collectives(
+            hlo, rec["name"]))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R2 — host-sync budget (dynamic steady-state counting)
+# ---------------------------------------------------------------------------
+
+def _audit_host_sync(local, dist) -> List[Finding]:
+    import numpy as np
+
+    from repro.core import QuerySpec
+
+    q = np.sin(np.linspace(0.0, 6.0, 32)).astype(np.float32)
+    paths = [
+        ("local_knn[exact]", local,
+         QuerySpec(k=3, chunk_size=16)),
+        ("local_knn[approx]", local,
+         QuerySpec(k=3, mode="approx", chunk_size=16)),
+        ("local_range", local,
+         QuerySpec(eps=0.5, range_capacity=64, chunk_size=16)),
+        ("sharded_knn[exact]", dist,
+         QuerySpec(k=3, chunk_size=16)),
+        ("sharded_range", dist,
+         QuerySpec(eps=0.5, range_capacity=64, chunk_size=16)),
+    ]
+    findings: List[Finding] = []
+    for name, engine, spec in paths:
+        for b in (1, 4):
+            gets, exports = transfers.measure_steady_state(
+                lambda engine=engine, spec=spec, b=b:
+                engine.search([q] * b, spec))
+            if gets > 1 or exports > 0:
+                findings.append(Finding(
+                    rule="R2", subject=f"{name},b{b}",
+                    code="host-sync-budget-exceeded",
+                    detail=(f"{gets} device_get + {exports} numpy "
+                            f"exports for one batch of {b} (budget: "
+                            "1 + 0) — a silent per-query host sync "
+                            "crept onto the device path")))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R4 — retrace-key coverage
+# ---------------------------------------------------------------------------
+
+def _audit_retrace_keys() -> List[Finding]:
+    from repro.core import engine as eng
+
+    fields = [f.name for f in dataclasses.fields(eng.QuerySpec)]
+    bases = {
+        "sharded_knn": eng.QuerySpec(),
+        "sharded_range": eng.QuerySpec(eps=1.0),
+        "local_scan": eng.QuerySpec(),
+        "local_range": eng.QuerySpec(eps=1.0),
+        "legacy_host_knn": eng.QuerySpec(scan_backend="host"),
+    }
+    findings: List[Finding] = []
+    for family, entry in eng.PROGRAM_KEY_SPECS.items():
+        base = bases.get(family)
+        if base is None:
+            findings.append(Finding(
+                rule="R4", subject=family, code="no-probe-spec",
+                detail=("new program family has no R4 probe base spec "
+                        "in repro.analysis.audit — add one")))
+            continue
+        keyfn, declared = entry["key"], entry["not_in_key"]
+        for name in set(declared) - set(fields):
+            findings.append(Finding(
+                rule="R4", subject=family,
+                code=f"stale-declared-field-{name}",
+                detail=(f"not_in_key declares {name!r}, which is no "
+                        "longer a QuerySpec field")))
+        for field in fields:
+            pair = _probe_pair(base, field)
+            if pair is None:
+                continue
+            a, b = pair
+            if keyfn(a) != keyfn(b):
+                continue                     # hashed: retrace happens
+            if field in declared:
+                continue                     # declared shape/data-only
+            findings.append(Finding(
+                rule="R4", subject=family,
+                code=f"unhashed-field-{field}",
+                detail=(f"QuerySpec.{field} changes without moving the "
+                        f"{family} cache key and is not declared in "
+                        "not_in_key — a stale compiled program would "
+                        "serve the new spec")))
+    return findings
+
+
+def _probe_pair(base, field):
+    """Two valid specs differing ONLY in `field` (prerequisite fix-ups
+    — e.g. dtw needs r > 0 — are applied to BOTH sides so the probe
+    isolates the field).  None if the field cannot vary."""
+    from repro.core import engine as eng
+
+    rep = dataclasses.replace
+    try:
+        if field == "measure":
+            a = rep(base, r=3)
+            return a, rep(a, measure="dtw")
+        if field == "r":
+            a = rep(base, measure="dtw", r=3)
+            return a, rep(a, r=5)
+        if field == "k":
+            return base, rep(base, k=base.k + 1)
+        if field == "eps":
+            a = base if base.eps is not None else rep(base, eps=1.0)
+            return a, rep(a, eps=float(a.eps) * 2.0)
+        if field == "mode":
+            other = "approx" if base.mode == "exact" else "exact"
+            return base, rep(base, mode=other)
+        if field == "approx_first":
+            return base, rep(base, approx_first=not base.approx_first)
+        if field == "scan_backend":
+            other = ("host" if base.scan_backend == "device"
+                     else "device")
+            return base, rep(base, scan_backend=other)
+        if field == "chunk_size":
+            return base, rep(base, chunk_size=base.chunk_size * 2)
+        if field == "verify_top":
+            return base, rep(base, verify_top=base.verify_top * 2)
+        if field == "sync_every":
+            return base, rep(base, sync_every=base.sync_every + 1)
+        if field == "max_leaves":
+            # only read when mode == "approx" (folded via _knn_budget);
+            # probe in the mode where it is live, on both sides
+            a = rep(base, mode="approx")
+            return a, rep(a, max_leaves=a.max_leaves + 1)
+        if field == "range_capacity":
+            return base, rep(base,
+                             range_capacity=base.range_capacity * 2)
+        if field == "use_paa_bounds":
+            return base, rep(base,
+                             use_paa_bounds=not base.use_paa_bounds)
+    except (ValueError, TypeError):
+        return None
+    # unknown field: probe generically so NEW QuerySpec fields are
+    # forced through the R4 contract the moment they land
+    val = getattr(base, field)
+    try:
+        if isinstance(val, bool):
+            return base, rep(base, **{field: not val})
+        if isinstance(val, int):
+            return base, rep(base, **{field: val + 1})
+        if isinstance(val, float):
+            return base, rep(base, **{field: val * 2.0})
+        if isinstance(val, str) or val is None:
+            return base, rep(base, **{field: "__r4_probe__"})
+    except (ValueError, TypeError):
+        pass
+    return None
+
+
+# ---------------------------------------------------------------------------
+# R5 — cross-module constant drift
+# ---------------------------------------------------------------------------
+
+def _audit_constants(records) -> List[Finding]:
+    import repro.obs as obs
+    from repro.core import executor
+    from repro.core.executor import SearchStats
+
+    findings: List[Finding] = []
+    if len(executor.STATS_COLUMNS) != executor.STATS_WIDTH:
+        findings.append(Finding(
+            rule="R5", subject="core.executor", code="stats-width-drift",
+            detail=(f"STATS_COLUMNS has {len(executor.STATS_COLUMNS)} "
+                    f"entries but STATS_WIDTH={executor.STATS_WIDTH}")))
+    sfields = {f.name for f in dataclasses.fields(SearchStats)}
+    for col in executor.STATS_COLUMNS:
+        if col not in sfields:
+            findings.append(Finding(
+                rule="R5", subject="core.executor",
+                code=f"stats-column-unknown-{col}",
+                detail=(f"STATS_COLUMNS entry {col!r} is not a "
+                        "SearchStats field")))
+    exported = {f for f, _ in obs._STATS_COUNTERS}
+    for col in executor.STATS_COLUMNS:
+        if col not in exported:
+            findings.append(Finding(
+                rule="R5", subject="obs",
+                code=f"exporter-missing-{col}",
+                detail=(f"device stats column {col!r} has no "
+                        "_STATS_COUNTERS entry — the exporter would "
+                        "silently drop it")))
+    for field in exported - sfields:
+        findings.append(Finding(
+            rule="R5", subject="obs",
+            code=f"exporter-unknown-{field}",
+            detail=(f"_STATS_COUNTERS exports {field!r}, which is not "
+                    "a SearchStats field (getattr default hides the "
+                    "typo)")))
+    # the compiled programs must actually carry STATS_WIDTH columns:
+    # the local families return the stats stack as their last output
+    for rec in records:
+        if rec["family"] not in ("local_scan", "local_range"):
+            continue
+        aval = rec["jaxpr"].out_avals[-1]
+        if aval.shape[-1] != executor.STATS_WIDTH:
+            findings.append(Finding(
+                rule="R5", subject=rec["name"],
+                code="program-stats-width-drift",
+                detail=(f"compiled stats output is {aval.shape}, "
+                        f"expected trailing {executor.STATS_WIDTH}")))
+    return findings

@@ -1,0 +1,165 @@
+"""Dead-code rule R6: repro modules unreachable from the live roots.
+
+Builds the module-level import graph of ``src/repro`` by parsing every
+file's AST (lazy function-body imports included — the engine defers
+most of its distributed imports) and walks reachability from:
+
+  * the ``repro`` package itself (the public API surface),
+  * declared entry-point packages (``python -m`` CLIs — launch
+    scripts and this auditor), and
+  * every repro module imported by the out-of-tree callers: tests/,
+    benchmarks/ and examples/ at the repository root.
+
+A module no root reaches is a finding: either seed scaffolding to
+delete, or a deliberate keep that belongs in the baseline with a
+reason.  String-built dynamic imports are invisible here — baseline
+those too.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Set, Tuple
+
+from repro.analysis.rules import Finding
+
+# packages whose modules are `python -m` entry points (roots even
+# though nothing imports them)
+ENTRYPOINT_PREFIXES = ("repro.launch", "repro.analysis")
+# repo-root directories scanned for out-of-tree importers
+EXTERNAL_DIRS = ("tests", "benchmarks", "examples")
+
+
+def audit_deadcode(root: str) -> List[Finding]:
+    modules = _discover_modules(os.path.join(root, "src"))
+    graph = {name: _repro_imports(path, name, is_pkg, modules)
+             for name, (path, is_pkg) in modules.items()}
+    roots: Set[str] = {"repro"}
+    roots.update(n for n in modules
+                 if n.startswith(ENTRYPOINT_PREFIXES))
+    for d in EXTERNAL_DIRS:
+        for path in _py_files(os.path.join(root, d)):
+            roots.update(_external_imports(path, modules))
+    reachable = _closure(roots, graph, modules)
+    findings = []
+    for name in sorted(set(modules) - reachable):
+        findings.append(Finding(
+            rule="R6", subject=name, code="unreachable-module",
+            detail=(f"{name} ({os.path.relpath(modules[name][0], root)}) "
+                    "is imported by nothing reachable from the public "
+                    "API, entry points, tests, benchmarks or examples — "
+                    "delete it or baseline it with a reason")))
+    return findings
+
+
+def _discover_modules(src: str) -> Dict[str, Tuple[str, bool]]:
+    """module name -> (path, is_package) for everything under
+    src/repro."""
+    out: Dict[str, Tuple[str, bool]] = {}
+    base = os.path.join(src, "repro")
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames[:] = [d for d in dirnames
+                       if d != "__pycache__"]
+        rel = os.path.relpath(dirpath, src)
+        pkg = rel.replace(os.sep, ".")
+        for fname in filenames:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            if fname == "__init__.py":
+                out[pkg] = (path, True)
+            else:
+                out[f"{pkg}.{fname[:-3]}"] = (path, False)
+    return out
+
+
+def _py_files(dirpath: str) -> Iterable[str]:
+    if not os.path.isdir(dirpath):
+        return
+    for sub, dirnames, filenames in os.walk(dirpath):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fname in filenames:
+            if fname.endswith(".py"):
+                yield os.path.join(sub, fname)
+
+
+def _parse(path: str) -> ast.Module:
+    with open(path) as f:
+        return ast.parse(f.read(), filename=path)
+
+
+def _resolve_from(node: ast.ImportFrom, module: str,
+                  is_pkg: bool) -> str:
+    """Absolute module path an ImportFrom names (before alias join)."""
+    if node.level == 0:
+        return node.module or ""
+    pkg_parts = module.split(".")
+    if not is_pkg:
+        pkg_parts = pkg_parts[:-1]
+    pkg_parts = pkg_parts[:len(pkg_parts) - (node.level - 1)]
+    base = ".".join(pkg_parts)
+    return f"{base}.{node.module}" if node.module else base
+
+
+def _edges_from_names(base: str, names, modules) -> Set[str]:
+    edges: Set[str] = set()
+    if base in modules:
+        edges.add(base)
+    for alias in names:
+        cand = f"{base}.{alias.name}" if base else alias.name
+        if cand in modules:
+            edges.add(cand)
+    return edges
+
+
+def _repro_imports(path: str, module: str, is_pkg: bool,
+                   modules) -> Set[str]:
+    edges: Set[str] = set()
+    for node in ast.walk(_parse(path)):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name in modules:
+                    edges.add(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            base = _resolve_from(node, module, is_pkg)
+            if base.split(".")[0] == "repro" or node.level:
+                edges |= _edges_from_names(base, node.names, modules)
+    edges.discard(module)
+    return edges
+
+
+def _external_imports(path: str, modules) -> Set[str]:
+    roots: Set[str] = set()
+    try:
+        tree = _parse(path)
+    except SyntaxError:
+        return roots
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name in modules:
+                    roots.add(alias.name)
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.module.split(".")[0] == "repro":
+            roots |= _edges_from_names(node.module, node.names, modules)
+    return roots
+
+
+def _closure(roots: Set[str], graph: Dict[str, Set[str]],
+             modules) -> Set[str]:
+    """Transitive closure; importing a submodule executes its parent
+    packages, so parents join the closure with it."""
+    seen: Set[str] = set()
+    stack = [r for r in roots if r in modules]
+    while stack:
+        name = stack.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        parts = name.split(".")
+        for i in range(1, len(parts)):
+            parent = ".".join(parts[:i])
+            if parent in modules and parent not in seen:
+                stack.append(parent)
+        stack.extend(graph.get(name, ()) - seen)
+    return seen

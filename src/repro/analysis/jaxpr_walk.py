@@ -1,0 +1,297 @@
+"""Context-tracking jaxpr walker + the program-shape rules (R1, R3).
+
+The walker recurses into every sub-jaxpr an equation carries (pjit
+bodies, while cond/body, scan/cond branches, shard_map regions, custom
+derivative closures — anything whose params hold a Jaxpr/ClosedJaxpr),
+threading a `Ctx` that records whether the current equation sits
+
+  * under a `shard_map` region (collectives are *meaningful* there),
+  * inside a `while` body whose trip count is data-dependent.
+
+R1 (`collective-in-dynamic-loop`) is the mechanized PR-5 lesson: XLA's
+SPMD partitioner canonicalizes `sort` inside a while body into
+cross-device all-reduces even in a manual shard_map region, and any
+collective inside a data-dependent loop only completes if EVERY shard
+runs the same trip count — which a bsf-pruned scan does not.  `top_k`
+is exempt: it lowers to a fixed-size reduction, not a general sort,
+and the scan cores rely on it (`_pool_merge`).
+
+R3 (`silent-f64-downcast`) is forward taint from designated inputs
+(the hi/lo prefix-sum operands): any `convert_element_type` narrowing
+a tainted float64 value is a finding — the float64-split accuracy work
+of PR 4 dies silently in exactly one of these.
+
+Both rules also run over compiled-HLO text (`hlo_while_collectives`)
+where the caller provides it: the jaxpr rule catches the hazard the
+*program* writes, the HLO scan catches the one the *compiler inserts*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.rules import Finding
+
+# jax.lax collective primitives that synchronize across mesh axes.
+COLLECTIVE_PRIMS = frozenset({
+    "all_gather", "all_to_all", "ppermute", "pmax", "pmin", "psum",
+    "psum2", "reduce_scatter", "pgather", "all_gather_invariant",
+})
+# primitives XLA SPMD rewrites into collectives inside sharded regions
+SORT_PRIMS = frozenset({"sort"})
+# explicitly allowed inside while bodies (fixed-size, shard-local)
+LOOP_SAFE_PRIMS = frozenset({"top_k", "approx_top_k"})
+
+# params that carry sub-jaxprs, in every jax version this repo spans
+_SUBJAXPR_KEYS = ("jaxpr", "call_jaxpr", "cond_jaxpr", "body_jaxpr",
+                  "branches", "fun_jaxpr")
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    under_shard_map: bool = False
+    in_while_body: bool = False
+    path: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class PrimSite:
+    """One primitive occurrence with its structural context."""
+    prim: str
+    ctx: Ctx
+    eqn: object = dataclasses.field(compare=False, repr=False,
+                                    default=None)
+
+
+def _sub_jaxprs(eqn) -> List[Tuple[str, object]]:
+    """(param_key, Jaxpr) pairs for every sub-jaxpr of an equation."""
+    out: List[Tuple[str, object]] = []
+    for key in _SUBJAXPR_KEYS:
+        if key not in eqn.params:
+            continue
+        val = eqn.params[key]
+        items = val if isinstance(val, (list, tuple)) else [val]
+        for item in items:
+            inner = getattr(item, "jaxpr", item)   # ClosedJaxpr -> Jaxpr
+            if hasattr(inner, "eqns"):
+                out.append((key, inner))
+    return out
+
+
+def walk(jaxpr, ctx: Ctx = Ctx()) -> Iterable[PrimSite]:
+    """Yield every primitive site in `jaxpr` (recursively) with context."""
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        yield PrimSite(name, ctx, eqn)
+        for key, sub in _sub_jaxprs(eqn):
+            sub_ctx = Ctx(
+                under_shard_map=(ctx.under_shard_map
+                                 or name == "shard_map"),
+                # cond_jaxpr runs per-iteration too, but only the body
+                # performs real work; keep the flag for both so a
+                # collective smuggled into the cond is also caught
+                in_while_body=(ctx.in_while_body or name == "while"),
+                path=ctx.path + (f"{name}.{key}",))
+            yield from walk(sub, sub_ctx)
+
+
+# ---------------------------------------------------------------------------
+# R1 — collective-in-dynamic-loop
+# ---------------------------------------------------------------------------
+
+def collectives_in_dynamic_loop(jaxpr, program: str) -> List[Finding]:
+    """R1 over one ClosedJaxpr/Jaxpr.
+
+    Flags sort + collective primitives that sit inside a while body
+    reachable under shard_map.  Outside shard_map a `sort` in a while
+    body is legal but still flagged at lower severity via the same
+    code — the program may later be wrapped in shard_map (exactly how
+    the PR-5 bug entered), so the finding asks for either the
+    mask-cumsum pack (`executor._survivors_first`) or a baseline entry.
+    """
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    findings: List[Finding] = []
+    seen: Set[str] = set()
+    for site in walk(inner):
+        if not site.ctx.in_while_body:
+            continue
+        if site.prim in LOOP_SAFE_PRIMS:
+            continue
+        if site.prim in SORT_PRIMS:
+            code = ("sort-in-while-under-shard_map"
+                    if site.ctx.under_shard_map else "sort-in-while")
+        elif site.prim in COLLECTIVE_PRIMS and site.ctx.under_shard_map:
+            code = f"{site.prim}-in-while-under-shard_map"
+        else:
+            continue
+        if code in seen:        # one finding per (program, class)
+            continue
+        seen.add(code)
+        findings.append(Finding(
+            rule="R1", subject=program, code=code,
+            detail=(f"primitive `{site.prim}` at "
+                    f"{'/'.join(site.ctx.path) or '<top>'} runs inside "
+                    "a data-dependent while body"
+                    + (" under shard_map — XLA SPMD turns this into "
+                       "cross-device synchronization that deadlocks "
+                       "when shards run different trip counts"
+                       if site.ctx.under_shard_map else
+                       "; if this program is ever wrapped in shard_map "
+                       "it becomes the PR-5 deadlock — prefer the "
+                       "mask-cumsum pack (executor._survivors_first)"))))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R3 — silent-f64-downcast (forward taint from designated invars)
+# ---------------------------------------------------------------------------
+
+_NARROW = {"float32", "bfloat16", "float16"}
+
+
+def f64_downcasts(jaxpr, program: str,
+                  taint_invars: Optional[Sequence[int]] = None
+                  ) -> List[Finding]:
+    """R3: flag convert_element_type f64->narrow on tainted values.
+
+    `taint_invars` — indices into the top-level invars marking the
+    hi/lo prefix-sum inputs; None taints every invar (strictest).
+    Taint propagates forward: any equation consuming a tainted var
+    taints all its outputs; sub-jaxprs inherit taint positionally from
+    the equation's operands (trailing-aligned, so leading consts of
+    call-like primitives stay untainted).
+    """
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    if taint_invars is None:
+        tainted = set(inner.invars)
+    else:
+        tainted = {inner.invars[i] for i in taint_invars
+                   if i < len(inner.invars)}
+    return _taint_walk(inner, tainted, program, ())
+
+
+def _taint_walk(jaxpr, tainted: set, program: str,
+                path: Tuple[str, ...]) -> List[Finding]:
+    findings: List[Finding] = []
+    live = set(tainted)
+    for eqn in jaxpr.eqns:
+        in_tainted = [v for v in eqn.invars
+                      if not isinstance(v, _literal_types()) and v in live]
+        if eqn.primitive.name == "convert_element_type" and in_tainted:
+            src = eqn.invars[0]
+            src_dtype = str(getattr(src.aval, "dtype", ""))
+            dst_dtype = str(eqn.params.get("new_dtype", ""))
+            if src_dtype == "float64" and dst_dtype in _NARROW:
+                findings.append(Finding(
+                    rule="R3", subject=program,
+                    code=f"f64-downcast-{dst_dtype}",
+                    detail=(f"convert_element_type float64->{dst_dtype} "
+                            f"at {'/'.join(path) or '<top>'} on a value "
+                            "flowing from the hi/lo prefix-sum inputs — "
+                            "the float64-split accuracy guarantee is "
+                            "silently lost")))
+        subs = _sub_jaxprs(eqn)
+        if in_tainted:
+            for key, sub in subs:
+                # trailing-aligned positional taint hand-off: the last
+                # len(sub.invars) operands of the eqn feed the
+                # sub-jaxpr's invars (call-like primitives prepend
+                # consts/carry bookkeeping before them)
+                n = len(sub.invars)
+                operands = list(eqn.invars)[-n:] if n else []
+                sub_tainted = {
+                    sv for sv, ov in zip(sub.invars[-len(operands):],
+                                         operands)
+                    if not isinstance(ov, _literal_types())
+                    and ov in live}
+                findings.extend(_taint_walk(
+                    sub, sub_tainted, program,
+                    path + (f"{eqn.primitive.name}.{key}",)))
+            live.update(eqn.outvars)
+        else:
+            for key, sub in subs:
+                findings.extend(_taint_walk(sub, set(), program,
+                                            path + (key,)))
+    return findings
+
+
+def _literal_types():
+    from jax._src.core import Literal
+    return (Literal,)
+
+
+# ---------------------------------------------------------------------------
+# compiled-HLO corroboration: collectives inside while bodies
+# ---------------------------------------------------------------------------
+
+_HLO_COLLECTIVES = ("all-reduce", "all-gather", "all-to-all",
+                    "collective-permute", "reduce-scatter",
+                    "collective-broadcast")
+# while state is a tuple, so the result type between `=` and `while(`
+# contains spaces/parens — match anything up to the keyword
+_WHILE_RE = re.compile(
+    r"=[^\n]*?\bwhile\([^\n]*?body=\s*%?([\w.\-]+)")
+
+
+def hlo_while_collectives(hlo_text: str, program: str) -> List[Finding]:
+    """R1 over compiled HLO: collectives the COMPILER placed inside a
+    while body (the actual PR-5 failure artifact — the jaxpr was clean,
+    the optimized module was not).  Parses computation blocks, maps
+    while instructions to their `body=` computations, and scans those
+    blocks (transitively, via called computations) for collective ops.
+    """
+    blocks = _computation_blocks(hlo_text)
+    bodies = set(_WHILE_RE.findall(hlo_text))
+    findings: List[Finding] = []
+    seen: Set[str] = set()
+    visited: Set[str] = set()
+    stack = list(bodies)
+    while stack:
+        name = stack.pop()
+        if name in visited or name not in blocks:
+            continue
+        visited.add(name)
+        body = blocks[name]
+        for op in _HLO_COLLECTIVES:
+            if (op + "(") in body or (op + "-start(") in body:
+                code = f"hlo-{op}-in-while"
+                if code not in seen:
+                    seen.add(code)
+                    findings.append(Finding(
+                        rule="R1", subject=program, code=code,
+                        detail=(f"compiled HLO places `{op}` inside "
+                                f"while body `{name}` — cross-device "
+                                "sync on a data-dependent trip count")))
+        # follow calls/fusions into nested computations
+        for callee in re.findall(
+                r"(?:to_apply|calls|body|condition)=\s*%?([\w.\-]+)",
+                body):
+            stack.append(callee)
+    return findings
+
+
+def _computation_blocks(hlo_text: str) -> dict:
+    """computation name -> its text block, from HLO module text."""
+    blocks = {}
+    name = None
+    buf: List[str] = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # params may nest parens (tuple-typed state), so `.*` not
+        # `[^)]*`; anchored to the trailing `{` keeps it unambiguous
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*"
+                     r"(?:->\s*[^{]*)?\{\s*$", stripped)
+        if m and not stripped.startswith(("ROOT", "//")):
+            if name is not None:
+                blocks[name] = "\n".join(buf)
+            name, buf = m.group(1), []
+        elif stripped == "}":
+            if name is not None:
+                blocks[name] = "\n".join(buf)
+                name, buf = None, []
+        elif name is not None:
+            buf.append(line)
+    if name is not None:
+        blocks[name] = "\n".join(buf)
+    return blocks

@@ -1,0 +1,135 @@
+"""Finding/report plumbing for the static auditor (DESIGN.md §13).
+
+A `Finding` is one violation of one rule, keyed by a *stable
+fingerprint* — `rule|subject|code` — chosen so that re-running the
+auditor on an unchanged tree reproduces the same fingerprints:
+
+  * `rule`    — R1..R6 / T1.. (thread lint) rule id,
+  * `subject` — the audited unit (program name, `module`, or
+                `file:Class.attr`) — never a line number, so edits
+                above a finding do not churn the baseline,
+  * `code`    — a short machine-readable violation class
+                (e.g. ``sort-in-while``), with free-form human `detail`
+                kept OUT of the fingerprint.
+
+`Baseline` is the committed acceptance file (`analysis_baseline.json`):
+known findings listed with a `reason` string.  `diff_against_baseline`
+splits a run's findings into (new, accepted, stale) — CI fails on
+`new`, and `stale` entries (baselined findings that no longer occur)
+are reported so the baseline never accretes dead acceptances.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# rule id -> one-line rationale (the catalog DESIGN.md §13 mirrors)
+RULE_CATALOG = {
+    "R1": "collective-in-dynamic-loop: sort/all_gather/ppermute/psum-class "
+          "primitives inside a while body reachable under shard_map "
+          "deadlock on data-dependent trip counts (the PR-5 class)",
+    "R2": "host-sync-budget: device search paths promise ONE host "
+          "transfer per same-length batch; extra device_get/__array__ "
+          "calls are silent serialization",
+    "R3": "silent-f64-downcast: values flowing from the hi/lo prefix-sum "
+          "inputs must never pass convert_element_type f64->f32",
+    "R4": "retrace-key-coverage: every trace-relevant QuerySpec field "
+          "must reach the compiled-program cache key, or be declared "
+          "shape/data-only",
+    "R5": "cross-module-constant-drift: shared literals (STATS_WIDTH, "
+          "sharded index schema) must agree across modules",
+    "R6": "dead-code: repro modules unreachable from the public API, "
+          "engine, launch scripts, benchmarks, and tests",
+    "T1": "thread-discipline: UlisseServer/ServeMetrics attributes may "
+          "only be written by their declared threads, under the lock "
+          "they are declared to share",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str            # "R1".."R6" / "T1"
+    subject: str         # program name / module / file:Class.attr
+    code: str            # stable violation class
+    detail: str          # human-readable description (not fingerprinted)
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}|{self.subject}|{self.code}"
+
+    def as_dict(self) -> dict:
+        return {"rule": self.rule, "subject": self.subject,
+                "code": self.code, "detail": self.detail,
+                "fingerprint": self.fingerprint}
+
+
+class Baseline:
+    """The committed acceptance list (fingerprint -> reason)."""
+
+    def __init__(self, entries: Optional[Dict[str, str]] = None):
+        self.entries: Dict[str, str] = dict(entries or {})
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        if not os.path.exists(path):
+            return cls()
+        with open(path) as f:
+            doc = json.load(f)
+        return cls({e["fingerprint"]: e.get("reason", "")
+                    for e in doc.get("findings", [])})
+
+    @staticmethod
+    def write(path: str, findings: Sequence[Finding],
+              reasons: Optional[Dict[str, str]] = None) -> None:
+        reasons = reasons or {}
+        doc = {
+            "version": 1,
+            "findings": [
+                {"fingerprint": f.fingerprint,
+                 "rule": f.rule,
+                 "subject": f.subject,
+                 "code": f.code,
+                 "reason": reasons.get(f.fingerprint, f.detail)}
+                for f in sorted(findings, key=lambda f: f.fingerprint)
+            ],
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=False)
+            f.write("\n")
+        os.replace(tmp, path)
+
+
+def diff_against_baseline(
+        findings: Sequence[Finding], baseline: Baseline
+) -> Tuple[List[Finding], List[Finding], List[str]]:
+    """Split into (new, accepted, stale-fingerprints)."""
+    seen = set()
+    new: List[Finding] = []
+    accepted: List[Finding] = []
+    for f in findings:
+        seen.add(f.fingerprint)
+        (accepted if f.fingerprint in baseline.entries else new).append(f)
+    stale = sorted(fp for fp in baseline.entries if fp not in seen)
+    return new, accepted, stale
+
+
+def render_text(findings: Sequence[Finding], baseline: Baseline,
+                elapsed: float = 0.0) -> str:
+    new, accepted, stale = diff_against_baseline(findings, baseline)
+    lines: List[str] = []
+    for f in new:
+        lines.append(f"NEW      {f.rule} {f.subject}: {f.code} — {f.detail}")
+    for f in accepted:
+        reason = baseline.entries.get(f.fingerprint, "")
+        lines.append(f"accepted {f.rule} {f.subject}: {f.code}"
+                     + (f"  [{reason}]" if reason else ""))
+    for fp in stale:
+        lines.append(f"stale    {fp} (baselined but no longer found — "
+                     "prune it from analysis_baseline.json)")
+    lines.append(f"{len(new)} new, {len(accepted)} accepted, "
+                 f"{len(stale)} stale findings"
+                 + (f" in {elapsed:.1f}s" if elapsed else ""))
+    return "\n".join(lines)

@@ -1,0 +1,230 @@
+"""Thread-discipline lint over `repro.serve` (rule T1, DESIGN.md §13).
+
+The serving tier's correctness rests on a writer discipline no type
+system sees: client threads admit work, ONE dispatcher thread runs the
+engine and applies writer ops, and the two only share state under
+`self._cond` / `self._lock`.  The discipline is declared in the source
+as two module-level literal dicts (see serve/server.py):
+
+  THREAD_METHODS  "Class.method" -> role, where role is "client",
+                  "dispatcher" or "any", optionally "+locked" (the
+                  method's contract is that the lock is already held).
+  THREAD_ATTRS    "Class.attr" -> tuple of roles allowed to write the
+                  attribute outside __init__; () = frozen after
+                  construction; an extra "nolock" marker waives the
+                  lock requirement for externally-synchronized
+                  hand-offs (comment in the source must say how).
+
+This module parses the declarations with `ast.literal_eval` (they must
+stay pure literals) and checks every method body:
+
+  * a write to an undeclared attribute, or from an undeclared method,
+    is a finding — new state must pick a thread before it lands;
+  * a write from a role the attribute does not allow is a
+    cross-thread-write finding (the injected-bug class the tests pin);
+  * a write to an attribute shared by more than one thread must sit
+    lexically inside `with self.<lock>:` (attr name containing "lock"
+    or "cond"), come from a "+locked" method, or be marked "nolock".
+
+Writes = attribute rebinds, augmented assigns, and container stores
+through a self attribute (``self._buckets[b] = ...``).  Method calls
+that mutate (`deque.append`) are invisible to this lint — the rule
+catches the shared-state *topology*, the runtime tests catch the rest.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.rules import Finding
+
+_ROLES = ("client", "dispatcher", "any")
+
+
+def lint_serve(root: str) -> List[Finding]:
+    """Run the lint over every module of the serve package."""
+    serve_dir = os.path.join(root, "src", "repro", "serve")
+    findings: List[Finding] = []
+    for fname in sorted(os.listdir(serve_dir)):
+        if not fname.endswith(".py"):
+            continue
+        path = os.path.join(serve_dir, fname)
+        with open(path) as f:
+            src = f.read()
+        findings.extend(lint_source(src, f"serve/{fname}"))
+    return findings
+
+
+def lint_source(source: str, filename: str) -> List[Finding]:
+    """Lint one module's source text (filename keys the fingerprints)."""
+    tree = ast.parse(source)
+    methods, attrs = _declarations(tree)
+    findings: List[Finding] = []
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef):
+            findings.extend(_lint_class(node, methods, attrs, filename))
+    return findings
+
+
+def _declarations(tree: ast.Module) -> Tuple[Dict[str, str],
+                                             Dict[str, tuple]]:
+    methods: Dict[str, str] = {}
+    attrs: Dict[str, tuple] = {}
+    for node in tree.body:
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        target = node.targets[0]
+        if not isinstance(target, ast.Name):
+            continue
+        if target.id not in ("THREAD_METHODS", "THREAD_ATTRS"):
+            continue
+        try:
+            value = ast.literal_eval(node.value)
+        except ValueError as e:
+            raise ValueError(
+                f"{target.id} must be a pure literal dict "
+                f"(ast.literal_eval failed: {e})") from e
+        if target.id == "THREAD_METHODS":
+            methods.update(value)
+        else:
+            attrs.update(value)
+    return methods, attrs
+
+
+def _lint_class(cls: ast.ClassDef, methods: Dict[str, str],
+                attrs: Dict[str, tuple], filename: str) -> List[Finding]:
+    declared = any(key.split(".")[0] == cls.name
+                   for key in list(methods) + list(attrs))
+    findings: List[Finding] = []
+    for fn in cls.body:
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if fn.name == "__init__":
+            continue
+        writes = _self_writes(fn)
+        if not writes:
+            continue
+        subject = f"{filename}:{cls.name}.{fn.name}"
+        if not declared:
+            findings.append(Finding(
+                rule="T1", subject=f"{filename}:{cls.name}",
+                code="undeclared-class",
+                detail=(f"class {cls.name} mutates self attributes "
+                        "outside __init__ but appears in neither "
+                        "THREAD_METHODS nor THREAD_ATTRS — declare its "
+                        "writer threads")))
+            break
+        role_spec = methods.get(f"{cls.name}.{fn.name}")
+        if role_spec is None:
+            findings.append(Finding(
+                rule="T1", subject=subject, code="undeclared-method",
+                detail=(f"{fn.name} writes "
+                        f"{sorted({w[0] for w in writes})} but has no "
+                        "THREAD_METHODS role — say which thread runs "
+                        "it")))
+            continue
+        role, _, flag = role_spec.partition("+")
+        locked_method = flag == "locked"
+        if role not in _ROLES:
+            findings.append(Finding(
+                rule="T1", subject=subject, code="bad-role",
+                detail=f"unknown THREAD_METHODS role {role_spec!r}"))
+            continue
+        for attr, lineno, guarded in writes:
+            key = f"{cls.name}.{attr}"
+            spec = attrs.get(key)
+            if spec is None:
+                findings.append(Finding(
+                    rule="T1", subject=subject,
+                    code=f"undeclared-attr-{attr}",
+                    detail=(f"write to undeclared attribute "
+                            f"self.{attr} (line {lineno}) — add it to "
+                            "THREAD_ATTRS with its writer roles")))
+                continue
+            allowed = [r for r in spec if r in _ROLES]
+            nolock = "nolock" in spec
+            if not allowed:
+                findings.append(Finding(
+                    rule="T1", subject=subject,
+                    code=f"frozen-attr-write-{attr}",
+                    detail=(f"self.{attr} is declared frozen after "
+                            f"__init__ but written at line {lineno}")))
+                continue
+            if role not in allowed and "any" not in allowed:
+                findings.append(Finding(
+                    rule="T1", subject=subject,
+                    code=f"cross-thread-write-{attr}",
+                    detail=(f"self.{attr} (writers: {allowed}) written "
+                            f"from a {role!r}-role method at line "
+                            f"{lineno} — a data race unless the roles "
+                            "are re-declared")))
+                continue
+            multi = ("any" in allowed
+                     or len(set(allowed) & {"client", "dispatcher"}) > 1)
+            if multi and not (nolock or locked_method or guarded):
+                findings.append(Finding(
+                    rule="T1", subject=subject,
+                    code=f"unguarded-write-{attr}",
+                    detail=(f"self.{attr} is shared by threads "
+                            f"{allowed} but written at line {lineno} "
+                            "outside a `with self.<lock>:` block")))
+    return findings
+
+
+def _self_writes(fn: ast.AST) -> List[Tuple[str, int, bool]]:
+    """(attr, lineno, lexically-under-self-lock) for every self-attr
+    store in the function body (nested defs included — they run on the
+    defining method's thread unless handed off, which the serve tier
+    never does)."""
+    writes: List[Tuple[str, int, bool]] = []
+
+    def visit(node: ast.AST, guarded: bool) -> None:
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            inner = guarded or any(_is_self_lock(item.context_expr)
+                                   for item in node.items)
+            for item in node.items:
+                visit(item, guarded)
+            for child in node.body:
+                visit(child, inner)
+            return
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            if isinstance(node, ast.AnnAssign) and node.value is None:
+                return      # bare annotation, not a store
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                for attr in _target_attrs(t):
+                    writes.append((attr, node.lineno, guarded))
+        for child in ast.iter_child_nodes(node):
+            visit(child, guarded)
+
+    for stmt in fn.body:
+        visit(stmt, False)
+    return writes
+
+
+def _target_attrs(target: ast.AST) -> List[str]:
+    """self-attribute names a store target writes through."""
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for elt in target.elts:
+            out.extend(_target_attrs(elt))
+        return out
+    if isinstance(target, ast.Starred):
+        return _target_attrs(target.value)
+    node = target
+    if isinstance(node, ast.Subscript):   # self._buckets[b] = ...
+        node = node.value
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return [node.attr]
+    return []
+
+
+def _is_self_lock(expr: Optional[ast.AST]) -> bool:
+    return (isinstance(expr, ast.Attribute)
+            and isinstance(expr.value, ast.Name)
+            and expr.value.id == "self"
+            and ("lock" in expr.attr or "cond" in expr.attr))

@@ -1,0 +1,139 @@
+"""Device->host transfer counting for the host-sync-budget rule (R2).
+
+The engine's device paths promise ONE host synchronization per
+same-length query batch (DESIGN.md §8–§10).  There is no static marker
+for "this line syncs" — `jax.device_get`, `np.asarray(device_array)`,
+`float(device_scalar)`, and `.block_until_ready()` readbacks all
+serialize the pipeline — so the rule counts them dynamically: run the
+search once to absorb compiles and warm caches, then count transfers
+on an identical second call.
+
+`TransferCounter` patches the two chokepoints every readback in this
+codebase funnels through:
+
+  * ``jax.device_get`` (the engine's explicit batch sync),
+  * ``np.asarray`` / ``np.array`` handed a device array (numpy imports
+    it via the C buffer protocol, so the *functions* are patched —
+    the class-level ``__array__`` hook never fires for them), and
+  * ``jax.Array.__array__`` (what ``float()`` / ``int()`` readbacks of
+    device scalars go through).
+
+A shared suppression flag keeps the count semantic: one ``device_get``
+of a whole pytree is ONE sync (its per-leaf materialization is the
+same transfer), and one ``np.array`` is one export even though it also
+calls ``__array__`` internally.  Out of scope: ``memoryview``/
+``tolist()`` directly on a device array — not idioms this codebase
+uses.
+
+Patching is process-global and not reentrant — the auditor and tests
+use it around short single-threaded sections only.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, List, Tuple
+
+
+class TransferCounter:
+    """Counts device->host readbacks while installed."""
+
+    def __init__(self) -> None:
+        self.device_gets = 0
+        self.array_exports = 0
+        self.sites: List[str] = []
+
+    @property
+    def total(self) -> int:
+        return self.device_gets + self.array_exports
+
+    def reset(self) -> None:
+        self.device_gets = 0
+        self.array_exports = 0
+        self.sites = []
+
+
+def _array_impl_class():
+    """The concrete device-array class whose __array__ is the numpy
+    export chokepoint (jax internal; probed defensively)."""
+    import jax
+    try:
+        from jax._src.array import ArrayImpl
+        return ArrayImpl
+    except Exception:                       # pragma: no cover
+        return type(jax.numpy.zeros(()))
+
+
+@contextlib.contextmanager
+def count_transfers() -> Iterator[TransferCounter]:
+    """Install the counter; restores the originals on exit."""
+    import jax
+
+    import numpy as np
+
+    counter = TransferCounter()
+    orig_device_get = jax.device_get
+    cls = _array_impl_class()
+    orig_array = cls.__array__
+    orig_np_asarray = np.asarray
+    orig_np_array = np.array
+
+    suppressed = [False]
+
+    def _counted(bump):
+        # count once at the outermost chokepoint; inner hooks (the
+        # per-leaf __array__ calls of device_get, the __array__ a
+        # patched np.array triggers) are the SAME transfer
+        if not suppressed[0]:
+            bump()
+            suppressed[0] = True
+            return True
+        return False
+
+    def counting_device_get(x):
+        mine = _counted(lambda: setattr(
+            counter, "device_gets", counter.device_gets + 1))
+        try:
+            return orig_device_get(x)
+        finally:
+            if mine:
+                suppressed[0] = False
+
+    def _counting_np(orig):
+        def wrapper(obj, *args, **kwargs):
+            mine = isinstance(obj, cls) and _counted(lambda: setattr(
+                counter, "array_exports", counter.array_exports + 1))
+            try:
+                return orig(obj, *args, **kwargs)
+            finally:
+                if mine:
+                    suppressed[0] = False
+        return wrapper
+
+    def counting_array(self, *args, **kwargs):
+        if not suppressed[0]:
+            counter.array_exports += 1
+        return orig_array(self, *args, **kwargs)
+
+    jax.device_get = counting_device_get
+    np.asarray = _counting_np(orig_np_asarray)
+    np.array = _counting_np(orig_np_array)
+    cls.__array__ = counting_array
+    try:
+        yield counter
+    finally:
+        jax.device_get = orig_device_get
+        np.asarray = orig_np_asarray
+        np.array = orig_np_array
+        cls.__array__ = orig_array
+
+
+def measure_steady_state(fn, *, warmups: int = 1) -> Tuple[int, int]:
+    """(device_gets, array_exports) of `fn()` after `warmups` unmeasured
+    calls — compile-time constant folding and one-time host caches
+    (e.g. the engine's gathered host data copy) are excluded, exactly
+    as a steady-state serving workload would see."""
+    for _ in range(warmups):
+        fn()
+    with count_transfers() as counter:
+        fn()
+    return counter.device_gets, counter.array_exports

@@ -131,6 +131,116 @@ def _pow2_bucket(qlen: int, cap: int) -> int:
     return planner.length_bucket(qlen, cap)
 
 
+def _knn_budget(spec: "QuerySpec") -> int:
+    """Per-shard approx leaf budget folded into the sharded knn program
+    (0 = exact: the pruned scan runs to convergence)."""
+    return spec.max_leaves if spec.mode == "approx" else 0
+
+
+# --------------------------------------------------------------------------
+# R4 source of truth (repro.analysis retrace-key-coverage): one entry per
+# compiled-program family.  `key` is THE cache-key constructor the engine
+# itself uses (the auditor calls the same callable, so declaration cannot
+# drift from behavior); `not_in_key` declares, with a reason, every
+# QuerySpec field deliberately absent from the key — a field in neither
+# is a finding, which is exactly what happens when someone adds a
+# trace-relevant QuerySpec field and forgets to hash it.
+# --------------------------------------------------------------------------
+
+PROGRAM_KEY_SPECS = {
+    "sharded_knn": {
+        "key": lambda s: ("knn", s.k, s.measure, s.r, s.chunk_size,
+                          s.sync_every, _knn_budget(s), s.use_paa_bounds),
+        "not_in_key": {
+            "eps": "selects the range family instead of this one",
+            "approx_first": "local-backend composition knob; the "
+                            "sharded scan always seeds in-graph",
+            "scan_backend": "selects whether this family compiles at all",
+            "verify_top": "legacy host-backend escalation knob",
+            "range_capacity": "range family only",
+            # mode/max_leaves ARE in the key, folded through the
+            # _knn_budget extra
+        },
+    },
+    "sharded_range": {
+        "key": lambda s: ("range", s.range_capacity, s.measure, s.r,
+                          s.chunk_size, s.use_paa_bounds),
+        "not_in_key": {
+            "k": "a range query returns every hit, k is ignored",
+            "eps": "runtime operand (the (B,) eps2 array), not a trace "
+                   "constant",
+            "mode": "range queries have no exact/approx split",
+            "approx_first": "range queries run no approximate pass",
+            "scan_backend": "selects whether this family compiles at all",
+            "verify_top": "legacy host-backend escalation knob",
+            "sync_every": "the eps cut never moves, so the range scan "
+                          "broadcasts no global bsf",
+            "max_leaves": "approx-descent knob, knn family only",
+        },
+    },
+    "local_scan": {
+        # the real cache is executor._device_scan_program's lru_cache on
+        # (k, g, chunk, znorm, measure, r, sb, interpret); the
+        # spec-derived components are exactly these
+        "key": lambda s: ("local_scan", s.k, s.measure, s.r,
+                          s.chunk_size),
+        "not_in_key": {
+            "eps": "selects the range family instead of this one",
+            "mode": "selects program composition (approx stage alone vs "
+                    "seeded scan); each constituent is keyed by its own "
+                    "static chunk",
+            "approx_first": "composition knob — adds/removes the "
+                            "leaf-pack stage, never retraces the core",
+            "scan_backend": "selects whether this family compiles at all",
+            "verify_top": "legacy host-backend escalation knob",
+            "sync_every": "sharded scan only",
+            "max_leaves": "shapes the leaf pack (n_pad); jit retraces "
+                          "on operand shape, not via the key",
+            "range_capacity": "range family only",
+            "use_paa_bounds": "changes LB operand values only — same "
+                              "program, different data",
+        },
+    },
+    "local_range": {
+        "key": lambda s: ("local_range", s.range_capacity, s.measure,
+                          s.r, s.chunk_size),
+        "not_in_key": {
+            "k": "a range query returns every hit, k is ignored",
+            "eps": "runtime operand (the (B,) eps2 array), not a trace "
+                   "constant",
+            "mode": "range queries have no exact/approx split",
+            "approx_first": "range queries run no approximate pass",
+            "scan_backend": "selects whether this family compiles at all",
+            "verify_top": "legacy host-backend escalation knob",
+            "sync_every": "sharded scan only",
+            "max_leaves": "approx-descent knob, knn family only",
+            "use_paa_bounds": "changes LB operand values only — same "
+                              "program, different data",
+        },
+    },
+    "legacy_host_knn": {
+        # bucket joins the key at the call site (shape-derived, not a
+        # QuerySpec field); verify_top enters clamped to the per-shard
+        # row cap
+        "key": lambda s: ("legacy", s.k, s.verify_top),
+        "not_in_key": {
+            "measure": "rejected at dispatch (legacy path is exact ED "
+                       "k-NN only)",
+            "r": "DTW-only parameter; rejected at dispatch",
+            "eps": "rejected at dispatch",
+            "mode": "rejected at dispatch",
+            "approx_first": "the legacy path runs no approximate pass",
+            "scan_backend": "selects whether this family compiles at all",
+            "chunk_size": "host-loop batching knob, not traced",
+            "sync_every": "sharded pruned scan only",
+            "max_leaves": "approx-descent knob",
+            "range_capacity": "range family only",
+            "use_paa_bounds": "rejected at dispatch",
+        },
+    },
+}
+
+
 def _shards_of(mesh, axes) -> int:
     shards = 1
     for a in axes:
@@ -395,6 +505,151 @@ class UlisseEngine:
                 traced += 1
         return traced
 
+    # ------------------------------------------------------------------
+    # static-analysis surface (repro.analysis, DESIGN.md §13)
+    # ------------------------------------------------------------------
+
+    def audit_programs(self, specs: Optional[Sequence[QuerySpec]] = None,
+                       *, batch: int = 2,
+                       qlen: Optional[int] = None) -> List[dict]:
+        """Trace every compiled program this engine emits for `specs`.
+
+        The auditor's hook: nothing executes — each record carries the
+        abstract ClosedJaxpr of one program family plus a zero-arg
+        `lower` thunk (for compiled-HLO corroboration).  Record keys:
+
+          name          unique display name,
+          family        PROGRAM_KEY_SPECS family (or "prepare"),
+          backend       "local" | "distributed",
+          jaxpr         ClosedJaxpr of the whole program,
+          lower         () -> jax Lowered (compile for HLO text),
+          taint_invars  top-level invar indices of the float64-split
+                        hi/lo prefix sums (R3 taint sources),
+          spec          the QuerySpec that selected the family.
+
+        Default specs cover the measure x shape matrix of this
+        backend; reuses the same program getters as `search`, so an
+        audited jaxpr IS the served program (cache-key included)."""
+        if specs is None:
+            specs = [QuerySpec(),
+                     QuerySpec(measure="dtw", r=4),
+                     QuerySpec(eps=1.0),
+                     QuerySpec(measure="dtw", r=4, eps=1.0),
+                     QuerySpec(mode="approx")]
+            if self.is_distributed:
+                specs.append(QuerySpec(scan_backend="host"))
+        records, seen = [], set()
+        for spec in specs:
+            if self.is_distributed:
+                recs = self._audit_distributed(spec, batch, qlen)
+            else:
+                recs = self._audit_local(spec, batch, qlen)
+            for rec in recs:
+                if rec["name"] not in seen:
+                    seen.add(rec["name"])
+                    records.append(rec)
+        return records
+
+    def _audit_local(self, spec: QuerySpec, batch: int,
+                     qlen: Optional[int]) -> List[dict]:
+        from repro.kernels.common import default_interpret
+        p, index = self.params, self._index
+        qlen = qlen or p.lmin
+        g = p.gamma + 1
+        n_pad = executor.pow2ceil(index.search_envelopes().size)
+        chunk = min(executor.pow2ceil(spec.chunk_size), n_pad)
+        sb = min(128, chunk * g)
+        interpret = default_interpret()
+
+        def sds(a):
+            return jax.ShapeDtypeStruct(tuple(a.shape), a.dtype)
+
+        def f32(*s):
+            return jax.ShapeDtypeStruct(s, jnp.float32)
+
+        def i32(*s):
+            return jax.ShapeDtypeStruct(s, jnp.int32)
+
+        c = index.collection
+        coll = [sds(c.data), sds(c.csum), sds(c.csum2),
+                sds(c.csum_lo), sds(c.csum2_lo), sds(c.center)]
+        plan = [i32(batch, n_pad), i32(batch, n_pad),
+                i32(batch, n_pad), f32(batch, n_pad)]
+        qargs = [f32(batch, qlen)] * 3
+        if spec.is_range:
+            family = "local_range"
+            fn = executor._device_range_program(
+                executor.pow2ceil(spec.range_capacity), g, chunk,
+                p.znorm, spec.measure, spec.r, sb, interpret)
+            args = coll + plan + qargs + [f32(batch)]
+        else:
+            family = "local_scan"
+            fn = executor._device_scan_program(
+                spec.k, g, chunk, p.znorm, spec.measure, spec.r, sb,
+                interpret)
+            args = coll + plan + qargs + [f32(batch, spec.k),
+                                          i32(batch, spec.k),
+                                          i32(batch, spec.k)]
+        prep = jax.jit(lambda q: planner.prepare_query_batch(
+            q, p.seg_len, p.znorm, spec.measure, spec.r))
+        qsd = f32(batch, qlen)
+        return [
+            {"name": f"{family}[{spec.measure},b{batch}]",
+             "family": family, "backend": "local",
+             "jaxpr": jax.make_jaxpr(fn)(*args),
+             "lower": (lambda fn=fn, args=args: fn.lower(*args)),
+             # csum/csum2 + their float64-split low halves
+             "taint_invars": (1, 2, 3, 4), "spec": spec},
+            {"name": f"prepare[{spec.measure},b{batch}]",
+             "family": "prepare", "backend": "local",
+             "jaxpr": jax.make_jaxpr(prep)(qsd),
+             "lower": (lambda prep=prep, qsd=qsd: prep.lower(qsd)),
+             "taint_invars": (), "spec": spec},
+        ]
+
+    def _audit_distributed(self, spec: QuerySpec, batch: int,
+                           qlen: Optional[int]) -> List[dict]:
+        from repro.distributed.ulisse import SHARDED_INDEX_FIELDS
+        qlen = qlen or self.params.lmin
+        q = np.sin(np.linspace(0.0, 6.0, qlen)).astype(np.float32)
+        if spec.scan_backend == "host":
+            bucket = self._bucket(qlen)
+            fn = self._program(
+                bucket, spec,
+                min(spec.verify_top, self._env_rows_per_shard))
+            qpad = np.zeros((batch, bucket), np.float32)
+            qpad[:, :qlen] = q
+            args = (self._sharded, jnp.asarray(qpad),
+                    jnp.full((batch,), qlen, jnp.int32))
+            family, taint = "legacy_host_knn", ()
+        else:
+            index_arrs = self._ensure_sharded_index()
+            # the sharded index tuple leads the argument list, so the
+            # csum-carrying fields' positions ARE the taint indices
+            taint = tuple(i for i, f in enumerate(SHARDED_INDEX_FIELDS)
+                          if "csum" in f)
+            _, qstack, dlo, dhi, qb, qh = self._stack_prepared(
+                [q] * batch, spec)
+            if spec.is_range:
+                family = "sharded_range"
+                fn, _ = self._sharded_range_program(spec)
+                args = (*index_arrs, qstack, dlo, dhi, qb, qh,
+                        jnp.full((batch,), float(spec.eps) ** 2,
+                                 jnp.float32))
+            else:
+                family = "sharded_knn"
+                fn = self._sharded_knn_program(spec)
+                args = (*index_arrs, qstack, dlo, dhi, qb, qh)
+        mode = ("-approx" if spec.mode == "approx"
+                and not spec.is_range else "")
+        return [
+            {"name": f"{family}[{spec.measure}{mode},b{batch}]",
+             "family": family, "backend": "distributed",
+             "jaxpr": jax.make_jaxpr(fn)(*args),
+             "lower": (lambda fn=fn, args=args: fn.lower(*args)),
+             "taint_invars": taint, "spec": spec},
+        ]
+
     def _normalize_queries(self, queries):
         if isinstance(queries, (list, tuple)):
             qs = [np.asarray(q, np.float32) for q in queries]
@@ -628,6 +883,17 @@ class UlisseEngine:
         return ((ad2, asid, aoff), ast, cert, leaf_v, comb_idx, visited,
                 chunk, nblk, asids.shape[1] // chunk)
 
+    def _local_host_data(self) -> np.ndarray:
+        """Host copy of the local collection's raw series (cached per
+        collection identity, so a rebuilt/extended index invalidates
+        it) — feeds the f64 ED polish off the hot path."""
+        cached = getattr(self, "_local_host_cache", None)
+        coll = self._index.collection
+        if cached is None or cached[0] is not coll.data:
+            cached = (coll.data, np.asarray(coll.data))
+            self._local_host_cache = cached
+        return cached[1]
+
     def _knn_result_rows(self, q, spec: QuerySpec, d2, sid, off,
                          stats, data=None) -> SearchResult:
         # drop unfilled pool rows (sid -1): with k > candidates the pool
@@ -645,9 +911,12 @@ class UlisseEngine:
             # the host path's pruning used its own f32 values); this
             # only sharpens the *reported* distances and their order.
             # `data`: host series override (the distributed backend
-            # passes its gathered host copy; local reads the index).
+            # passes its gathered host copy; local reads the cached
+            # index copy — a bare np.asarray here cost one full
+            # device->host collection transfer PER RESULT ROW, the R2
+            # host-sync-budget violation the auditor pins).
             if data is None:
-                data = np.asarray(self._index.collection.data)
+                data = self._local_host_data()
             w = data[sid[:, None],
                      off[:, None] + np.arange(len(q))].astype(np.float64)
             qn = np.asarray(q, np.float64)
@@ -959,9 +1228,9 @@ class UlisseEngine:
             yield sub, min(_pow2_bucket(len(sub), self.max_batch),
                            self.max_batch)
 
-    def _sharded_knn_program(self, spec: QuerySpec, budget: int):
-        key = ("knn", spec.k, spec.measure, spec.r, spec.chunk_size,
-               spec.sync_every, budget, spec.use_paa_bounds)
+    def _sharded_knn_program(self, spec: QuerySpec):
+        budget = _knn_budget(spec)
+        key = PROGRAM_KEY_SPECS["sharded_knn"]["key"](spec)
         fn = self._programs.get(key)
         if fn is None:
             from repro.distributed.ulisse import make_sharded_knn_query
@@ -979,8 +1248,7 @@ class UlisseEngine:
         """Returns (query_fn, chunk) — the maker reports the plan-row
         chunking its program scans with, so the overflow continuation
         resumes at exactly the right row instead of re-deriving it."""
-        key = ("range", spec.range_capacity, spec.measure, spec.r,
-               spec.chunk_size, spec.use_paa_bounds)
+        key = PROGRAM_KEY_SPECS["sharded_range"]["key"](spec)
         entry = self._programs.get(key)
         if entry is None:
             from repro.distributed.ulisse import \
@@ -1020,8 +1288,8 @@ class UlisseEngine:
         by the global kth — so there is no verify_top escalation loop
         to run; approximate mode reads the in-graph certificate."""
         index_arrs = self._ensure_sharded_index()
-        budget = spec.max_leaves if spec.mode == "approx" else 0
-        fn = self._sharded_knn_program(spec, budget)
+        budget = _knn_budget(spec)
+        fn = self._sharded_knn_program(spec)
         n_env = (self.params.num_envelopes(self._series_len)
                  * self._num_series)
         # per-shard plan geometry (mirrors make_sharded_knn_query):
@@ -1191,8 +1459,14 @@ class UlisseEngine:
                 f"query length {qlen} outside [{p.lmin}, {p.lmax}]")
         return _pow2_bucket(qlen, p.lmax)
 
-    def _program(self, bucket: int, k: int, verify_top: int):
-        key = (bucket, k, verify_top)
+    def _program(self, bucket: int, spec: QuerySpec, verify_top: int):
+        # the escalation loop doubles verify_top past spec.verify_top,
+        # so the clamped live value re-enters the declared key through
+        # replace(); bucket is shape-derived (pow2 of qlen), appended
+        # outside the QuerySpec-coverage contract
+        k = spec.k
+        key = PROGRAM_KEY_SPECS["legacy_host_knn"]["key"](
+            dataclasses.replace(spec, verify_top=verify_top)) + (bucket,)
         fn = self._programs.get(key)
         if fn is None:
             from repro.distributed.ulisse import \
@@ -1249,7 +1523,7 @@ class UlisseEngine:
                 q = qs[chunk[ci]]
                 qpad[row, : len(q)] = q
                 qlens[row] = len(q)
-            fn = self._program(bucket, spec.k, min(vt, cap))
+            fn = self._program(bucket, spec, min(vt, cap))
             d, codes, exact = fn(self._sharded, jnp.asarray(qpad),
                                  jnp.asarray(qlens))
             d = np.asarray(d)

@@ -36,11 +36,16 @@ from repro.kernels.fused_verify import (fused_gather_ed,
 # results + stats
 # --------------------------------------------------------------------------
 
-# Width of the per-query device stats vector carried through the scan
-# loops: [chunks_visited, envelopes_checked, true_dist_computations,
-# dtw_lb_keogh, dtw_full, envelopes_pruned].  Every consumer (engine
-# stats assembly, distributed per-shard stacks) keys off this constant.
+# The per-query device stats vector carried through the scan loops:
+# column order is load-bearing (engine stats assembly, distributed
+# per-shard stacks, and the obs exporter all index into it).  Every
+# consumer imports THESE names — repro.analysis rule R5 flags any
+# module restating the width or the order as its own literal.
+STATS_COLUMNS = ("chunks_visited", "envelopes_checked",
+                 "true_dist_computations", "dtw_lb_keogh", "dtw_full",
+                 "envelopes_pruned")
 STATS_WIDTH = 6
+assert len(STATS_COLUMNS) == STATS_WIDTH
 
 
 @dataclasses.dataclass

@@ -84,6 +84,25 @@ _STATS_COUNTERS = (
 )
 
 
+def _check_stats_schema() -> None:
+    """Pin the exporter to the device stats schema (analysis rule R5).
+
+    PR 7 widened the device stats vector 5 -> 6 and this exporter
+    tracked it by hand; now the width/column source of truth is
+    `executor.STATS_COLUMNS` and a drift (a device counter column with
+    no exporter field) fails at import time instead of silently
+    exporting a truncated schema."""
+    from repro.core.executor import STATS_COLUMNS, STATS_WIDTH
+    exported = {f for f, _ in _STATS_COUNTERS}
+    missing = [c for c in STATS_COLUMNS if c not in exported]
+    assert len(STATS_COLUMNS) == STATS_WIDTH and not missing, (
+        f"obs exporter is missing device stats columns {missing}; "
+        "extend _STATS_COUNTERS when executor.STATS_COLUMNS grows")
+
+
+_check_stats_schema()
+
+
 def record_search_stats(stats, backend: str = "local",
                         registry: MetricsRegistry | None = None) -> None:
     """Fold one query's `SearchStats` into ``ulisse_engine_*`` counters,

@@ -29,6 +29,31 @@ from repro import obs
 
 MAX_SAMPLES = 65536          # per-bucket latency/wait sample window
 
+# -- thread-discipline declarations (repro.analysis rule T1) ---------------
+# Same scheme as serve/server.py: record_admit/record_reject run on the
+# client (admission) thread, record_dispatch/done/failed on the
+# dispatcher, reset/snapshot on any thread — which is why every bucket
+# mutation takes self._lock.  _bucket is only called with the lock held.
+
+THREAD_METHODS = {
+    "ServeMetrics.registry": "any",
+    "ServeMetrics.reset": "any",
+    "ServeMetrics._bucket": "any+locked",
+    "ServeMetrics.record_admit": "client",
+    "ServeMetrics.record_reject": "client",
+    "ServeMetrics.record_dispatch": "dispatcher",
+    "ServeMetrics.record_done": "dispatcher",
+    "ServeMetrics.record_failed": "dispatcher",
+    "ServeMetrics.snapshot": "any",
+}
+
+THREAD_ATTRS = {
+    "ServeMetrics._lock": (),            # never rebound after __init__
+    "ServeMetrics._registry": (),
+    "ServeMetrics._buckets": ("client", "dispatcher", "any"),
+    "ServeMetrics._t0": ("any",),
+}
+
 # fill is bounded by ServeConfig.max_batch (pow2-padded dispatches):
 # integer-edge buckets keep the histogram exact for the usual range
 _FILL_BUCKETS = (1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0, 32.0,

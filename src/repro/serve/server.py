@@ -57,6 +57,72 @@ from repro.core.engine import QuerySpec, UlisseEngine
 from repro.obs import span
 from repro.serve.metrics import ServeMetrics
 
+# -- thread-discipline declarations (repro.analysis rule T1) ---------------
+#
+# Role vocabulary: "client" = any caller thread (submit/close/append...),
+# "dispatcher" = the single ulisse-serve-dispatch thread, "any" = both.
+# A "+locked" suffix marks a method whose contract is that self._cond is
+# already held by its caller.  THREAD_ATTRS maps every mutable attribute
+# to the roles allowed to write it outside __init__ (() = never written
+# after construction); an attribute reachable from more than one thread
+# may only be written inside a `with self._cond:` block or from a
+# "+locked" method, unless marked "nolock" (externally synchronized —
+# say how in a comment).  repro.analysis.threads parses these literals
+# and checks every method body against them; an undeclared writing
+# method or attribute is itself a finding.
+
+THREAD_METHODS = {
+    "UlisseServer.start": "client",
+    "UlisseServer.close": "client",
+    "UlisseServer.__enter__": "client",
+    "UlisseServer.__exit__": "client",
+    "UlisseServer.version": "any",
+    "UlisseServer.pending": "any",
+    "UlisseServer._backend_label": "any",
+    "UlisseServer.metrics_text": "any",
+    "UlisseServer.metrics_json": "any",
+    "UlisseServer.submit": "client",
+    "UlisseServer.search": "client",
+    "UlisseServer.append": "client",
+    "UlisseServer.compact": "client",
+    "UlisseServer.warmup": "client",
+    "UlisseServer._submit_writer": "client",
+    "UlisseServer._loop": "dispatcher",
+    "UlisseServer._pick_ripe_locked": "dispatcher+locked",
+    "UlisseServer._timeout_locked": "dispatcher+locked",
+    "UlisseServer._dispatch": "dispatcher",
+    "UlisseServer._apply_writer": "dispatcher",
+    "Ticket.done": "any",
+    "Ticket.result": "client",
+    # close() fails queued tickets from the client thread, so _fail is
+    # "any"; a ticket still transitions exactly once (see _value below)
+    "Ticket._complete": "dispatcher",
+    "Ticket._fail": "any",
+}
+
+THREAD_ATTRS = {
+    # never rebound after __init__
+    "UlisseServer.engine": (),
+    "UlisseServer.spec": (),
+    "UlisseServer.config": (),
+    "UlisseServer.metrics": (),
+    "UlisseServer._cond": (),
+    "UlisseServer._buckets": ("client", "dispatcher"),
+    "UlisseServer._writer": ("client", "dispatcher"),
+    "UlisseServer._pending": ("client", "dispatcher"),
+    # dispatcher-private: written between dispatches only; the version
+    # property's unguarded int read is a snapshot, never torn
+    "UlisseServer._version": ("dispatcher",),
+    "UlisseServer._closed": ("client",),
+    "UlisseServer._drain": ("client",),
+    "UlisseServer._thread": ("client",),
+    # one-shot hand-off published by Event.set() in the same method —
+    # the happens-before edge IS the synchronization, no lock involved
+    "Ticket._value": ("any", "nolock"),
+    "Ticket._error": ("any", "nolock"),
+    "Ticket._event": (),
+}
+
 
 class AdmissionError(RuntimeError):
     """The serving queue is full: the request was shed, not queued.

@@ -1,1 +1,1 @@
-"""Training substrate: steps, checkpointing, fault-tolerant loop, data."""
+"""Synthetic workload generation (see `repro.train.data`)."""

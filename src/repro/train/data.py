@@ -1,71 +1,12 @@
-"""Deterministic, restart/straggler-tolerant token pipeline.
+"""Synthetic data-series generation for examples and benchmarks.
 
-Every batch is a pure function of (seed, step, host) — so:
-  * restart-from-checkpoint replays the exact stream (skip-ahead is
-    just `step`),
-  * no host ever waits on another for INPUT data (each host synthesizes
-    /ingests its own shard); the collectives inside train_step are the
-    only synchronization points, which is the straggler-isolation
-    property the loop relies on,
-  * elastic resizing re-partitions the host space deterministically.
-
-A background prefetch thread keeps `depth` batches ready.
+(The LM token pipeline that used to live here was unreachable seed
+scaffolding — flagged by `repro.analysis` rule R6 and deleted;
+`series_batches` is the surviving, widely-used workload generator.)
 """
 from __future__ import annotations
 
-import queue
-import threading
-from typing import Dict, Iterator, Optional
-
-import jax
 import numpy as np
-
-
-class TokenPipeline:
-    def __init__(self, vocab_size: int, global_batch: int, seq_len: int,
-                 seed: int = 0, num_hosts: int = 1, host_id: int = 0,
-                 extras: Optional[dict] = None):
-        assert global_batch % num_hosts == 0
-        self.vocab = vocab_size
-        self.gb = global_batch
-        self.local_b = global_batch // num_hosts
-        self.seq = seq_len
-        self.seed = seed
-        self.host = host_id
-        self.extras = extras or {}
-
-    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
-        """The host's batch shard for `step` — pure function of inputs."""
-        rng = np.random.default_rng(
-            np.random.SeedSequence([self.seed, step, self.host]))
-        tokens = rng.integers(0, self.vocab,
-                              size=(self.local_b, self.seq + 1),
-                              dtype=np.int32)
-        out = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
-        for name, (shape, dtype) in self.extras.items():
-            out[name] = rng.normal(size=(self.local_b, *shape)) \
-                .astype(dtype)
-        return out
-
-    def iterate(self, start_step: int, prefetch: int = 2
-                ) -> Iterator[Dict[str, np.ndarray]]:
-        """Prefetching iterator with deterministic skip-ahead."""
-        q: queue.Queue = queue.Queue(maxsize=prefetch)
-        stop = threading.Event()
-
-        def producer():
-            s = start_step
-            while not stop.is_set():
-                q.put((s, self.batch_at(s)))
-                s += 1
-
-        t = threading.Thread(target=producer, daemon=True)
-        t.start()
-        try:
-            while True:
-                yield q.get()
-        finally:
-            stop.set()
 
 
 def series_batches(num_series: int, series_len: int, seed: int = 0,

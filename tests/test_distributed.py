@@ -90,11 +90,12 @@ def test_distributed_engine_batched_mixed_lengths():
         for r, rh in zip(out, out_h):
             assert np.allclose(r.dists, rh.dists, atol=5e-3), \\
                 (r.dists, rh.dists)
-        # host path adds its (bucket, k, verify_top) programs: lengths
-        # {64, 80, 96} bucket to {64, 96}
-        assert sorted(k[0] for k in eng._programs
-                      if isinstance(k[0], int)) == [64, 96], \\
-            sorted(eng._programs)
+        # host path adds its ("legacy", k, verify_top, bucket)
+        # programs (key shape declared in engine.PROGRAM_KEY_SPECS):
+        # lengths {64, 80, 96} bucket to {64, 96}
+        assert sorted(k[-1] for k in eng._programs
+                      if k[0] == "legacy") == [64, 96], \\
+            sorted(map(str, eng._programs))
         print("ok")
     """)
 
@@ -193,22 +194,3 @@ def test_ring_allgather_matmul():
     """)
 
 
-def test_moe_spmd_matches_local():
-    run_sub("""
-        import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        from repro.models.moe import init_moe, moe_ffn, moe_ffn_spmd
-        mesh = jax.make_mesh((8,), ("data",))
-        key = jax.random.PRNGKey(0)
-        p = init_moe(key, 32, 64, num_experts=4)
-        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32),
-                              jnp.float32)
-        ref, _ = moe_ffn(p, x[:1], num_experts=4, topk=2)
-        xs = jax.device_put(x, NamedSharding(mesh, P("data")))
-        out, aux = jax.jit(lambda p, x: moe_ffn_spmd(
-            p, x, num_experts=4, topk=2, capacity_factor=1.25,
-            mesh=mesh, x_spec=P("data", None, None)))(p, xs)
-        np.testing.assert_allclose(np.asarray(out[:1]), np.asarray(ref),
-                                   rtol=2e-2, atol=2e-2)
-        print("ok")
-    """)
