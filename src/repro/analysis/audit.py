@@ -51,10 +51,11 @@ def run_audit(root: str,
     need_programs = bool({"R1", "R3", "R5"} & set(chosen))
     need_engines = need_programs or "R2" in chosen
     if need_engines:
-        local, dist = _tiny_engines()
+        local, dist, paged = _tiny_engines()
         meta["devices"] = _device_count()
     if need_programs:
-        records = local.audit_programs() + dist.audit_programs()
+        records = (local.audit_programs() + dist.audit_programs()
+                   + paged.audit_programs())
         meta["programs"] = [r["name"] for r in records]
         for rec in records:
             if "R1" in chosen:
@@ -68,7 +69,7 @@ def run_audit(root: str,
         if "R5" in chosen:
             findings.extend(_audit_constants(records))
     if "R2" in chosen:
-        findings.extend(_audit_host_sync(local, dist))
+        findings.extend(_audit_host_sync(local, dist, paged))
     if "R4" in chosen:
         findings.extend(_audit_retrace_keys())
     if "R6" in chosen:
@@ -104,7 +105,16 @@ def _tiny_engines():
                                          max_batch=4)
     mesh = jax.make_mesh((d,), ("data",))
     dist = UlisseEngine.distributed(mesh, p, data, max_batch=4)
-    return local, dist
+    # paged variant: same index, payload behind a PayloadStore with a
+    # cache budget far below payload_bytes — audits the chunk-slab
+    # programs and their plan/early-stop readback budget
+    from repro.storage.store import PayloadStore
+    store = PayloadStore.from_arrays(data, page_rows=2)
+    pidx = dataclasses.replace(local.index, collection=store)
+    paged = UlisseEngine.from_index(
+        pidx, max_batch=4,
+        memory_budget_bytes=max(1, store.payload_bytes // 4))
+    return local, dist, paged
 
 
 def _hlo_corroborate(records) -> List[Finding]:
@@ -126,7 +136,7 @@ def _hlo_corroborate(records) -> List[Finding]:
 # R2 — host-sync budget (dynamic steady-state counting)
 # ---------------------------------------------------------------------------
 
-def _audit_host_sync(local, dist) -> List[Finding]:
+def _audit_host_sync(local, dist, paged) -> List[Finding]:
     import numpy as np
 
     from repro.core import QuerySpec
@@ -142,6 +152,15 @@ def _audit_host_sync(local, dist) -> List[Finding]:
         ("sharded_knn[exact]", dist,
          QuerySpec(k=3, chunk_size=16)),
         ("sharded_range", dist,
+         QuerySpec(eps=0.5, range_capacity=64, chunk_size=16)),
+        # paged paths sync more than the monolithic budget by design:
+        # the LB plan readback IS the page access schedule, and the
+        # early-stop check reads kth/overflow back every sync_every
+        # chunks — accepted entries in analysis_baseline.json record
+        # the reasoning; a NEW finding means the count grew again
+        ("local_paged_knn[exact]", paged,
+         QuerySpec(k=3, chunk_size=16)),
+        ("local_paged_range", paged,
          QuerySpec(eps=0.5, range_capacity=64, chunk_size=16)),
     ]
     findings: List[Finding] = []
@@ -174,6 +193,8 @@ def _audit_retrace_keys() -> List[Finding]:
         "sharded_range": eng.QuerySpec(eps=1.0),
         "local_scan": eng.QuerySpec(),
         "local_range": eng.QuerySpec(eps=1.0),
+        "local_paged": eng.QuerySpec(),
+        "local_paged_range": eng.QuerySpec(eps=1.0),
         "legacy_host_knn": eng.QuerySpec(scan_backend="host"),
     }
     findings: List[Finding] = []
@@ -317,7 +338,8 @@ def _audit_constants(records) -> List[Finding]:
     # the compiled programs must actually carry STATS_WIDTH columns:
     # the local families return the stats stack as their last output
     for rec in records:
-        if rec["family"] not in ("local_scan", "local_range"):
+        if rec["family"] not in ("local_scan", "local_range",
+                                 "local_paged", "local_paged_range"):
             continue
         aval = rec["jaxpr"].out_avals[-1]
         if aval.shape[-1] != executor.STATS_WIDTH:

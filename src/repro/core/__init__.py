@@ -1,5 +1,6 @@
 """ULISSE core: the paper's contribution as composable JAX modules."""
-from repro.core.types import Collection, EnvelopeParams, EnvelopeSet
+from repro.core.types import (Collection, EnvelopeParams, EnvelopeSet,
+                              PageBlock)
 from repro.core.index import UlisseIndex, build_index, index_stats
 from repro.core.engine import QuerySpec, UlisseEngine
 from repro.core.executor import SearchResult, SearchStats
@@ -8,7 +9,8 @@ from repro.core.search import (approx_knn, brute_force_knn, exact_knn,
                                range_query)
 
 __all__ = [
-    "Collection", "EnvelopeParams", "EnvelopeSet", "UlisseIndex",
+    "Collection", "EnvelopeParams", "EnvelopeSet", "PageBlock",
+    "UlisseIndex",
     "build_index", "index_stats", "QuerySpec", "UlisseEngine",
     "SearchResult", "SearchStats", "PreparedQuery", "prepare_query",
     "approx_knn", "exact_knn", "range_query", "brute_force_knn",

@@ -29,6 +29,7 @@ internal escalation loop (doubled `verify_top` until it holds).
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import List, Optional, Sequence, Union
 
 import jax
@@ -218,6 +219,51 @@ PROGRAM_KEY_SPECS = {
                               "program, different data",
         },
     },
+    "local_paged": {
+        # the real cache is executor._paged_scan_chunk_program's
+        # lru_cache on (k, g, chunk, znorm, measure, r, sb, interpret);
+        # the spec-derived components match local_scan exactly — the
+        # paged chunk program IS one monolithic body iteration.  The
+        # slab row count is operand shape (pow2-padded), so jit
+        # retraces per slab-size bucket, not via the key.
+        "key": lambda s: ("local_paged", s.k, s.measure, s.r,
+                          s.chunk_size),
+        "not_in_key": {
+            "eps": "selects the paged range family instead of this one",
+            "mode": "selects program composition (approx stage alone vs "
+                    "seeded scan); each constituent is keyed by its own "
+                    "static chunk",
+            "approx_first": "composition knob — adds/removes the "
+                            "leaf-pack stage, never retraces the core",
+            "scan_backend": "selects whether this family compiles at all",
+            "verify_top": "legacy host-backend escalation knob",
+            "sync_every": "sharded scan only (the paged early-stop "
+                          "cadence is a host-loop constant, not traced)",
+            "max_leaves": "shapes the leaf pack (n_pad); jit retraces "
+                          "on operand shape, not via the key",
+            "range_capacity": "range family only",
+            "use_paa_bounds": "changes LB operand values only — same "
+                              "program, different data",
+        },
+    },
+    "local_paged_range": {
+        "key": lambda s: ("local_paged_range", s.range_capacity,
+                          s.measure, s.r, s.chunk_size),
+        "not_in_key": {
+            "k": "a range query returns every hit, k is ignored",
+            "eps": "runtime operand (the (B,) eps2 array), not a trace "
+                   "constant",
+            "mode": "range queries have no exact/approx split",
+            "approx_first": "range queries run no approximate pass",
+            "scan_backend": "selects whether this family compiles at all",
+            "verify_top": "legacy host-backend escalation knob",
+            "sync_every": "sharded scan only (the paged early-stop "
+                          "cadence is a host-loop constant, not traced)",
+            "max_leaves": "approx-descent knob, knn family only",
+            "use_paa_bounds": "changes LB operand values only — same "
+                              "program, different data",
+        },
+    },
     "legacy_host_knn": {
         # bucket joins the key at the call site (shape-derived, not a
         # QuerySpec field); verify_top enters clamped to the per-shard
@@ -274,9 +320,21 @@ class UlisseEngine:
                  mesh=None, sharded_data=None,
                  breakpoints=None, axes=("data",),
                  num_series: int = 0, series_len: int = 0,
-                 max_batch: int = 8):
+                 max_batch: int = 8,
+                 memory_budget_bytes: Optional[int] = None):
         self._index = index
         self.params = params if params is not None else index.params
+        if memory_budget_bytes is None:
+            env = os.environ.get("ULISSE_MEMORY_BUDGET_BYTES", "")
+            memory_budget_bytes = int(env) if env else None
+        # host-memory budget for the raw payload (local backend): when a
+        # lazily-opened collection's payload exceeds it, queries run the
+        # paged out-of-core scan with the store's page cache capped to
+        # this many bytes; None (and any budget the payload fits in —
+        # whole-collection residency is the one-page special case) keeps
+        # today's materialize-once behavior.  Answers are bit-equal
+        # either way (DESIGN.md §14).
+        self.memory_budget_bytes = memory_budget_bytes
         self._mesh = mesh
         self._sharded = sharded_data
         self._breakpoints = breakpoints
@@ -299,21 +357,25 @@ class UlisseEngine:
     # ------------------------------------------------------------------
 
     @classmethod
-    def from_index(cls, index: UlisseIndex,
-                   max_batch: int = 8) -> "UlisseEngine":
+    def from_index(cls, index: UlisseIndex, max_batch: int = 8,
+                   memory_budget_bytes: Optional[int] = None
+                   ) -> "UlisseEngine":
         """Wrap an already-built local index."""
-        return cls(index=index, max_batch=max_batch)
+        return cls(index=index, max_batch=max_batch,
+                   memory_budget_bytes=memory_budget_bytes)
 
     @classmethod
     def from_collection(cls, collection: Collection, params: EnvelopeParams,
                         breakpoints=None, block_size: int = 64,
-                        num_levels: int = 2,
-                        max_batch: int = 8) -> "UlisseEngine":
+                        num_levels: int = 2, max_batch: int = 8,
+                        memory_budget_bytes: Optional[int] = None
+                        ) -> "UlisseEngine":
         """Build the index and the engine in one step (local backend)."""
         return cls(index=build_index(collection, params, breakpoints,
                                      block_size=block_size,
                                      num_levels=num_levels),
-                   max_batch=max_batch)
+                   max_batch=max_batch,
+                   memory_budget_bytes=memory_budget_bytes)
 
     @classmethod
     def distributed(cls, mesh, params: EnvelopeParams, data,
@@ -342,7 +404,8 @@ class UlisseEngine:
     @classmethod
     def open(cls, path: str, *, params: Optional[EnvelopeParams] = None,
              mesh=None, axes=("data",), max_batch: Optional[int] = None,
-             mmap: bool = True) -> "UlisseEngine":
+             mmap: bool = True,
+             memory_budget_bytes: Optional[int] = None) -> "UlisseEngine":
         """Open a saved index (see repro.storage, DESIGN.md §7).
 
         Without `mesh`: the local backend over the stored sorted
@@ -366,7 +429,8 @@ class UlisseEngine:
         return cls.from_index(store.open_index(path, params=params,
                                                mmap=mmap),
                               max_batch=8 if max_batch is None
-                              else max_batch)
+                              else max_batch,
+                              memory_budget_bytes=memory_budget_bytes)
 
     def save(self, path: str) -> str:
         """Persist this engine's index to `path` (atomic commit).
@@ -386,10 +450,12 @@ class UlisseEngine:
         return store.save_index(path, self._index)
 
     @classmethod
-    def from_writer(cls, writer, *, mmap: bool = True,
-                    mesh=None) -> "UlisseEngine":
+    def from_writer(cls, writer, *, mmap: bool = True, mesh=None,
+                    memory_budget_bytes: Optional[int] = None
+                    ) -> "UlisseEngine":
         """Finalize a `repro.storage.Writer` bulk build and open it."""
-        return cls.open(writer.finalize(), mmap=mmap, mesh=mesh)
+        return cls.open(writer.finalize(), mmap=mmap, mesh=mesh,
+                        memory_budget_bytes=memory_budget_bytes)
 
     # ------------------------------------------------------------------
     # incremental ingestion (delta + compaction, repro.storage.delta)
@@ -425,6 +491,38 @@ class UlisseEngine:
         if self.is_distributed or self._index.delta is None:
             return 0
         return self._index.delta.size
+
+    def _paged_store(self):
+        """The PayloadStore behind the paged out-of-core scan, or None.
+
+        Paging engages only when ALL of: local backend, a
+        `memory_budget_bytes` is set, the collection is a still-lazy
+        PayloadStore, and its payload does not fit the budget — the
+        fitting case materializes exactly as before (whole-collection
+        residency is the one-page special case), so the resident fast
+        path never changes behind a small index.  Keeps the store's
+        cache limit synced to the engine budget.
+        """
+        if self.is_distributed or self.memory_budget_bytes is None \
+                or self._index is None:
+            return None
+        from repro.storage.store import PayloadStore
+        coll = self._index.collection
+        if not isinstance(coll, PayloadStore) or coll.is_materialized:
+            return None
+        if coll.payload_bytes <= self.memory_budget_bytes:
+            return None
+        if coll.cache_limit_bytes != self.memory_budget_bytes:
+            coll.cache_limit_bytes = self.memory_budget_bytes
+        return coll
+
+    def page_cache_stats(self) -> Optional[dict]:
+        """Monotone page-cache counters of the paged store (hits,
+        misses, evicted_bytes, cache_bytes, cached_pages) — None when
+        the engine is not paging.  The serving tier mirrors deltas of
+        these into the obs registry after each dispatch."""
+        store = self._paged_store()
+        return None if store is None else store.stats()
 
     @property
     def is_distributed(self) -> bool:
@@ -570,26 +668,58 @@ class UlisseEngine:
         def i32(*s):
             return jax.ShapeDtypeStruct(s, jnp.int32)
 
-        c = index.collection
-        coll = [sds(c.data), sds(c.csum), sds(c.csum2),
-                sds(c.csum_lo), sds(c.csum2_lo), sds(c.center)]
-        plan = [i32(batch, n_pad), i32(batch, n_pad),
-                i32(batch, n_pad), f32(batch, n_pad)]
         qargs = [f32(batch, qlen)] * 3
-        if spec.is_range:
-            family = "local_range"
-            fn = executor._device_range_program(
-                executor.pow2ceil(spec.range_capacity), g, chunk,
-                p.znorm, spec.measure, spec.r, sb, interpret)
-            args = coll + plan + qargs + [f32(batch)]
+        store = self._paged_store()
+        if store is not None:
+            # paged engine: the served programs are the one-chunk slab
+            # programs (reading index.collection.data here would
+            # materialize the payload the budget forbids); slab rows
+            # audit at the largest possible pow2 bucket
+            rows = executor.pow2ceil(store.num_series)
+            n = store.series_len
+            coll = [f32(rows, n), f32(rows, n + 1), f32(rows, n + 1),
+                    f32(rows, n + 1), f32(rows, n + 1), f32(rows)]
+            plan = [i32(batch, chunk), i32(batch, chunk),
+                    i32(batch, chunk), f32(batch, chunk),
+                    i32(batch, chunk)]
+            if spec.is_range:
+                family = "local_paged_range"
+                cap = executor.pow2ceil(spec.range_capacity)
+                fn = executor._paged_range_chunk_program(
+                    cap, g, chunk, p.znorm, spec.measure, spec.r, sb,
+                    interpret)
+                args = coll + plan + qargs + [
+                    f32(batch), f32(batch, cap), i32(batch, cap),
+                    i32(batch, cap), i32(batch), i32(batch), i32(),
+                    i32()]
+            else:
+                family = "local_paged"
+                fn = executor._paged_scan_chunk_program(
+                    spec.k, g, chunk, p.znorm, spec.measure, spec.r,
+                    sb, interpret)
+                args = coll + plan + qargs + [f32(batch, spec.k),
+                                              i32(batch, spec.k),
+                                              i32(batch, spec.k)]
         else:
-            family = "local_scan"
-            fn = executor._device_scan_program(
-                spec.k, g, chunk, p.znorm, spec.measure, spec.r, sb,
-                interpret)
-            args = coll + plan + qargs + [f32(batch, spec.k),
-                                          i32(batch, spec.k),
-                                          i32(batch, spec.k)]
+            c = index.collection
+            coll = [sds(c.data), sds(c.csum), sds(c.csum2),
+                    sds(c.csum_lo), sds(c.csum2_lo), sds(c.center)]
+            plan = [i32(batch, n_pad), i32(batch, n_pad),
+                    i32(batch, n_pad), f32(batch, n_pad)]
+            if spec.is_range:
+                family = "local_range"
+                fn = executor._device_range_program(
+                    executor.pow2ceil(spec.range_capacity), g, chunk,
+                    p.znorm, spec.measure, spec.r, sb, interpret)
+                args = coll + plan + qargs + [f32(batch)]
+            else:
+                family = "local_scan"
+                fn = executor._device_scan_program(
+                    spec.k, g, chunk, p.znorm, spec.measure, spec.r,
+                    sb, interpret)
+                args = coll + plan + qargs + [f32(batch, spec.k),
+                                              i32(batch, spec.k),
+                                              i32(batch, spec.k)]
         prep = jax.jit(lambda q: planner.prepare_query_batch(
             q, p.seg_len, p.znorm, spec.measure, spec.r))
         qsd = f32(batch, qlen)
@@ -863,11 +993,23 @@ class UlisseEngine:
             n_main=n_main, block_size=block_size, chunk=chunk,
             n_leaves=n_leaves)
         neg = jnp.full((b, k), -1, jnp.int32)
-        ad2, asid, aoff, ast = executor.device_exact_scan(
-            index.collection, asids, aanc, anm, albs2, qstack, dlo, dhi,
-            jnp.full((b, k), jnp.inf, jnp.float32), neg, neg, k=k,
-            g=p.gamma + 1, measure=spec.measure, r=spec.r,
-            znorm=p.znorm, chunk_size=chunk)
+        seed = (jnp.full((b, k), jnp.inf, jnp.float32), neg, neg)
+        store = self._paged_store()
+        if store is None:
+            ad2, asid, aoff, ast = executor.device_exact_scan(
+                index.collection, asids, aanc, anm, albs2, qstack, dlo,
+                dhi, *seed, k=k, g=p.gamma + 1, measure=spec.measure,
+                r=spec.r, znorm=p.znorm, chunk_size=chunk)
+        else:
+            # paged: the leaf plan comes back to host (a planned
+            # transfer — the plan IS the page access schedule) and the
+            # host-driven paged scan prefetches slabs along it
+            asids_h, aanc_h, anm_h, albs2_h = jax.device_get(
+                (asids, aanc, anm, albs2))
+            ad2, asid, aoff, ast = executor.paged_exact_scan(
+                store, asids_h, aanc_h, anm_h, albs2_h, qstack, dlo,
+                dhi, *seed, k=k, g=p.gamma + 1, measure=spec.measure,
+                r=spec.r, znorm=p.znorm, chunk_size=chunk)
 
         n_delta = env.size - n_main
         nd_chunks = -(-n_delta // chunk)
@@ -894,6 +1036,47 @@ class UlisseEngine:
             self._local_host_cache = cached
         return cached[1]
 
+    def _ed_rescore(self, q, sid, off, data=None) -> np.ndarray:
+        """Direct float64 ED of the reported (sid, off) windows — the
+        polish every ED result path shares.  Two reasons: the kernel's
+        MXU dot-identity ED cancels catastrophically near d = 0 (error
+        ~ eps_f32 * 2L on d2), and XLA re-tiles the (inlined) kernel
+        reduction per program shape, so raw device d2 for the SAME
+        subsequence rounds differently between the resident and paged
+        programs.  Selection already happened on device values; this
+        re-scores only the *reported* rows — O(rows * qlen) host work
+        after the readback, no extra device sync.  `data`: host series
+        override (the distributed backend passes its gathered host
+        copy; local reads the cached index copy — a bare np.asarray
+        here cost one full device->host collection transfer PER RESULT
+        ROW, the R2 host-sync-budget violation the auditor pins).
+        """
+        if data is None:
+            store = self._paged_store()
+            if store is not None:
+                # paged: gather ONLY the reported rows through the page
+                # cache — materializing the payload here would defeat
+                # the memory budget for a rows*qlen read
+                data = store.take_rows(sid)
+                ridx = np.arange(len(sid))
+            else:
+                data = self._local_host_data()
+                ridx = sid
+        else:
+            ridx = sid
+        w = data[ridx[:, None],
+                 off[:, None] + np.arange(len(q))].astype(np.float64)
+        qn = np.asarray(q, np.float64)
+        if self.params.znorm:
+            qn = (qn - qn.mean()) / max(qn.std(), 1e-8)
+            mu = w.mean(1, keepdims=True)
+            sd = np.maximum(w.std(1, keepdims=True), 1e-8)
+            w -= mu       # in place: range hit sets reach thousands of
+            w /= sd       # rows, so the temporaries are worth dodging
+        w -= qn
+        np.square(w, out=w)
+        return w.sum(1)
+
     def _knn_result_rows(self, q, spec: QuerySpec, d2, sid, off,
                          stats, data=None) -> SearchResult:
         # drop unfilled pool rows (sid -1): with k > candidates the pool
@@ -903,28 +1086,7 @@ class UlisseEngine:
         sid = sid[filled].astype(np.int64)
         off = off[filled].astype(np.int64)
         if spec.measure == "ed" and len(d2):
-            # polish: the kernel's MXU dot-identity ED cancels
-            # catastrophically near d = 0 (error ~ eps_f32 * 2L on d2);
-            # re-score the k winners with the direct float64 ED — O(k *
-            # qlen) host work after the readback, no extra device sync.
-            # Selection already happened (pruning used kernel values, as
-            # the host path's pruning used its own f32 values); this
-            # only sharpens the *reported* distances and their order.
-            # `data`: host series override (the distributed backend
-            # passes its gathered host copy; local reads the cached
-            # index copy — a bare np.asarray here cost one full
-            # device->host collection transfer PER RESULT ROW, the R2
-            # host-sync-budget violation the auditor pins).
-            if data is None:
-                data = self._local_host_data()
-            w = data[sid[:, None],
-                     off[:, None] + np.arange(len(q))].astype(np.float64)
-            qn = np.asarray(q, np.float64)
-            if self.params.znorm:
-                qn = (qn - qn.mean()) / max(qn.std(), 1e-8)
-                w = (w - w.mean(1, keepdims=True)) \
-                    / np.maximum(w.std(1, keepdims=True), 1e-8)
-            d2 = ((w - qn) ** 2).sum(1)
+            d2 = self._ed_rescore(q, sid, off, data)
             order = np.argsort(d2, kind="stable")
             d2, sid, off = d2[order], sid[order], off[order]
         return SearchResult(dists=np.sqrt(np.maximum(d2, 0.0)),
@@ -983,12 +1145,26 @@ class UlisseEngine:
                             lbs, comb_idx, visited, chunk=achunk,
                             n_pad=n_pad)
                     with span("device_scan"):
-                        d2, sid, off, st = executor.device_exact_scan(
-                            index.collection, ssids, sanc, snm, slbs2,
-                            qstack, dlo, dhi, *seed, k=k, g=g,
-                            measure=spec.measure, r=spec.r,
-                            znorm=self.params.znorm,
-                            chunk_size=spec.chunk_size)
+                        store = self._paged_store()
+                        if store is None:
+                            d2, sid, off, st = executor.device_exact_scan(
+                                index.collection, ssids, sanc, snm,
+                                slbs2, qstack, dlo, dhi, *seed, k=k,
+                                g=g, measure=spec.measure, r=spec.r,
+                                znorm=self.params.znorm,
+                                chunk_size=spec.chunk_size)
+                        else:
+                            # paged: plan readback (planned transfer),
+                            # then the prefetching host-driven scan
+                            (ssids_h, sanc_h, snm_h,
+                             slbs2_h) = jax.device_get(
+                                (ssids, sanc, snm, slbs2))
+                            d2, sid, off, st = executor.paged_exact_scan(
+                                store, ssids_h, sanc_h, snm_h, slbs2_h,
+                                qstack, dlo, dhi, *seed, k=k, g=g,
+                                measure=spec.measure, r=spec.r,
+                                znorm=self.params.znorm,
+                                chunk_size=spec.chunk_size)
                         # THE one host sync of the batch
                         (d2, sid, off, st, ast, cert,
                          leaf_v) = jax.device_get(
@@ -1103,13 +1279,28 @@ class UlisseEngine:
                     env.series_id, env.anchor, env.n_master, lbs,
                     jnp.full((b,), eps2, jnp.float32), n_pad=n_pad)
             with span("device_scan"):
-                (bd2, bsid, boff, cnt, ovf, st,
-                 chunk) = executor.device_range_scan(
-                    index.collection, ssids, sanc, snm, slbs2, qstack,
-                    dlo, dhi, jnp.full((b,), eps2, jnp.float32),
-                    capacity=spec.range_capacity, g=p.gamma + 1,
-                    measure=spec.measure, r=spec.r, znorm=p.znorm,
-                    chunk_size=spec.chunk_size)
+                store = self._paged_store()
+                plan_h = None
+                if store is None:
+                    (bd2, bsid, boff, cnt, ovf, st,
+                     chunk) = executor.device_range_scan(
+                        index.collection, ssids, sanc, snm, slbs2,
+                        qstack, dlo, dhi,
+                        jnp.full((b,), eps2, jnp.float32),
+                        capacity=spec.range_capacity, g=p.gamma + 1,
+                        measure=spec.measure, r=spec.r, znorm=p.znorm,
+                        chunk_size=spec.chunk_size)
+                else:
+                    # paged: plan readback (planned transfer), then the
+                    # prefetching host-driven scan
+                    plan_h = jax.device_get((ssids, sanc, snm, slbs2))
+                    (bd2, bsid, boff, cnt, ovf, st,
+                     chunk) = executor.paged_range_scan(
+                        store, *plan_h, qstack, dlo, dhi,
+                        np.full((b,), eps2, np.float32),
+                        capacity=spec.range_capacity, g=p.gamma + 1,
+                        measure=spec.measure, r=spec.r, znorm=p.znorm,
+                        chunk_size=spec.chunk_size)
                 # THE one host sync of the batch (overflow excepted)
                 bd2, bsid, boff, cnt, ovf, st = jax.device_get(
                     (bd2, bsid, boff, cnt, ovf, st))
@@ -1138,28 +1329,40 @@ class UlisseEngine:
                     stats.range_overflows += 1
                     overflows += 1
                     with span("host_continuation", query=i):
-                        if order_h is None:        # lazy: overflow only
-                            order_h = np.asarray(order)
-                            slbs2_h = np.asarray(slbs2, np.float64)
-                        pq = planner.prepare_query(qs[i], p,
-                                                   spec.measure, spec.r)
-                        sink = TopK(1)   # unused (collector path)
-                        pos = o * chunk
-                        while pos < n_pad:
-                            seg = slbs2_h[row, pos:pos + chunk]
-                            # packed rows are all true candidates
-                            # (lb2 <= eps2); +inf marks the padding tail
-                            keep = np.isfinite(seg)
-                            if not keep[0]:
-                                break
-                            executor.verify_envelopes(
-                                index, pq,
-                                order_h[row, pos:pos + chunk][keep],
-                                sink, stats, eps2=eps2, collector=rows)
-                            stats.chunks_visited += 1
-                            pos += chunk
+                        if store is not None:
+                            # paged: replay the packed plan's tail
+                            # against store-gathered windows — the
+                            # payload never materializes
+                            self._host_range_tail(
+                                qs[i], spec, plan_h[0][row],
+                                plan_h[1][row], plan_h[2][row],
+                                plan_h[3][row], o * chunk, chunk, eps2,
+                                rows, stats, store=store)
+                        else:       # resident: replay via the env table
+                            if order_h is None:    # lazy: overflow only
+                                order_h = np.asarray(order)
+                                slbs2_h = np.asarray(slbs2, np.float64)
+                            pq = planner.prepare_query(
+                                qs[i], p, spec.measure, spec.r)
+                            sink = TopK(1)   # unused (collector path)
+                            pos = o * chunk
+                            while pos < n_pad:
+                                seg = slbs2_h[row, pos:pos + chunk]
+                                # packed rows are all true candidates
+                                # (lb2 <= eps2); +inf = the padding tail
+                                keep = np.isfinite(seg)
+                                if not keep[0]:
+                                    break
+                                executor.verify_envelopes(
+                                    index, pq,
+                                    order_h[row, pos:pos + chunk][keep],
+                                    sink, stats, eps2=eps2,
+                                    collector=rows)
+                                stats.chunks_visited += 1
+                                pos += chunk
                 with span("merge", query=i):
-                    results[i] = self._range_result_rows(rows, stats)
+                    results[i] = self._range_result_rows(
+                        rows, stats, q=qs[i], spec=spec)
             qsp.set(overflows=overflows)
 
     def _local_range(self, q, spec: QuerySpec) -> SearchResult:
@@ -1183,7 +1386,7 @@ class UlisseEngine:
                 index, pq, cand[start:start + spec.chunk_size], pool,
                 stats, eps2=eps2, collector=rows)
             stats.chunks_visited += 1
-        return self._range_result_rows(rows, stats)
+        return self._range_result_rows(rows, stats, q=q, spec=spec)
 
     # ------------------------------------------------------------------
     # distributed backend, device path: the sharded pruned scan
@@ -1387,17 +1590,28 @@ class UlisseEngine:
                                         chunk, eps2, rows, stats)
                         with span("merge", query=i):
                             results[i] = self._range_result_rows(
-                                rows, stats)
+                                rows, stats, q=qs[i], spec=spec,
+                                data=self._host_data())
         return results
 
-    def _range_result_rows(self, rows, stats) -> SearchResult:
+    def _range_result_rows(self, rows, stats, q=None, spec=None,
+                           data=None) -> SearchResult:
         if rows:
             out = np.concatenate(rows, axis=0)
-            out = out[np.argsort(out[:, 2], kind="stable")]
+            sid = out[:, 0].astype(np.int64)
+            off = out[:, 1].astype(np.int64)
+            d2 = out[:, 2]
+            if q is not None and spec is not None \
+                    and spec.measure == "ed":
+                # membership was decided per-path (device f32 d2 vs
+                # eps2; host tail f64); the REPORTED distances get the
+                # shared f64 rescore so resident/paged/host/distributed
+                # paths answer bit-equal on the same hit set
+                d2 = self._ed_rescore(q, sid, off, data)
+            order = np.argsort(d2, kind="stable")
             return SearchResult(
-                dists=np.sqrt(np.maximum(out[:, 2], 0.0)),
-                series=out[:, 0].astype(np.int64),
-                offsets=out[:, 1].astype(np.int64), stats=stats)
+                dists=np.sqrt(np.maximum(d2[order], 0.0)),
+                series=sid[order], offsets=off[order], stats=stats)
         return SearchResult(dists=np.zeros((0,)),
                             series=np.zeros((0,), np.int64),
                             offsets=np.zeros((0,), np.int64),
@@ -1405,7 +1619,8 @@ class UlisseEngine:
 
     def _host_range_tail(self, q, spec: QuerySpec, sids, anc, nm, lbs2,
                          start: int, chunk: int, eps2: float,
-                         rows: list, stats: SearchStats) -> None:
+                         rows: list, stats: SearchStats, *,
+                         store=None) -> None:
         """§9 overflow continuation for one (query, shard) pair: replay
         the packed plan's chunks from `start` against the host data
         copy.  The plan rows are all true candidates (lb2 <= eps2,
@@ -1415,11 +1630,20 @@ class UlisseEngine:
         through numpy fancy indexing (a jitted device gather would ship
         the full host collection back to a device per call); the
         distance tiers are executor.verify_windows, shared with the
-        index-driven reference path so the cut rules live once."""
-        data = self._host_data()
+        index-driven reference path so the cut rules live once.
+
+        `store`: paged local backend — gather each chunk's rows through
+        the PayloadStore's page cache (`take_rows`) instead of a full
+        host copy, so the continuation stays within the memory budget.
+        """
         p = self.params
         g = p.gamma + 1
-        qlen, n = len(q), data.shape[1]
+        if store is None:
+            data = self._host_data()
+            n = data.shape[1]
+        else:
+            n = store.series_len
+        qlen = len(q)
         pq = planner.prepare_query(q, p, spec.measure, spec.r)
         sink = TopK(1)   # unused (collector path)
         pos = start
@@ -1436,8 +1660,14 @@ class UlisseEngine:
                   & (offs + qlen <= n))
             offs_c = np.clip(offs, 0, n - qlen)
             all_sid = np.repeat(csid, g)
-            win = data[all_sid[:, None],
-                       offs_c.reshape(-1)[:, None] + np.arange(qlen)]
+            if store is None:
+                win = data[all_sid[:, None],
+                           offs_c.reshape(-1)[:, None] + np.arange(qlen)]
+            else:
+                crows = store.take_rows(csid)    # (len(csid), n) f32
+                ridx = np.repeat(np.arange(len(csid)), g)
+                win = crows[ridx[:, None],
+                            offs_c.reshape(-1)[:, None] + np.arange(qlen)]
             stats.envelopes_checked += int(keep.sum())
             executor.verify_windows(
                 jnp.asarray(win, jnp.float32), all_sid,

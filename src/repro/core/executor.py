@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from concurrent.futures import ThreadPoolExecutor
 from functools import partial
 from typing import Optional
 
@@ -463,15 +464,19 @@ def _scan_chunk_step(data, csum, csum2, cslo, cs2lo, center, sids,
                      anchors, n_master, lbs2, qs, dtw_lo, dtw_hi, i,
                      pool, kth, active, *, k: int, g: int, chunk: int,
                      znorm: bool, measure: str, r: int, sb: int,
-                     interpret: bool):
+                     interpret: bool, gsids=None):
     """Verify chunk `i` of the packed plan into the (B, k) pool.
 
     THE shared k-NN chunk step: the local device scan
-    (`_device_scan_core`) and the sharded distributed scan
-    (`distributed/ulisse._sharded_knn_scan`) both run their loops over
-    this function — the only difference between the two is the `kth`
+    (`_device_scan_core`), the sharded distributed scan
+    (`distributed/ulisse._sharded_knn_scan`) and the paged chunk
+    program (`_paged_scan_chunk_core`) all run their loops over this
+    function — the only differences between the three are the `kth`
     cut the caller prunes with (the pool's own kth locally; the min of
-    the local kth and the mesh-wide broadcast bsf on a sharded scan).
+    the local kth and the mesh-wide broadcast bsf on a sharded scan)
+    and, for the paged caller, `gsids`: (B, n_pad) GLOBAL series ids
+    reported in the pool when `sids` are slab-local gather rows (None
+    = sids are already global, the whole-resident case).
 
     Returns (pool, dstats) where dstats (B, STATS_WIDTH) holds the
     per-query increments of [chunks, envelopes_checked, true_dists,
@@ -485,6 +490,11 @@ def _scan_chunk_step(data, csum, csum2, cslo, cs2lo, center, sids,
     keep = (clb2 < kth[:, None]) & active[:, None]  # bsf pruning
     ok, cand_sid, cand_off = _chunk_candidates(csid, canc, cnm,
                                                keep, qlen, n, g)
+    if gsids is None:
+        cand_code = cand_sid
+    else:
+        cgsid = jax.lax.dynamic_slice_in_dim(gsids, i * chunk, chunk, 1)
+        cand_code = jnp.repeat(cgsid, g, axis=1)
     checked = jnp.sum(keep, axis=1, dtype=jnp.int32)
     # envelopes cut by the bsf LB test in this visited chunk (padding
     # rows carry lbs2 = +inf and are excluded by the isfinite test)
@@ -497,7 +507,7 @@ def _scan_chunk_step(data, csum, csum2, cslo, cs2lo, center, sids,
                              qs, g=g, rows=chunk, znorm=znorm,
                              interpret=interpret)
         d2 = jnp.where(ok, d2.reshape(b_sz, chunk * g), jnp.inf)
-        pool = _pool_merge(pool, d2, cand_sid, cand_off, k)
+        pool = _pool_merge(pool, d2, cand_code, cand_off, k)
         tdist = jnp.sum(ok, axis=1, dtype=jnp.int32)
     else:
         lb2w, mu, sd = fused_gather_lb_keogh(
@@ -518,9 +528,11 @@ def _scan_chunk_step(data, csum, csum2, cslo, cs2lo, center, sids,
 
         def inner_body(st):
             j, ipool, indtw = st
-            pos, _, bs, bo, db = _survivor_bucket(
+            pos, bi, bs, bo, db = _survivor_bucket(
                 data, qs, cand_sid, cand_off, sidx, mu, sd, j,
                 sb=sb, r=r, znorm=znorm)
+            if gsids is not None:
+                bs = jnp.take_along_axis(cand_code, bi, axis=1)
             m = pos[None, :] < nsurv[:, None]
             ipool = _pool_merge(ipool, jnp.where(m, db, jnp.inf), bs,
                                 bo, k)
@@ -811,3 +823,372 @@ def device_range_scan(collection, sids, anchors, n_master, lbs2, qs,
         jnp.asarray(qs, jnp.float32), jnp.asarray(dtw_lo, jnp.float32),
         jnp.asarray(dtw_hi, jnp.float32),
         jnp.asarray(eps2, jnp.float32)) + (chunk,)
+
+
+# --------------------------------------------------------------------------
+# paged out-of-core scan (host-driven chunk loop over a PayloadStore)
+# --------------------------------------------------------------------------
+#
+# The drivers below run the SAME chunk step as the monolithic while_loop
+# programs, but host-driven: each LB-sorted plan chunk is verified by a
+# one-chunk jitted program against a "slab" — the sorted-unique series
+# rows that chunk actually touches, gathered from the store's LRU page
+# cache and device_put fresh per chunk.  The plan's candidate sids are
+# remapped slab-local for the gather kernels; the GLOBAL ids travel
+# alongside (`gsids` in _scan_chunk_step) so pools/hit buffers report
+# real series ids.  Answers are bit-equal to the whole-resident scan:
+# the chunk step is shared code, per-page prefix sums are row-wise
+# identical to the whole-collection ones (types.host_prefix_stats is
+# the single implementation), and the host loop only ever runs EXTRA
+# chunks past the monolithic cond's stop point — which are masked
+# no-ops with zero stats (active=False => keep=False => every merge
+# and every write is a no-op).
+#
+# Double-buffered prefetch: a one-worker ThreadPoolExecutor assembles
+# and device_puts slab t+1 (page faults + prefix sums + gathers, all
+# GIL-releasing numpy) while chunk t's asynchronously-dispatched
+# program computes.  `prefetch=False` degrades to synchronous
+# load-then-scan (the benchmark baseline).  Early stop is host-checked
+# every `sync_every` chunks from the plan's chunk-head bounds plus one
+# planned kth/ovf readback — these readbacks are budgeted in
+# analysis_baseline.json (rule R2).
+
+PAGED_SYNC_EVERY = 8
+
+
+def _gather_slab(store, uniq: np.ndarray, row_pad: int):
+    """Gather the six kernel planes for the sorted-unique global series
+    ids `uniq` out of the store's page cache, zero-padded to `row_pad`
+    rows (pow2 — bounds the one-chunk program's retrace count)."""
+    n = store.series_len
+    shape1 = (row_pad, n + 1)
+    data = np.zeros((row_pad, n), np.float32)
+    csum = np.zeros(shape1, np.float32)
+    csum2 = np.zeros(shape1, np.float32)
+    cslo = np.zeros(shape1, np.float32)
+    cs2lo = np.zeros(shape1, np.float32)
+    center = np.zeros((row_pad,), np.float32)
+    pages = uniq // store.page_rows
+    for p in np.unique(pages):
+        blk = store.load_page(int(p))
+        pos = np.flatnonzero(pages == p)
+        idx = uniq[pos] - blk.start
+        data[pos] = blk.data[idx]
+        csum[pos] = blk.csum[idx]
+        csum2[pos] = blk.csum2[idx]
+        cslo[pos] = blk.csum_lo[idx]
+        cs2lo[pos] = blk.csum2_lo[idx]
+        center[pos] = blk.center[idx]
+    return data, csum, csum2, cslo, cs2lo, center
+
+
+def _make_chunk_slab(store, sids, anchors, n_master, lbs2, i, chunk: int):
+    """Assemble + device_put chunk i's slab and its slab-local plan.
+
+    Runs on the prefetch worker thread: every step here is either
+    GIL-releasing numpy or a host->device transfer, so it overlaps the
+    previous chunk's in-flight program."""
+    from repro.core.planner import chunk_pages
+    sl = slice(i * chunk, (i + 1) * chunk)
+    uniq, local, _ = chunk_pages(sids, i, chunk, store.page_rows)
+    row_pad = pow2ceil(max(int(uniq.shape[0]), 1))
+    planes = _gather_slab(store, uniq, row_pad)
+    return jax.device_put(planes + (
+        local,
+        np.ascontiguousarray(anchors[:, sl], np.int32),
+        np.ascontiguousarray(n_master[:, sl], np.int32),
+        np.ascontiguousarray(lbs2[:, sl], np.float32),
+        np.ascontiguousarray(sids[:, sl], np.int32)))
+
+
+def _paged_scan_chunk_core(data, csum, csum2, cslo, cs2lo, center,
+                           csid, canc, cnm, clb2, cgsid, qs, dtw_lo,
+                           dtw_hi, pd2, psid, poff, *, k: int, g: int,
+                           chunk: int, znorm: bool, measure: str,
+                           r: int, sb: int, interpret: bool):
+    """One k-NN chunk of the paged scan: exactly one monolithic
+    while_loop body iteration, with the plan pre-sliced to (B, chunk)
+    and candidate sids slab-local (cgsid carries the global ids)."""
+    kth = pd2[:, k - 1]
+    active = jnp.isfinite(clb2[:, 0]) & (clb2[:, 0] < kth)
+    pool, ds = _scan_chunk_step(
+        data, csum, csum2, cslo, cs2lo, center, csid, canc, cnm, clb2,
+        qs, dtw_lo, dtw_hi, jnp.int32(0), (pd2, psid, poff), kth,
+        active, k=k, g=g, chunk=chunk, znorm=znorm, measure=measure,
+        r=r, sb=sb, interpret=interpret, gsids=cgsid)
+    return pool[0], pool[1], pool[2], ds
+
+
+@functools.lru_cache(maxsize=None)
+def _paged_scan_chunk_program(k: int, g: int, chunk: int, znorm: bool,
+                              measure: str, r: int, sb: int,
+                              interpret: bool):
+    core = functools.partial(_paged_scan_chunk_core, k=k, g=g,
+                             chunk=chunk, znorm=znorm, measure=measure,
+                             r=r, sb=sb, interpret=interpret)
+    return jax.jit(core)
+
+
+def paged_exact_scan(store, sids, anchors, n_master, lbs2, qs, dtw_lo,
+                     dtw_hi, seed_d2, seed_sid, seed_off, *, k: int,
+                     g: int, measure: str, r: int, znorm: bool,
+                     chunk_size: int, prefetch: bool = True,
+                     sync_every: int = PAGED_SYNC_EVERY,
+                     interpret: Optional[bool] = None):
+    """Out-of-core twin of `device_exact_scan` over a PayloadStore.
+
+    Plan arrays are HOST numpy here (the engine reads the device pack
+    back once — a planned transfer); returns the same device 4-tuple
+    as `device_exact_scan` so the engine's single batch readback is
+    unchanged.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    sids = np.asarray(sids)
+    anchors = np.asarray(anchors)
+    n_master = np.asarray(n_master)
+    lbs2 = np.asarray(lbs2)
+    n_pad = sids.shape[1]
+    chunk = min(pow2ceil(chunk_size), n_pad)
+    sb = min(128, chunk * g)
+    n_chunks = n_pad // chunk
+    first_np = lbs2[:, ::chunk]                  # (B, n_chunks) chunk heads
+    qs_d = jnp.asarray(qs, jnp.float32)
+    lo_d = jnp.asarray(dtw_lo, jnp.float32)
+    hi_d = jnp.asarray(dtw_hi, jnp.float32)
+    pool = (jnp.asarray(seed_d2, jnp.float32),
+            jnp.asarray(seed_sid, jnp.int32),
+            jnp.asarray(seed_off, jnp.int32))
+    b_sz = qs_d.shape[0]
+    stats = jnp.zeros((b_sz, STATS_WIDTH), jnp.int32)
+    program = _paged_scan_chunk_program(k, g, chunk, znorm, measure, r,
+                                        sb, interpret)
+    from repro.obs import span                   # obs imports executor
+
+    def run_chunk(slab, pool, stats):
+        (data, csum, csum2, cslo, cs2lo, center, local, canc, cnm,
+         clb2, cgsid) = slab
+        pd2, psid, poff, ds = program(
+            data, csum, csum2, cslo, cs2lo, center, local, canc, cnm,
+            clb2, cgsid, qs_d, lo_d, hi_d, *pool)
+        return (pd2, psid, poff), stats + ds
+
+    def converged(i):
+        # the monolithic cond at chunk i: LB-sorted heads are
+        # nondecreasing and kth only shrinks, so a False here is final
+        kth = np.asarray(jax.device_get(pool[0][:, k - 1]))
+        nf = first_np[:, i]
+        return not np.any(np.isfinite(nf) & (nf < kth))
+
+    if prefetch and n_chunks > 1:
+        with ThreadPoolExecutor(max_workers=1) as ex:
+            fut = ex.submit(_make_chunk_slab, store, sids, anchors,
+                            n_master, lbs2, 0, chunk)
+            for i in range(n_chunks):
+                with span("page.prefetch", chunk=i):
+                    slab = fut.result()
+                if i + 1 < n_chunks:
+                    fut = ex.submit(_make_chunk_slab, store, sids,
+                                    anchors, n_master, lbs2, i + 1,
+                                    chunk)
+                pool, stats = run_chunk(slab, pool, stats)
+                if i + 1 < n_chunks and (i + 1) % sync_every == 0 \
+                        and converged(i + 1):
+                    fut.cancel()
+                    break
+    else:
+        for i in range(n_chunks):
+            with span("page.prefetch", chunk=i):
+                slab = _make_chunk_slab(store, sids, anchors, n_master,
+                                        lbs2, i, chunk)
+            pool, stats = run_chunk(slab, pool, stats)
+            jax.block_until_ready(pool[0])       # no overlap: baseline
+            if i + 1 < n_chunks and (i + 1) % sync_every == 0 \
+                    and converged(i + 1):
+                break
+    return pool[0], pool[1], pool[2], stats
+
+
+def _paged_range_chunk_core(data, csum, csum2, cslo, cs2lo, center,
+                            csid, canc, cnm, clb2, cgsid, qs, dtw_lo,
+                            dtw_hi, eps2, bd2, bsid, boff, cnt, ovf,
+                            i_code, no_ovf, *, cap: int, g: int,
+                            chunk: int, znorm: bool, measure: str,
+                            r: int, sb: int, interpret: bool):
+    """One eps-range chunk of the paged scan: one monolithic
+    `_device_range_core` body iteration over a pre-sliced (B, chunk)
+    plan with slab-local sids.  `i_code`/`no_ovf` are the global chunk
+    index and the no-overflow sentinel (traced scalars — the overflow
+    protocol records GLOBAL chunk indices so the host continuation
+    resumes at the right plan row)."""
+    n = data.shape[1]
+    b_sz, qlen = qs.shape
+    zeros = jnp.zeros((b_sz,), jnp.int32)
+    rows_idx = jnp.arange(b_sz)[:, None]
+    first = clb2[:, 0]
+    active = jnp.isfinite(first) & (first <= eps2) & (ovf == no_ovf)
+    nchunks = active.astype(jnp.int32)
+    keep = (clb2 <= eps2[:, None]) & active[:, None]       # INCLUSIVE
+    ok, cand_sid, cand_off = _chunk_candidates(csid, canc, cnm, keep,
+                                               qlen, n, g)
+    cand_code = jnp.repeat(cgsid, g, axis=1)
+    checked = jnp.sum(keep, axis=1, dtype=jnp.int32)
+    npruned = jnp.sum(jnp.isfinite(clb2) & active[:, None] & ~keep,
+                      axis=1, dtype=jnp.int32)
+    tdist = nlbk = ndtw = zeros
+    if measure == "ed":
+        d2 = fused_gather_ed(data, csum, csum2, cslo, cs2lo, center,
+                             csid.reshape(-1), canc.reshape(-1),
+                             qs, g=g, rows=chunk, znorm=znorm,
+                             interpret=interpret)
+        d2 = jnp.where(ok, d2.reshape(b_sz, chunk * g), jnp.inf)
+        tdist = jnp.sum(ok, axis=1, dtype=jnp.int32)
+    else:
+        lb2w, mu, sd = fused_gather_lb_keogh(
+            data, csum, csum2, cslo, cs2lo, center,
+            csid.reshape(-1), canc.reshape(-1), dtw_lo, dtw_hi,
+            g=g, rows=chunk, znorm=znorm, interpret=interpret)
+        lb2w = jnp.where(ok, lb2w.reshape(b_sz, chunk * g), jnp.inf)
+        mu = mu.reshape(b_sz, chunk * g)
+        sd = sd.reshape(b_sz, chunk * g)
+        nlbk = jnp.sum(ok, axis=1, dtype=jnp.int32)
+        surv = lb2w <= eps2[:, None]                       # INCLUSIVE
+        nsurv = jnp.sum(surv, axis=1, dtype=jnp.int32)
+        sidx = _survivors_first(surv)
+
+        def inner_body(st):
+            j, d2acc, indtw = st
+            pos, bi, _, _, db = _survivor_bucket(
+                data, qs, cand_sid, cand_off, sidx, mu, sd, j,
+                sb=sb, r=r, znorm=znorm)
+            m = pos[None, :] < nsurv[:, None]
+            d2acc = d2acc.at[rows_idx, bi].min(
+                jnp.where(m, db, jnp.inf), mode="drop")
+            return (j + 1, d2acc,
+                    indtw + jnp.sum(m, axis=1, dtype=jnp.int32))
+
+        d2 = jnp.full((b_sz, chunk * g), jnp.inf, jnp.float32)
+        _, d2, ndtw = jax.lax.while_loop(
+            lambda st: jnp.any(st[0] * sb < nsurv), inner_body,
+            (jnp.int32(0), d2, ndtw))
+        tdist = nsurv
+    hit = ok & (d2 <= eps2[:, None])
+    nh = jnp.sum(hit, axis=1, dtype=jnp.int32)
+    ovf_now = active & (cnt + nh > cap)
+    hc = jnp.cumsum(hit, axis=1)
+    ranks = (jnp.arange(cap, dtype=jnp.int32)[None, :]
+             - cnt[:, None] + 1)
+    src = jax.vmap(jnp.searchsorted)(hc, ranks)
+    src = jnp.minimum(src, hit.shape[1] - 1)
+    write = ((ranks >= 1) & (ranks <= nh[:, None])
+             & ~ovf_now[:, None] & active[:, None])
+    bd2 = jnp.where(
+        write, jnp.take_along_axis(d2, src, 1).astype(jnp.float32), bd2)
+    bsid = jnp.where(write, jnp.take_along_axis(cand_code, src, 1), bsid)
+    boff = jnp.where(write, jnp.take_along_axis(cand_off, src, 1), boff)
+    cnt = jnp.where(ovf_now, cnt, cnt + nh)
+    ovf = jnp.where(ovf_now & (ovf == no_ovf), i_code, ovf)
+    return bd2, bsid, boff, cnt, ovf, jnp.stack(
+        [nchunks, checked, tdist, nlbk, ndtw, npruned], axis=1)
+
+
+@functools.lru_cache(maxsize=None)
+def _paged_range_chunk_program(cap: int, g: int, chunk: int,
+                               znorm: bool, measure: str, r: int,
+                               sb: int, interpret: bool):
+    core = functools.partial(_paged_range_chunk_core, cap=cap, g=g,
+                             chunk=chunk, znorm=znorm, measure=measure,
+                             r=r, sb=sb, interpret=interpret)
+    return jax.jit(core)
+
+
+def paged_range_scan(store, sids, anchors, n_master, lbs2, qs, dtw_lo,
+                     dtw_hi, eps2, *, capacity: int, g: int,
+                     measure: str, r: int, znorm: bool, chunk_size: int,
+                     prefetch: bool = True,
+                     sync_every: int = PAGED_SYNC_EVERY,
+                     interpret: Optional[bool] = None):
+    """Out-of-core twin of `device_range_scan` over a PayloadStore.
+
+    Same return contract (device buffers + cnt/ovf/stats + the static
+    chunk size); `ovf` records GLOBAL plan chunk indices, so the
+    engine's host continuation of an overflowed query is unchanged.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    sids = np.asarray(sids)
+    anchors = np.asarray(anchors)
+    n_master = np.asarray(n_master)
+    lbs2 = np.asarray(lbs2)
+    eps2_np = np.asarray(eps2, np.float32)
+    n_pad = sids.shape[1]
+    chunk = min(pow2ceil(chunk_size), n_pad)
+    sb = min(128, chunk * g)
+    cap = pow2ceil(capacity)
+    n_chunks = n_pad // chunk
+    first_np = lbs2[:, ::chunk]
+    b_sz = eps2_np.shape[0]
+    qs_d = jnp.asarray(qs, jnp.float32)
+    lo_d = jnp.asarray(dtw_lo, jnp.float32)
+    hi_d = jnp.asarray(dtw_hi, jnp.float32)
+    eps2_d = jnp.asarray(eps2_np)
+    zeros = jnp.zeros((b_sz,), jnp.int32)
+    bd2 = jnp.full((b_sz, cap), jnp.inf, jnp.float32)
+    bsid = jnp.full((b_sz, cap), -1, jnp.int32)
+    boff = jnp.full((b_sz, cap), -1, jnp.int32)
+    cnt = zeros
+    ovf = jnp.full((b_sz,), n_chunks, jnp.int32)
+    stats = jnp.zeros((b_sz, STATS_WIDTH), jnp.int32)
+    no_ovf = np.int32(n_chunks)
+    program = _paged_range_chunk_program(cap, g, chunk, znorm, measure,
+                                         r, sb, interpret)
+    from repro.obs import span                   # obs imports executor
+
+    def run_chunk(slab, i, st):
+        bd2, bsid, boff, cnt, ovf, stats = st
+        (data, csum, csum2, cslo, cs2lo, center, local, canc, cnm,
+         clb2, cgsid) = slab
+        bd2, bsid, boff, cnt, ovf, ds = program(
+            data, csum, csum2, cslo, cs2lo, center, local, canc, cnm,
+            clb2, cgsid, qs_d, lo_d, hi_d, eps2_d, bd2, bsid, boff,
+            cnt, ovf, np.int32(i), no_ovf)
+        return bd2, bsid, boff, cnt, ovf, stats + ds
+
+    def converged(i, st):
+        # lb/eps half of the monolithic cond is host-known from the
+        # packed chunk heads; the overflow half needs the one readback
+        nf = first_np[:, i]
+        live = np.isfinite(nf) & (nf <= eps2_np)
+        if not np.any(live):
+            return True
+        ovf_np = np.asarray(jax.device_get(st[4]))
+        return not np.any(live & (ovf_np == n_chunks))
+
+    st = (bd2, bsid, boff, cnt, ovf, stats)
+    if prefetch and n_chunks > 1:
+        with ThreadPoolExecutor(max_workers=1) as ex:
+            fut = ex.submit(_make_chunk_slab, store, sids, anchors,
+                            n_master, lbs2, 0, chunk)
+            for i in range(n_chunks):
+                with span("page.prefetch", chunk=i):
+                    slab = fut.result()
+                if i + 1 < n_chunks:
+                    fut = ex.submit(_make_chunk_slab, store, sids,
+                                    anchors, n_master, lbs2, i + 1,
+                                    chunk)
+                st = run_chunk(slab, i, st)
+                if i + 1 < n_chunks and (i + 1) % sync_every == 0 \
+                        and converged(i + 1, st):
+                    fut.cancel()
+                    break
+    else:
+        for i in range(n_chunks):
+            with span("page.prefetch", chunk=i):
+                slab = _make_chunk_slab(store, sids, anchors, n_master,
+                                        lbs2, i, chunk)
+            st = run_chunk(slab, i, st)
+            jax.block_until_ready(st[0])         # no overlap: baseline
+            if i + 1 < n_chunks and (i + 1) % sync_every == 0 \
+                    and converged(i + 1, st):
+                break
+    return st + (chunk,)

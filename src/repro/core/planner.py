@@ -394,6 +394,48 @@ def device_range_pack(env_sid, env_anchor, env_nm, lbs, eps2,
 
 
 # --------------------------------------------------------------------------
+# paged access scheduling (host side)
+# --------------------------------------------------------------------------
+#
+# On the paged out-of-core path the packed plan doubles as a *page
+# access schedule*: the LB-sorted candidate order fixes exactly which
+# series rows chunk i will gather, so the slab (and the pages behind
+# it) for chunk i+1 can be faulted + transferred while chunk i
+# computes.  These helpers are the planner's side of that contract —
+# pure numpy, shared by the executor's prefetch worker and the tests.
+
+def chunk_pages(sids: np.ndarray, i: int, chunk: int, page_rows: int):
+    """Resolve plan chunk i's slab: which series rows, which pages.
+
+    `sids` is the packed (B, n_pad) GLOBAL series-id plan (host numpy).
+    Returns (uniq, local, pages): the chunk's sorted-unique global
+    series ids, the (B, chunk) slab-local remap of the plan columns
+    (uniq[local] == the original sids), and the sorted-unique page
+    indices those rows live on under `page_rows`-row pages.
+    """
+    cols = np.ascontiguousarray(sids[:, i * chunk:(i + 1) * chunk])
+    uniq = np.unique(cols)
+    local = np.searchsorted(uniq, cols).astype(np.int32)
+    pages = np.unique(uniq // page_rows)
+    return uniq, local, pages
+
+
+def chunk_page_schedule(sids: np.ndarray, page_rows: int, chunk: int):
+    """The full chunk -> page access schedule of a packed plan.
+
+    Returns a list over chunks of sorted-unique page-index arrays —
+    what a paged scan would fault, in visit order, if it ran every
+    chunk (the scan's early stop only ever truncates this).  Used by
+    tests and capacity analysis; the executor resolves chunks lazily
+    via `chunk_pages` so a converged scan never schedules dead pages.
+    """
+    sids = np.asarray(sids)
+    n_chunks = sids.shape[1] // chunk
+    return [chunk_pages(sids, i, chunk, page_rows)[2]
+            for i in range(n_chunks)]
+
+
+# --------------------------------------------------------------------------
 # masked planning (traced qlen over a padded length bucket)
 # --------------------------------------------------------------------------
 

@@ -73,6 +73,75 @@ class EnvelopeParams:
         return qlen // self.seg_len
 
 
+def host_prefix_stats(rows: np.ndarray):
+    """Per-row f64-accumulated hi/lo split prefix sums, on host.
+
+    The ONE implementation of the Collection's row statistics: both
+    `Collection.from_array` (whole collection) and the paged
+    `PayloadStore` (one page at a time) call it, so per-page prefix
+    sums are bit-identical to whole-collection ones by construction —
+    every field is purely row-wise (mean, cumsum, hi/lo split all
+    operate within a row), never coupling rows.
+
+    Returns np float32 arrays
+    (center (R,), csum (R, n+1), csum_lo, csum2, csum2_lo).
+    """
+    host = np.asarray(rows, np.float64)
+    center64 = host.mean(axis=-1)
+    centered = host - center64[:, None]
+    zeros = np.zeros((host.shape[0], 1), np.float64)
+    csum64 = np.concatenate(
+        [zeros, np.cumsum(centered, axis=-1)], axis=-1)
+    csum2_64 = np.concatenate(
+        [zeros, np.cumsum(centered * centered, axis=-1)], axis=-1)
+
+    def split(x64):
+        hi = x64.astype(np.float32)
+        lo = (x64 - hi.astype(np.float64)).astype(np.float32)
+        return hi, lo
+
+    csum, csum_lo = split(csum64)
+    csum2, csum2_lo = split(csum2_64)
+    return (center64.astype(np.float32), csum, csum_lo, csum2, csum2_lo)
+
+
+@dataclasses.dataclass(frozen=True)
+class PageBlock:
+    """One cached page of a paged payload store: a fixed-size block of
+    series rows with their precomputed prefix-sum statistics, all HOST
+    numpy float32 (pages are assembled into device slabs by the paged
+    scan driver; they never live on device themselves).
+
+    `start` is the first global series id of the page; rows r of the
+    page hold global series `start + r`.
+    """
+
+    start: int                 # first global series id
+    data: np.ndarray           # (R, n) raw values
+    csum: np.ndarray           # (R, n + 1) centered cumsum, hi part
+    csum_lo: np.ndarray        # (R, n + 1) residual
+    csum2: np.ndarray          # (R, n + 1) squared-centered cumsum, hi
+    csum2_lo: np.ndarray       # (R, n + 1) residual
+    center: np.ndarray         # (R,)
+
+    @classmethod
+    def from_rows(cls, start: int, rows: np.ndarray) -> "PageBlock":
+        rows = np.ascontiguousarray(rows, np.float32)
+        center, csum, csum_lo, csum2, csum2_lo = host_prefix_stats(rows)
+        return cls(start=start, data=rows, csum=csum, csum_lo=csum_lo,
+                   csum2=csum2, csum2_lo=csum2_lo, center=center)
+
+    @property
+    def num_rows(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def nbytes(self) -> int:
+        return (self.data.nbytes + self.csum.nbytes
+                + self.csum_lo.nbytes + self.csum2.nbytes
+                + self.csum2_lo.nbytes + self.center.nbytes)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class Collection:
@@ -120,25 +189,13 @@ class Collection:
             return cls(data=data, csum=csum, csum2=csum2, center=center,
                        csum_lo=jnp.zeros_like(csum),
                        csum2_lo=jnp.zeros_like(csum2))
-        host = np.asarray(data, np.float64)
-        center64 = host.mean(axis=-1)
-        centered = host - center64[:, None]
-        zeros = np.zeros((host.shape[0], 1), np.float64)
-        csum64 = np.concatenate(
-            [zeros, np.cumsum(centered, axis=-1)], axis=-1)
-        csum2_64 = np.concatenate(
-            [zeros, np.cumsum(centered * centered, axis=-1)], axis=-1)
-
-        def split(x64):
-            hi = x64.astype(np.float32)
-            lo = (x64 - hi.astype(np.float64)).astype(np.float32)
-            return jnp.asarray(hi), jnp.asarray(lo)
-
-        csum, csum_lo = split(csum64)
-        csum2, csum2_lo = split(csum2_64)
-        return cls(data=data, csum=csum, csum2=csum2,
-                   center=jnp.asarray(center64, jnp.float32),
-                   csum_lo=csum_lo, csum2_lo=csum2_lo)
+        center, csum, csum_lo, csum2, csum2_lo = \
+            host_prefix_stats(np.asarray(data))
+        return cls(data=data, csum=jnp.asarray(csum),
+                   csum2=jnp.asarray(csum2),
+                   center=jnp.asarray(center),
+                   csum_lo=jnp.asarray(csum_lo),
+                   csum2_lo=jnp.asarray(csum2_lo))
 
     @property
     def num_series(self) -> int:

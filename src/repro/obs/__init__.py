@@ -28,6 +28,7 @@ __all__ = [
     "Tracer",
     "get_registry",
     "get_tracer",
+    "record_page_stats",
     "record_search_stats",
     "set_registry",
     "set_tracer",
@@ -115,3 +116,31 @@ def record_search_stats(stats, backend: str = "local",
                     help_text=help_text, backend=backend)
     reg.inc("ulisse_engine_queries", 1.0,
             help_text="Queries with recorded stats", backend=backend)
+
+
+# Page-cache counter deltas exported by `record_page_stats`; cache_bytes
+# is a gauge (current residency), everything else is monotone.
+_PAGE_COUNTERS = (
+    ("hits", "Page cache hits"),
+    ("misses", "Page cache misses (shard faults)"),
+    ("evicted_bytes", "Bytes evicted from the page cache"),
+)
+
+
+def record_page_stats(delta, cache_bytes: float,
+                      registry: MetricsRegistry | None = None) -> None:
+    """Fold a page-cache stats *delta* into ``ulisse_page_cache_*``.
+
+    `delta` holds hit/miss/evicted_bytes increments since the caller's
+    last snapshot (PayloadStore.stats() counters are cumulative, so the
+    caller diffs); `cache_bytes` is the current resident byte count.
+    The engine hot path stays registry-free (DESIGN.md §12) — the serve
+    dispatcher mirrors the store's counters here after each batch."""
+    reg = registry if registry is not None else _registry
+    for field, help_text in _PAGE_COUNTERS:
+        v = delta.get(field, 0)
+        if v:
+            reg.inc("ulisse_page_cache_" + field + "_total", float(v),
+                    help_text=help_text)
+    reg.set_gauge("ulisse_page_cache_bytes", float(cache_bytes),
+                  help_text="Bytes currently resident in the page cache")

@@ -113,6 +113,11 @@ THREAD_ATTRS = {
     # dispatcher-private: written between dispatches only; the version
     # property's unguarded int read is a snapshot, never torn
     "UlisseServer._version": ("dispatcher",),
+    # dispatcher-private adaptive hold window (seconds): read/written
+    # only inside the dispatch loop's locked section
+    "UlisseServer._eff_window": ("dispatcher",),
+    # dispatcher-private page-cache stats snapshot for delta mirroring
+    "UlisseServer._page_last": ("dispatcher",),
     "UlisseServer._closed": ("client",),
     "UlisseServer._drain": ("client",),
     "UlisseServer._thread": ("client",),
@@ -188,7 +193,12 @@ class ServeConfig:
     window_ms:   how long a non-full bucket is held before dispatch —
                  the latency the slowest request of a batch donates to
                  coalescing (0 disables holding: dispatch whatever is
-                 queued the moment the dispatcher is free).
+                 queued the moment the dispatcher is free).  The window
+                 adapts to load: when a dispatch leaves every queue
+                 empty the effective window drops to zero (a lone
+                 request under light traffic never donates hold
+                 latency), and the configured window is restored the
+                 moment a dispatch leaves requests queued behind it.
     max_batch:   requests coalesced into one dispatch.  At or below
                  the engine's own `max_batch` a dispatch is exactly one
                  padded device program per exact length present.
@@ -243,6 +253,11 @@ class UlisseServer:
         self._writer: Deque[_WriterOp] = deque()
         self._pending = 0
         self._version = 0
+        # adaptive hold window: starts at the configured value so the
+        # first requests can still coalesce; drops to 0 once a dispatch
+        # drains the queues, restored when one leaves work behind
+        self._eff_window = config.window_ms / 1e3
+        self._page_last: Optional[dict] = None
         self._closed = False
         self._drain = True
         self._thread: Optional[threading.Thread] = None
@@ -403,12 +418,19 @@ class UlisseServer:
                     if self._writer:
                         op = self._writer.popleft()
                         break
-                    bucket, batch = self._pick_ripe_locked(window)
+                    bucket, batch = self._pick_ripe_locked(
+                        self._eff_window)
                     if batch is not None:
+                        # adapt the hold window to observed load: queues
+                        # drained -> stop holding; backlog left -> the
+                        # configured window coalesces it again
+                        self._eff_window = (window if self._pending > 0
+                                            else 0.0)
                         break
                     if self._closed:
                         return       # drained (or flushed by close)
-                    self._cond.wait(self._timeout_locked(window))
+                    self._cond.wait(self._timeout_locked(
+                        self._eff_window))
             if op is not None:
                 self._apply_writer(op)
             else:
@@ -488,6 +510,16 @@ class UlisseServer:
                                         backend=self._backend_label)
             self.metrics.record_done(
                 bucket, [t1 - r.ticket.t_submit for r in batch])
+            # paged engines only: mirror the store's cumulative cache
+            # counters into the registry as deltas (the engine hot path
+            # stays registry-free, DESIGN.md §12)
+            cur = self.engine.page_cache_stats()
+            if cur is not None:
+                last = self._page_last or {}
+                delta = {k: max(0, cur.get(k, 0) - last.get(k, 0))
+                         for k in ("hits", "misses", "evicted_bytes")}
+                obs.record_page_stats(delta, cur.get("cache_bytes", 0))
+                self._page_last = cur
 
     def _apply_writer(self, op: _WriterOp) -> None:
         """Index mutation between dispatches: the only place the

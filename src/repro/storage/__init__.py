@@ -18,12 +18,14 @@ directly.
 from repro.storage.delta import compact_index, extend_index
 from repro.storage.format import (FORMAT_VERSION, IndexCompatibilityError,
                                   IndexFormatError)
-from repro.storage.store import (LazyCollection, load_raw_data, open_index,
+from repro.storage.store import (LazyCollection, PayloadStore,
+                                 load_raw_data, open_index,
                                  save_distributed, save_index)
 from repro.storage.writer import Writer
 
 __all__ = [
     "FORMAT_VERSION", "IndexFormatError", "IndexCompatibilityError",
-    "LazyCollection", "open_index", "save_index", "save_distributed",
-    "load_raw_data", "Writer", "extend_index", "compact_index",
+    "LazyCollection", "PayloadStore", "open_index", "save_index",
+    "save_distributed", "load_raw_data", "Writer", "extend_index",
+    "compact_index",
 ]

@@ -56,8 +56,8 @@ def extend_index(index: UlisseIndex, series) -> UlisseIndex:
     delta = env_new if index.delta is None else \
         concat_envelope_sets([index.delta, env_new])
     coll = index.collection
-    from repro.storage.store import LazyCollection
-    if isinstance(coll, LazyCollection) and not coll.is_materialized:
+    from repro.storage.store import PayloadStore
+    if isinstance(coll, PayloadStore) and not coll.is_materialized:
         # cold-open (mmap) index: queue the part without touching the
         # on-disk payload — append stays O(new series), the stored
         # shards materialize only when verification first reads raw data

@@ -202,3 +202,37 @@ def test_append_compact_while_querying(walk_collection, rng):
         # on d^2 (the engine's f64-polished side is the accurate one)
         np.testing.assert_allclose(res.dists ** 2, ref.dists ** 2,
                                    atol=1e-3, rtol=1e-3)
+
+
+def test_adaptive_window_idle_fast_burst_batched(engine, walk_collection,
+                                                 rng):
+    """PR 9 satellite: the hold window adapts to load.  A dispatch that
+    drains every queue drops the effective window to 0, so a lone
+    request on an idle server answers immediately instead of donating
+    the whole window_ms; a backlog restores the configured window and
+    the held buckets still coalesce (some dispatch fill > 1)."""
+    spec = QuerySpec(k=3)
+    server = UlisseServer(engine, spec,
+                          ServeConfig(window_ms=250.0, max_batch=4))
+    server.warmup(LENGTHS)
+    qs = _queries(walk_collection, rng, n=9)
+    # the first dispatch pays the configured window (adaptation starts
+    # there so a cold burst can coalesce) and leaves the queues empty
+    _assert_same(server.search(qs[0]), engine.search(qs[0], spec))
+    t0 = time.perf_counter()
+    res = server.search(qs[1])
+    dt = time.perf_counter() - t0
+    _assert_same(res, engine.search(qs[1], spec))
+    assert dt < 0.2, (f"idle-server request took {dt * 1e3:.0f}ms — "
+                      "the 250ms hold window was not shrunk")
+    # burst: more requests than max_batch land while the first of them
+    # is being dispatched, so a later pick leaves a backlog behind and
+    # the restored window coalesces it
+    tickets = [server.submit(q) for q in qs]
+    for q, t in zip(qs, tickets):
+        _assert_same(t.result(timeout=300), engine.search(q, spec))
+    server.close()
+    snap = server.metrics.snapshot()
+    max_fill = max(int(f) for row in snap["buckets"].values()
+                   for f in row["fill_hist"])
+    assert max_fill >= 2, f"burst never coalesced: {snap}"

@@ -97,7 +97,13 @@ def test_open_is_lazy_until_verification(znorm_engine, walk_collection,
     assert coll.series_len == walk_collection.shape[1]
     assert not coll.is_materialized
     reopened.search(walk_collection[0, 0:96], QuerySpec(k=1))
-    assert coll.is_materialized, "verification gathers raw windows"
+    if reopened.page_cache_stats() is not None:
+        # memory-constrained run (ULISSE_MEMORY_BUDGET_BYTES below the
+        # payload): verification reads through the page cache instead
+        assert not coll.is_materialized
+        assert reopened.page_cache_stats()["misses"] > 0
+    else:
+        assert coll.is_materialized, "verification gathers raw windows"
 
 
 def test_cold_open_append_stays_lazy_roundtrip(walk_collection, tmp_path):
@@ -125,7 +131,10 @@ def test_cold_open_append_stays_lazy_roundtrip(walk_collection, tmp_path):
     ref = UlisseEngine.from_collection(
         Collection.from_array(walk_collection), p, **BUILD)
     got = cold.search(q, QuerySpec(k=5))
-    assert cold.index.collection.is_materialized   # first verification
+    if cold.page_cache_stats() is None:
+        assert cold.index.collection.is_materialized  # first verification
+    else:                       # budgeted run: stays out-of-core
+        assert not cold.index.collection.is_materialized
     want = ref.search(q, QuerySpec(k=5))
     np.testing.assert_allclose(got.dists, want.dists, atol=1e-5)
     np.testing.assert_array_equal(got.series, want.series)
