@@ -296,6 +296,92 @@ def bench_distributed_scan():
               f"({n_dev} devices)", flush=True)
 
 
+def bench_dist_ingest():
+    """PR 10 tentpole metric: the distributed streaming-ingestion path
+    (DESIGN.md §15) — append latency into the per-shard delta buffers,
+    delta-present search through the delta-first shard pack vs the
+    compacted index, compact() wall time, and cold open() wall time
+    from the persisted per-shard sections (the O(index) path) vs the
+    re-summarizing rebuild fallback."""
+    import shutil
+    import tempfile
+    import time
+
+    import jax
+
+    from repro.core import EnvelopeParams, QuerySpec, UlisseEngine
+
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    ns = 64 * n_dev
+    data = np.cumsum(RNG.normal(size=(ns, 256)), -1).astype(np.float32)
+    extra = np.cumsum(RNG.normal(size=(8 * n_dev, 256)), -1
+                      ).astype(np.float32)
+    p = EnvelopeParams(lmin=96, lmax=160, gamma=16, seg_len=16,
+                       znorm=True)
+    qlen, k = 128, 10
+    qs = [data[i % ns, 7:7 + qlen]
+          + RNG.normal(size=qlen).astype(np.float32) * 0.05
+          for i in range(4)]
+    spec = QuerySpec(k=k)
+
+    engine = UlisseEngine.distributed(mesh, p, data, max_batch=8)
+    engine.search(qs, spec)                 # warm the no-delta program
+
+    t0 = time.perf_counter()
+    engine.append(extra)
+    dt = time.perf_counter() - t0
+    emit("dist_ingest_append", dt / extra.shape[0],
+         f"rows={extra.shape[0]} devices={n_dev}")
+
+    engine.search(qs, spec)                 # warm the delta program
+    samples = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        engine.search(qs, spec)
+        samples.append(time.perf_counter() - t0)
+    dt = float(np.median(samples))
+    emit("dist_ingest_delta_search_B4", dt / 4,
+         f"qps={4 / dt:.1f} delta={extra.shape[0]} devices={n_dev}")
+
+    tmp = tempfile.mkdtemp(prefix="bench_dist_ingest_")
+    try:
+        path = tmp + "/idx"
+        engine.save(path)
+        t0 = time.perf_counter()
+        cold = UlisseEngine.open(path, mesh=mesh)
+        dt_cold = time.perf_counter() - t0
+        emit("dist_ingest_cold_open", dt_cold,
+             f"sections devices={n_dev}")
+        cold.search(qs, spec)               # first search pays payload
+
+        t0 = time.perf_counter()
+        engine.compact()
+        dt = time.perf_counter() - t0
+        emit("dist_ingest_compact", dt,
+             f"rows={ns + extra.shape[0]} devices={n_dev}")
+        engine.search(qs, spec)
+
+        # rebuild-from-raw reference for the cold open: same payload,
+        # re-running summarization (what open() cost before §15)
+        from repro.storage import store as storage_store
+        stored, bp, raw, _ = storage_store.load_raw_data(path, p)
+        t0 = time.perf_counter()
+        rebuilt = UlisseEngine.distributed(mesh, stored, raw,
+                                           max_batch=8,
+                                           breakpoints=bp)
+        rebuilt._ensure_sharded_index()
+        dt_rebuild = time.perf_counter() - t0
+        from benchmarks.common import RESULTS
+        ratio = dt_rebuild / max(dt_cold, 1e-12)
+        RESULTS["dist_ingest_cold_open_speedup"] = {
+            "ratio": round(ratio, 2), "devices": n_dev}
+        print(f"# dist_ingest_cold_open_speedup = {ratio:.2f}x "
+              f"({n_dev} devices)", flush=True)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def bench_serving():
     """PR 6 tentpole metric: serving-tier queries/sec through the
     length-bucket dynamic batcher (repro.serve.UlisseServer) vs the
@@ -622,5 +708,5 @@ def bench_obs_overhead():
 ALL = [bench_mindist, bench_batch_ed, bench_lb_keogh, bench_dtw_band,
        bench_envelope_build, bench_engine_batched, bench_exact_scan,
        bench_range_scan, bench_approx_batched, bench_distributed_scan,
-       bench_serving, bench_storage, bench_paged_scan,
-       bench_obs_overhead]
+       bench_dist_ingest, bench_serving, bench_storage,
+       bench_paged_scan, bench_obs_overhead]

@@ -54,6 +54,15 @@ def write_json(path: str) -> None:
             doc = {}
     merged = doc.get("results", {})
     merged.update(RESULTS)
+    # runner-speed stamp: check_regression re-measures this fixed
+    # numpy workload at gate time and scales the committed qps by the
+    # ratio, so the gate compares work, not machines.  Stamped into
+    # BOTH the top-level calibration (gates the ``results`` overwrite)
+    # and this run's trajectory record — a trajectory row without its
+    # own stamp cannot be speed-normalized against any other row, so
+    # the perf history would be machine noise; check_trajectory
+    # rejects such records.
+    calibration = {"reference_us": round(reference_workload_us(), 1)}
     trajectory = doc.get("trajectory", [])
     trajectory.append({
         "sha": _git_sha(),
@@ -61,12 +70,9 @@ def write_json(path: str) -> None:
             datetime.timezone.utc).isoformat(timespec="seconds"),
         "backend": jax.default_backend(),
         "devices": jax.device_count(),
+        "reference_us": calibration["reference_us"],
         "results": dict(RESULTS),
     })
-    # runner-speed stamp: check_regression re-measures this fixed
-    # numpy workload at gate time and scales the committed qps by the
-    # ratio, so the gate compares work, not machines
-    calibration = {"reference_us": round(reference_workload_us(), 1)}
     with open(path, "w") as f:
         json.dump({"backend": jax.default_backend(),
                    "calibration": calibration,

@@ -51,11 +51,11 @@ def run_audit(root: str,
     need_programs = bool({"R1", "R3", "R5"} & set(chosen))
     need_engines = need_programs or "R2" in chosen
     if need_engines:
-        local, dist, paged = _tiny_engines()
+        local, dist, delta, paged = _tiny_engines()
         meta["devices"] = _device_count()
     if need_programs:
         records = (local.audit_programs() + dist.audit_programs()
-                   + paged.audit_programs())
+                   + delta.audit_programs() + paged.audit_programs())
         meta["programs"] = [r["name"] for r in records]
         for rec in records:
             if "R1" in chosen:
@@ -69,7 +69,7 @@ def run_audit(root: str,
         if "R5" in chosen:
             findings.extend(_audit_constants(records))
     if "R2" in chosen:
-        findings.extend(_audit_host_sync(local, dist, paged))
+        findings.extend(_audit_host_sync(local, dist, delta, paged))
     if "R4" in chosen:
         findings.extend(_audit_retrace_keys())
     if "R6" in chosen:
@@ -105,6 +105,13 @@ def _tiny_engines():
                                          max_batch=4)
     mesh = jax.make_mesh((d,), ("data",))
     dist = UlisseEngine.distributed(mesh, p, data, max_batch=4)
+    # delta variant: same base rows plus one appended shard-divisible
+    # batch, so the delta-first sharded families (DESIGN.md §15) are
+    # compiled and audited exactly as served under streaming ingestion
+    extra = np.cumsum(rng.normal(size=(d, _SERIES_LEN)), -1
+                      ).astype(np.float32)
+    delta = UlisseEngine.distributed(mesh, p, data, max_batch=4)
+    delta.append(extra)
     # paged variant: same index, payload behind a PayloadStore with a
     # cache budget far below payload_bytes — audits the chunk-slab
     # programs and their plan/early-stop readback budget
@@ -114,7 +121,7 @@ def _tiny_engines():
     paged = UlisseEngine.from_index(
         pidx, max_batch=4,
         memory_budget_bytes=max(1, store.payload_bytes // 4))
-    return local, dist, paged
+    return local, dist, delta, paged
 
 
 def _hlo_corroborate(records) -> List[Finding]:
@@ -136,7 +143,7 @@ def _hlo_corroborate(records) -> List[Finding]:
 # R2 — host-sync budget (dynamic steady-state counting)
 # ---------------------------------------------------------------------------
 
-def _audit_host_sync(local, dist, paged) -> List[Finding]:
+def _audit_host_sync(local, dist, delta, paged) -> List[Finding]:
     import numpy as np
 
     from repro.core import QuerySpec
@@ -152,6 +159,13 @@ def _audit_host_sync(local, dist, paged) -> List[Finding]:
         ("sharded_knn[exact]", dist,
          QuerySpec(k=3, chunk_size=16)),
         ("sharded_range", dist,
+         QuerySpec(eps=0.5, range_capacity=64, chunk_size=16)),
+        # delta-carrying engine: the streaming-ingestion scan must hold
+        # the SAME one-readback budget — the delta rows ride inside the
+        # shard pack, not through extra host round-trips
+        ("sharded_delta_knn[exact]", delta,
+         QuerySpec(k=3, chunk_size=16)),
+        ("sharded_delta_range", delta,
          QuerySpec(eps=0.5, range_capacity=64, chunk_size=16)),
         # paged paths sync more than the monolithic budget by design:
         # the LB plan readback IS the page access schedule, and the
@@ -191,6 +205,11 @@ def _audit_retrace_keys() -> List[Finding]:
     bases = {
         "sharded_knn": eng.QuerySpec(),
         "sharded_range": eng.QuerySpec(eps=1.0),
+        # delta-aware sharded families (DESIGN.md §15): pack geometry
+        # (delta rows / env rows per shard) joins the key at the call
+        # site, so the spec-level key contract matches the classic pair
+        "sharded_delta_knn": eng.QuerySpec(),
+        "sharded_delta_range": eng.QuerySpec(eps=1.0),
         "local_scan": eng.QuerySpec(),
         "local_range": eng.QuerySpec(eps=1.0),
         "local_paged": eng.QuerySpec(),

@@ -179,6 +179,47 @@ PROGRAM_KEY_SPECS = {
             "max_leaves": "approx-descent knob, knn family only",
         },
     },
+    "sharded_delta_knn": {
+        # the delta/ingestion k-NN family (DESIGN.md §15): same spec
+        # fields as sharded_knn, distinct prefix — the program differs
+        # structurally (15th gmap input, delta-first pack).  The
+        # per-shard delta geometry (delta env rows) joins the key at
+        # the call site like legacy_host_knn's bucket: it is engine
+        # state, not a QuerySpec field, and every append changes it.
+        "key": lambda s: ("delta_knn", s.k, s.measure, s.r,
+                          s.chunk_size, s.sync_every, _knn_budget(s),
+                          s.use_paa_bounds),
+        "not_in_key": {
+            "eps": "selects the range family instead of this one",
+            "approx_first": "local-backend composition knob; the "
+                            "sharded scan always seeds in-graph",
+            "scan_backend": "selects whether this family compiles at all",
+            "verify_top": "legacy host-backend escalation knob",
+            "range_capacity": "range family only",
+            # mode/max_leaves ARE in the key, folded through the
+            # _knn_budget extra
+        },
+    },
+    "sharded_delta_range": {
+        # delta/ingestion range family: gmap globalization only — the
+        # range pack is sortless, so no delta-first region; the
+        # per-shard row count (main + delta env rows) joins the key at
+        # the call site (engine state, changes on append/compact)
+        "key": lambda s: ("delta_range", s.range_capacity, s.measure,
+                          s.r, s.chunk_size, s.use_paa_bounds),
+        "not_in_key": {
+            "k": "a range query returns every hit, k is ignored",
+            "eps": "runtime operand (the (B,) eps2 array), not a trace "
+                   "constant",
+            "mode": "range queries have no exact/approx split",
+            "approx_first": "range queries run no approximate pass",
+            "scan_backend": "selects whether this family compiles at all",
+            "verify_top": "legacy host-backend escalation knob",
+            "sync_every": "the eps cut never moves, so the range scan "
+                          "broadcasts no global bsf",
+            "max_leaves": "approx-descent knob, knn family only",
+        },
+    },
     "local_scan": {
         # the real cache is executor._device_scan_program's lru_cache on
         # (k, g, chunk, znorm, measure, r, sb, interpret); the
@@ -321,7 +362,9 @@ class UlisseEngine:
                  breakpoints=None, axes=("data",),
                  num_series: int = 0, series_len: int = 0,
                  max_batch: int = 8,
-                 memory_budget_bytes: Optional[int] = None):
+                 memory_budget_bytes: Optional[int] = None,
+                 shard_blocks=None, delta_blocks=None,
+                 delta_gmaps=None, cold_sections=None):
         self._index = index
         self.params = params if params is not None else index.params
         if memory_budget_bytes is None:
@@ -351,6 +394,29 @@ class UlisseEngine:
                 * (num_series // shards))
             if series_len < self.params.lmax:
                 raise ValueError("series shorter than lmax")
+            # per-shard ingestion state (DESIGN.md §15): main raw
+            # blocks (np or mmap; None = derive lazily from the device
+            # copy), unsorted delta blocks, per-shard global ids of the
+            # delta rows (NOT affine in the shard index once several
+            # append parts exist), and — for the O(index) cold open —
+            # mmap'd precomputed index sections covering each shard's
+            # [main; delta] prefix as of the save.
+            self._shard_main = (list(shard_blocks)
+                                if shard_blocks is not None else None)
+            self._shard_delta = (
+                list(delta_blocks) if delta_blocks is not None
+                else [np.zeros((0, series_len), np.float32)] * shards)
+            self._delta_gmaps = (
+                [np.asarray(g, np.int64) for g in delta_gmaps]
+                if delta_gmaps is not None
+                else [np.zeros((0,), np.int64)] * shards)
+            self._delta_total = int(sum(b.shape[0]
+                                        for b in self._shard_delta))
+            self._cold_sections = cold_sections
+            if sharded_data is None and shard_blocks is None:
+                raise ValueError(
+                    "distributed engine needs sharded_data or "
+                    "shard_blocks")
 
     # ------------------------------------------------------------------
     # constructors
@@ -410,9 +476,15 @@ class UlisseEngine:
 
         Without `mesh`: the local backend over the stored sorted
         envelopes + block levels; raw series are mmap'd lazily, so the
-        cold open reads O(index), not O(raw data).  With `mesh`: the
-        raw payload shards are re-sharded onto the mesh (elastic — any
-        mesh size, from either a local or a distributed save).
+        cold open reads O(index), not O(raw data).  With `mesh`: a
+        distributed save carrying per-shard index sections (DESIGN.md
+        §15) whose shard count matches the mesh reopens O(index) too —
+        manifest + mmap handles only, no re-summarization; the raw
+        payload bytes flow at first search, when the assembled index
+        device_puts.  Any other combination (old save, local save,
+        mesh size != saved shard count) falls back to re-sharding the
+        raw payload and re-summarizing on the new mesh (elastic, like
+        before — appended delta rows survive the re-shard).
 
         `params`: optional expected EnvelopeParams; a mismatch with the
         stored ones raises IndexCompatibilityError instead of silently
@@ -420,6 +492,21 @@ class UlisseEngine:
         """
         from repro.storage import store
         if mesh is not None:
+            cold = store.load_distributed_sections(path, params)
+            if cold is not None:
+                (stored, bp, manifest, mains, deltas,
+                 dgmaps, sections) = cold
+                axes_t = tuple(manifest.get("axes", list(axes)))
+                if _shards_of(mesh, axes_t) == len(mains):
+                    return cls(
+                        params=stored, mesh=mesh, breakpoints=bp,
+                        axes=axes_t,
+                        num_series=int(sum(m.shape[0] for m in mains)),
+                        series_len=int(manifest["series_len"]),
+                        max_batch=(manifest.get("max_batch", 8)
+                                   if max_batch is None else max_batch),
+                        shard_blocks=mains, delta_blocks=deltas,
+                        delta_gmaps=dgmaps, cold_sections=sections)
             stored, bp, data, manifest = store.load_raw_data(path, params)
             return cls.distributed(
                 mesh, stored, data, breakpoints=bp,
@@ -437,16 +524,24 @@ class UlisseEngine:
 
         Local backend: sorted envelopes + levels + breakpoints + raw
         shards (+ the delta buffer, if series were appended and not yet
-        compacted).  Distributed backend: per-shard raw payloads + the
-        shard table (envelopes are device-resident summaries there).
+        compacted).  Distributed backend: per-shard raw payloads
+        (main + delta, with the delta rows' global-id map) PLUS the
+        per-shard index sections — envelope rows and prefix sums for
+        each shard's [main; delta] block — so the next
+        `open(path, mesh=...)` on a matching mesh reads O(index)
+        instead of re-running summarization (DESIGN.md §15).
         """
         from repro.storage import store
         if self.is_distributed:
-            from repro.distributed.ulisse import shard_host_arrays
+            mains = [np.asarray(b, np.float32)
+                     for b in self._shard_main_blocks()]
+            sections = [self._shard_index_rows(s)
+                        for s in range(self._shards)]
             return store.save_distributed(
-                path, self.params, self._breakpoints,
-                shard_host_arrays(self._sharded),
-                axes=self._axes, max_batch=self.max_batch)
+                path, self.params, self._breakpoints, mains,
+                axes=self._axes, max_batch=self.max_batch,
+                delta_blocks=self._shard_delta,
+                delta_gmaps=self._delta_gmaps, sections=sections)
         return store.save_index(path, self._index)
 
     @classmethod
@@ -461,34 +556,129 @@ class UlisseEngine:
     # incremental ingestion (delta + compaction, repro.storage.delta)
     # ------------------------------------------------------------------
 
+    def validate_append(self, series) -> int:
+        """Check (without mutating) that `series` is appendable here.
+
+        Raises the same ValueError `append` would; returns the row
+        count.  Read-only and cheap — the serving tier's client-side
+        admission gate calls this on the submitting thread so malformed
+        parts are rejected at submit time instead of poisoning the
+        writer lane (DESIGN.md §11/§15).
+        """
+        arr = np.asarray(series, np.float32)
+        if arr.ndim == 1:
+            arr = arr[None]
+        if arr.ndim != 2:
+            raise ValueError(
+                f"expected (n,) or (S, n) series, got {arr.shape}")
+        n = (self._series_len if self.is_distributed
+             else self._index.collection.series_len)
+        if arr.shape[1] != n:
+            raise ValueError(
+                f"appended series_len {arr.shape[1]} != index "
+                f"series_len {n} (collections are fixed-width)")
+        if self.is_distributed and arr.shape[0] % self._shards != 0:
+            raise ValueError(
+                f"appended part of {arr.shape[0]} series is not "
+                f"divisible by the {self._shards}-shard mesh; pad the "
+                "part to a multiple of the shard count (row-sharded "
+                "delta placement follows the build layout)")
+        return int(arr.shape[0])
+
     def append(self, series) -> None:
         """Ingest new series: immediately searchable via the delta set.
 
-        O(new series) work — envelopes of the appended series land in
-        an unsorted delta buffer searched alongside the main sorted
-        set; no re-sort, no block rebuild.  Call `compact()` once a
-        batch of appends has accumulated.
+        O(new series) work on either backend — envelopes of the
+        appended series land in an unsorted delta buffer searched
+        alongside the main sorted set; no re-sort, no block rebuild.
+        Distributed: the part row-shards over the mesh like
+        `build_sharded_index` (shard s takes rows [s*q, (s+1)*q) of
+        the part), so the part size must divide by the shard count;
+        each shard's delta rows keep their GLOBAL ids in a per-shard
+        map (DESIGN.md §15).  Call `compact()` once a batch of appends
+        has accumulated.
         """
         if self.is_distributed:
-            raise NotImplementedError(
-                "append is a local-backend operation; save the shards, "
-                "extend the data, and reopen with UlisseEngine.open("
-                "path, mesh=...) to grow a distributed engine")
+            arr = np.asarray(series, np.float32)
+            if arr.ndim == 1:
+                arr = arr[None]
+            self.validate_append(arr)
+            self._shard_main_blocks()     # pin main before state grows
+            q = arr.shape[0] // self._shards
+            base = self._num_series + self._delta_total
+            for s in range(self._shards):
+                self._shard_delta[s] = np.concatenate(
+                    [self._shard_delta[s], arr[s * q:(s + 1) * q]])
+                self._delta_gmaps[s] = np.concatenate(
+                    [self._delta_gmaps[s],
+                     base + s * q + np.arange(q, dtype=np.int64)])
+            self._delta_total += int(arr.shape[0])
+            self._invalidate_distributed_caches()
+            return
         from repro.storage import delta as _delta
         self._index = _delta.extend_index(self._index, series)
 
     def compact(self) -> None:
         """Merge the delta buffer into the main sorted set (rebuilds
-        block levels; bit-identical to a from-scratch build)."""
+        block levels; bit-identical to a from-scratch build).
+
+        Distributed: the mesh-wide merge — delta rows fold into the
+        main payload in GLOBAL id order (original series, then append
+        parts in arrival order) and the collection re-shards evenly,
+        which is EXACTLY the layout `UlisseEngine.distributed` builds
+        from the concatenated data, so the compacted engine is
+        bit-identical to a from-scratch sharded build with the same
+        breakpoints (asserted in tests/test_distributed_ingest.py).
+        Cold-open index sections are dropped (they describe the
+        pre-compaction shard layout); the next save rewrites them.
+        """
         if self.is_distributed:
-            raise NotImplementedError("compact is a local-backend op")
+            if self._delta_total == 0 and self._cold_sections is None:
+                return
+            from repro.distributed.ulisse import shard_collection
+            full = self._host_data()
+            total = self._num_series + self._delta_total
+            shards = self._shards
+            self._num_series = total
+            self._delta_total = 0
+            r = total // shards
+            self._shard_main = [full[s * r:(s + 1) * r]
+                                for s in range(shards)]
+            self._shard_delta = [
+                np.zeros((0, self._series_len), np.float32)] * shards
+            self._delta_gmaps = [np.zeros((0,), np.int64)] * shards
+            self._cold_sections = None
+            self._env_rows_per_shard = (
+                self.params.num_envelopes(self._series_len) * r)
+            self._sharded = shard_collection(
+                self._mesh, jnp.asarray(full), self._axes)
+            self._invalidate_distributed_caches(clear_programs=True)
+            self._host_data_cache = full
+            return
         from repro.storage import delta as _delta
         self._index = _delta.compact_index(self._index)
 
+    def _invalidate_distributed_caches(self,
+                                       clear_programs: bool = False):
+        """Drop device-resident index assemblies (and, on compact, the
+        compiled programs whose static geometry changed)."""
+        self._sharded_index = None
+        self._delta_index = None
+        self._host_data_cache = None
+        if clear_programs:
+            self._programs.clear()
+
     @property
     def delta_size(self) -> int:
-        """Envelopes waiting in the ingestion delta (0 when compacted)."""
-        if self.is_distributed or self._index.delta is None:
+        """Envelopes waiting in the ingestion delta (0 when compacted).
+
+        Distributed: the mesh-wide count across every shard's delta
+        buffer — feed it to `distributed_index_stats(delta_envelopes=
+        ...)` for capacity planning."""
+        if self.is_distributed:
+            return (self.params.num_envelopes(self._series_len)
+                    * self._delta_total)
+        if self._index.delta is None:
             return 0
         return self._index.delta.size
 
@@ -535,9 +725,10 @@ class UlisseEngine:
 
     @property
     def raw_data(self) -> np.ndarray:
-        """The (S, n) raw series this engine serves (gathered to host)."""
+        """The (S, n) raw series this engine serves (gathered to host,
+        appended-but-uncompacted series included, global id order)."""
         if self.is_distributed:
-            return np.asarray(self._sharded)
+            return self._host_data()
         return np.asarray(self._index.collection.data)
 
     # ------------------------------------------------------------------
@@ -634,7 +825,10 @@ class UlisseEngine:
                      QuerySpec(eps=1.0),
                      QuerySpec(measure="dtw", r=4, eps=1.0),
                      QuerySpec(mode="approx")]
-            if self.is_distributed:
+            if self.is_distributed and not self._delta_active():
+                # the legacy host oracle predates per-shard delta
+                # buffers and raises at dispatch on a delta-carrying
+                # engine — nothing to audit there
                 specs.append(QuerySpec(scan_backend="host"))
         records, seen = [], set()
         for spec in specs:
@@ -753,22 +947,29 @@ class UlisseEngine:
                     jnp.full((batch,), qlen, jnp.int32))
             family, taint = "legacy_host_knn", ()
         else:
-            index_arrs = self._ensure_sharded_index()
+            delta = self._delta_active()
+            index_arrs = (self._ensure_delta_index() if delta
+                          else self._ensure_sharded_index())
             # the sharded index tuple leads the argument list, so the
             # csum-carrying fields' positions ARE the taint indices
+            # (the delta families' trailing gmap input sits past them)
             taint = tuple(i for i, f in enumerate(SHARDED_INDEX_FIELDS)
                           if "csum" in f)
             _, qstack, dlo, dhi, qb, qh = self._stack_prepared(
                 [q] * batch, spec)
             if spec.is_range:
-                family = "sharded_range"
-                fn, _ = self._sharded_range_program(spec)
+                family = ("sharded_delta_range" if delta
+                          else "sharded_range")
+                fn, _ = (self._sharded_delta_range_program(spec)
+                         if delta else self._sharded_range_program(spec))
                 args = (*index_arrs, qstack, dlo, dhi, qb, qh,
                         jnp.full((batch,), float(spec.eps) ** 2,
                                  jnp.float32))
             else:
-                family = "sharded_knn"
-                fn = self._sharded_knn_program(spec)
+                family = ("sharded_delta_knn" if delta
+                          else "sharded_knn")
+                fn = (self._sharded_delta_knn_program(spec) if delta
+                      else self._sharded_knn_program(spec))
                 args = (*index_arrs, qstack, dlo, dhi, qb, qh)
         mode = ("-approx" if spec.mode == "approx"
                 and not spec.is_range else "")
@@ -1395,13 +1596,143 @@ class UlisseEngine:
     # merge, ONE host sync per batch
     # ------------------------------------------------------------------
 
+    def _delta_active(self) -> bool:
+        """True when queries must run the delta/gmap program families:
+        per-shard delta rows exist, or the engine cold-opened from
+        index sections (no global device payload to fall back to).
+        The n_delta=0 cold case runs identical arithmetic to the
+        classic family — the n_delta=0 pack IS the classic pack."""
+        return (self._delta_total > 0 or self._cold_sections is not None
+                or self._sharded is None)
+
+    def _shard_main_blocks(self) -> list:
+        """Per-shard host views of the MAIN payload (row order).  Warm
+        engines derive them once from the device copy; cold-opened
+        engines carry mmap handles from the store."""
+        if self._shard_main is None:
+            full = np.asarray(self._sharded)
+            r = self._num_series // self._shards
+            self._shard_main = [full[s * r:(s + 1) * r]
+                                for s in range(self._shards)]
+        return self._shard_main
+
     def _host_data(self) -> np.ndarray:
-        """Host copy of the full (S, n) collection (gathered once,
-        cached) — feeds the f64 ED polish and the range-overflow
-        continuation; never touched on the scan fast path."""
+        """Host copy of the full (S, n) collection in GLOBAL id order
+        (gathered once, cached) — feeds the f64 ED polish and the
+        range-overflow continuation; never touched on the scan fast
+        path.  With per-shard delta blocks the global order interleaves
+        across shards (each append part row-sharded), so delta rows
+        scatter back through their per-shard gmaps."""
         if getattr(self, "_host_data_cache", None) is None:
-            self._host_data_cache = np.asarray(self._sharded)
+            if self._delta_total == 0 and self._sharded is not None:
+                self._host_data_cache = np.asarray(self._sharded)
+            else:
+                total = self._num_series + self._delta_total
+                out = np.empty((total, self._series_len), np.float32)
+                mains = self._shard_main_blocks()
+                r = self._num_series // self._shards
+                for s in range(self._shards):
+                    out[s * r:(s + 1) * r] = mains[s]
+                    if self._shard_delta[s].shape[0]:
+                        out[self._delta_gmaps[s]] = self._shard_delta[s]
+                self._host_data_cache = out
         return self._host_data_cache
+
+    def _delta_env_rows(self) -> int:
+        """Per-shard envelope rows sitting in the delta buffer (static
+        geometry of the delta k-NN pack; joins the program cache key)."""
+        return (self.params.num_envelopes(self._series_len)
+                * (self._delta_total // self._shards))
+
+    def _shard_index_rows(self, s: int) -> dict:
+        """Host index arrays (INDEX_SECTION_FIELDS) for shard `s`'s
+        [main; delta] block, env series_id LOCAL to the block.
+
+        Cold sections cover the block's saved prefix; only the series
+        appended since (the delta tail) are summarized — appends only
+        ever extend a shard's tail, so a saved section stays a valid
+        prefix until compact() reshuffles the layout.  Per-series
+        determinism (see distributed.ulisse.build_host_index) makes
+        the concatenation bit-equal to summarizing the whole block.
+        """
+        from repro.distributed.ulisse import (INDEX_SECTION_FIELDS,
+                                              build_host_index)
+        mains = self._shard_main_blocks()
+        dblk = self._shard_delta[s]
+        r_m = mains[s].shape[0]
+        blocks = []
+        cov = 0
+        if self._cold_sections is not None:
+            sec = self._cold_sections[s]
+            cov = int(sec["csum"].shape[0])
+            blocks.append({f: np.asarray(sec[f])
+                           for f in INDEX_SECTION_FIELDS})
+        if cov < r_m + dblk.shape[0]:
+            if cov < r_m:
+                tail = (np.concatenate([mains[s][cov:], dblk])
+                        if dblk.shape[0] else np.asarray(mains[s][cov:]))
+            else:
+                tail = dblk[cov - r_m:]
+            idx = build_host_index(self.params, self._breakpoints, tail)
+            idx["series_id"] = (idx["series_id"] + cov).astype(np.int32)
+            blocks.append(idx)
+        if len(blocks) == 1:
+            return blocks[0]
+        return {f: np.concatenate([b[f] for b in blocks])
+                for f in INDEX_SECTION_FIELDS}
+
+    def _shard_gmap(self, s: int) -> np.ndarray:
+        """gmap for shard `s`: local data row -> GLOBAL series id.  The
+        main prefix is affine by construction (contiguous row split);
+        the delta tail carries the recorded per-part ids."""
+        r_m = self._num_series // self._shards
+        return np.concatenate(
+            [np.arange(s * r_m, (s + 1) * r_m, dtype=np.int64),
+             self._delta_gmaps[s]])
+
+    def _ensure_delta_index(self):
+        """Device arrays for the delta/gmap program families: the 14
+        SHARDED_INDEX_FIELDS plus gmap, built once lazily.
+
+        Per-shard [main; delta] blocks concatenate host-side in shard
+        order — equal block sizes per shard (appends divide by the
+        shard count), so the contiguous row split of NamedSharding
+        lands each shard exactly on its own block.  This is where a
+        cold-opened engine first touches the payload bytes: open()
+        itself reads manifest + mmap handles only (DESIGN.md §15)."""
+        if getattr(self, "_delta_index", None) is None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            from repro.distributed.ulisse import INDEX_SECTION_FIELDS
+            mains = self._shard_main_blocks()
+            rows = [self._shard_index_rows(s)
+                    for s in range(self._shards)]
+            spec = P(self._axes if len(self._axes) > 1
+                     else self._axes[0])
+            sharding = NamedSharding(self._mesh, spec)
+
+            def put(field):
+                blocks = [rows[s][field] for s in range(self._shards)]
+                return jax.device_put(
+                    blocks[0] if len(blocks) == 1
+                    else np.concatenate(blocks), sharding)
+
+            data = [np.concatenate([np.asarray(mains[s]),
+                                    self._shard_delta[s]])
+                    if self._shard_delta[s].shape[0]
+                    else np.asarray(mains[s])
+                    for s in range(self._shards)]
+            gmap = [self._shard_gmap(s).astype(np.int32)
+                    for s in range(self._shards)]
+            arrs = (jax.device_put(
+                        data[0] if len(data) == 1
+                        else np.concatenate(data), sharding),)
+            arrs += tuple(put(f) for f in INDEX_SECTION_FIELDS)
+            arrs += (jax.device_put(
+                        gmap[0] if len(gmap) == 1
+                        else np.concatenate(gmap), sharding),)
+            self._delta_index = arrs
+        return self._delta_index
 
     def _ensure_sharded_index(self):
         """Per-shard device-resident index arrays, built once lazily.
@@ -1466,6 +1797,49 @@ class UlisseEngine:
             self._programs[key] = entry
         return entry
 
+    def _sharded_delta_knn_program(self, spec: QuerySpec):
+        """The delta/gmap k-NN family.  The per-shard delta geometry
+        joins the key at the call site (like legacy_host_knn's bucket):
+        it is engine state every append changes, and the maker bakes it
+        in statically (delta-first pack width, stretched budget)."""
+        d_rows = self._delta_env_rows()
+        key = (PROGRAM_KEY_SPECS["sharded_delta_knn"]["key"](spec)
+               + (d_rows,))
+        fn = self._programs.get(key)
+        if fn is None:
+            from repro.distributed.ulisse import make_sharded_knn_query
+            fn = make_sharded_knn_query(
+                self._mesh, self.params, self._breakpoints, k=spec.k,
+                measure=spec.measure, r=spec.r,
+                use_paa=spec.use_paa_bounds,
+                chunk_size=spec.chunk_size,
+                sync_every=spec.sync_every,
+                budget_chunks=_knn_budget(spec), axes=self._axes,
+                delta_rows=d_rows, with_gmap=True)
+            self._programs[key] = fn
+        return fn
+
+    def _sharded_delta_range_program(self, spec: QuerySpec):
+        """The delta/gmap range family — same (query_fn, chunk) contract
+        as _sharded_range_program; the packing width (main + delta env
+        rows per shard) joins the key at the call site."""
+        rows = self._env_rows_per_shard + self._delta_env_rows()
+        key = (PROGRAM_KEY_SPECS["sharded_delta_range"]["key"](spec)
+               + (rows,))
+        entry = self._programs.get(key)
+        if entry is None:
+            from repro.distributed.ulisse import \
+                make_sharded_range_query
+            entry = make_sharded_range_query(
+                self._mesh, self.params, self._breakpoints,
+                capacity=spec.range_capacity, n_rows_per_shard=rows,
+                measure=spec.measure, r=spec.r,
+                use_paa=spec.use_paa_bounds,
+                chunk_size=spec.chunk_size, axes=self._axes,
+                with_gmap=True)
+            self._programs[key] = entry
+        return entry
+
     def _sharded_stats(self, st, row, n_env, extra_lb=0,
                        chunks_planned=0) -> SearchStats:
         """Fold the (P, B, executor.STATS_WIDTH) per-shard counter stack
@@ -1490,15 +1864,23 @@ class UlisseEngine:
         terminates when every shard's next LB-ordered chunk is beaten
         by the global kth — so there is no verify_top escalation loop
         to run; approximate mode reads the in-graph certificate."""
-        index_arrs = self._ensure_sharded_index()
         budget = _knn_budget(spec)
-        fn = self._sharded_knn_program(spec)
+        if self._delta_active():
+            index_arrs = self._ensure_delta_index()
+            fn = self._sharded_delta_knn_program(spec)
+            d_rows = self._delta_env_rows()
+            n_rows = self._env_rows_per_shard + d_rows
+        else:
+            index_arrs = self._ensure_sharded_index()
+            fn = self._sharded_knn_program(spec)
+            d_rows, n_rows = 0, self._env_rows_per_shard
         n_env = (self.params.num_envelopes(self._series_len)
-                 * self._num_series)
+                 * (self._num_series + self._delta_total))
         # per-shard plan geometry (mirrors make_sharded_knn_query):
-        # pow2-padded rows per shard, chunked like the local scan
-        n_pad = executor.pow2ceil(self._env_rows_per_shard)
-        chunk = min(executor.pow2ceil(spec.chunk_size), n_pad)
+        # pow2-padded rows per shard, chunked like the local scan,
+        # delta rows chunk-padded ahead of the main region
+        n_pad, chunk, _ = executor.shard_pack_geometry(
+            n_rows, d_rows, spec.chunk_size)
         planned = self._shards * (n_pad // chunk)
         results: List[Optional[SearchResult]] = [None] * len(qs)
         for qlen, idxs in self._group_by_len(qs):
@@ -1532,12 +1914,16 @@ class UlisseEngine:
         the host continuation over that shard's returned plan tail
         (union exact, no dedup — the buffer holds exactly the hits of
         the chunks before `ovf`)."""
-        index_arrs = self._ensure_sharded_index()
-        fn, chunk = self._sharded_range_program(spec)
+        if self._delta_active():
+            index_arrs = self._ensure_delta_index()
+            fn, chunk = self._sharded_delta_range_program(spec)
+        else:
+            index_arrs = self._ensure_sharded_index()
+            fn, chunk = self._sharded_range_program(spec)
         eps2 = float(spec.eps) ** 2
         cap = executor.pow2ceil(spec.range_capacity)
         n_env = (self.params.num_envelopes(self._series_len)
-                 * self._num_series)
+                 * (self._num_series + self._delta_total))
         results: List[Optional[SearchResult]] = [None] * len(qs)
         for qlen, idxs in self._group_by_len(qs):
             self._bucket(qlen)
@@ -1716,6 +2102,12 @@ class UlisseEngine:
                 "k-NN with quantized breakpoint bounds only; use "
                 "scan_backend='device' (the default) for distributed "
                 "DTW / range / approximate / use_paa_bounds queries")
+        if self._delta_active():
+            raise NotImplementedError(
+                "the legacy distributed host backend predates per-"
+                "shard delta buffers and cold-opened index sections; "
+                "compact() first, or use scan_backend='device' (the "
+                "default), which searches the delta in-graph")
         results: List[Optional[SearchResult]] = [None] * len(qs)
         by_bucket = {}
         for i, q in enumerate(qs):

@@ -359,6 +359,30 @@ def pow2ceil(x: int) -> int:
     return b
 
 
+def shard_pack_geometry(n_rows: int, delta_rows: int, chunk_size: int):
+    """Chunk geometry of a shard's packed kNN plan with a delta-first
+    region (DESIGN.md §15).
+
+    The sharded scan packs each shard's `delta_rows` unsorted delta
+    envelopes FIRST — padded up to whole chunks — followed by the
+    LB-sorted main rows, then pow2-pads the total.  Returns
+    (n_pad, chunk, nd_pad): the packed plan width, the chunk size the
+    scan will use, and the padded delta region width (a multiple of
+    `chunk`; `nd_pad // chunk` is the number of always-visited delta
+    chunks the approximate budget must be extended by).  With
+    delta_rows == 0 this reduces to the classic geometry
+    (n_pad = pow2ceil(n_rows), nd_pad = 0).
+
+    One implementation shared by the shard_map program makers
+    (distributed/ulisse.py) and the engine's stats/plan accounting —
+    restating it would let the two drift.
+    """
+    chunk = min(pow2ceil(chunk_size), pow2ceil(max(n_rows, 1)))
+    nd_pad = -(-delta_rows // chunk) * chunk
+    n_pad = pow2ceil((n_rows - delta_rows) + nd_pad)
+    return n_pad, chunk, nd_pad
+
+
 def _chunk_slice(sids, anchors, n_master, lbs2, i, chunk: int):
     """Slice chunk i out of the packed (B, n_pad) plan arrays."""
     return (jax.lax.dynamic_slice_in_dim(sids, i * chunk, chunk, 1),

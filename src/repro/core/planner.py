@@ -326,8 +326,9 @@ def device_scan_pack(env_sid, env_anchor, env_nm, lbs, comb_idx,
             lbs2, order)
 
 
-@partial(jax.jit, static_argnames=("n_pad",))
-def device_shard_pack(env_sid, env_anchor, env_nm, lbs, n_pad: int):
+@partial(jax.jit, static_argnames=("n_pad", "n_delta", "chunk"))
+def device_shard_pack(env_sid, env_anchor, env_nm, lbs, n_pad: int,
+                      n_delta: int = 0, chunk: int = 1):
     """LB-sort + pack ONE SHARD's candidate rows on device.
 
     The per-shard twin of `device_scan_pack`, consumed by the sharded
@@ -339,21 +340,74 @@ def device_shard_pack(env_sid, env_anchor, env_nm, lbs, n_pad: int):
     entirely (it is the expensive half of that pack on CPU).
 
     `lbs` (B, N_local) are the shard's lower bounds (env_* are the
-    shard-local envelope columns, series ids already localized).
+    shard-local envelope columns, series ids already localized).  The
+    last `n_delta` rows are the shard's unsorted ingestion delta
+    (DESIGN.md §15): they are packed FIRST, chunk-padded, in original
+    order with their real squared bounds — except each delta chunk's
+    head row, pinned to 0.  A delta chunk is unsorted, so its head
+    bound says nothing about the rows behind it; the pin keeps the scan
+    core's chunk-head stop/skip test (`_first_lb2`) from skipping a
+    chunk whose later rows beat the bsf, making the delta region an
+    always-visited sweep — exactly the local backend's exhaustive delta
+    pass.  The LB-sorted main rows follow, so the ascending-head stop
+    logic (and the approximate pass's exactness certificate) applies
+    unchanged past the delta region.
+
     Returns (sids, anchors, n_master, lbs2): (B, n_pad) plan arrays
-    right-padded with +inf bounds past the N_local real rows.
+    right-padded with +inf bounds past the real rows.  `n_pad`,
+    `chunk`, and the padded delta width must come from
+    `executor.shard_pack_geometry` so packer and scan agree.
     """
-    pad = n_pad - lbs.shape[1]
-    order = jnp.argsort(lbs, axis=1)
-    lbs_sorted = jnp.take_along_axis(lbs, order, axis=1)
+    if n_delta == 0:
+        pad = n_pad - lbs.shape[1]
+        order = jnp.argsort(lbs, axis=1)
+        lbs_sorted = jnp.take_along_axis(lbs, order, axis=1)
 
-    def pack(col):
-        out = jnp.take(col, order).astype(jnp.int32)
-        return jnp.pad(out, ((0, 0), (0, pad)))
+        def pack(col):
+            out = jnp.take(col, order).astype(jnp.int32)
+            return jnp.pad(out, ((0, 0), (0, pad)))
 
-    lbs2 = jnp.pad((lbs_sorted ** 2).astype(jnp.float32),
-                   ((0, 0), (0, pad)), constant_values=jnp.inf)
-    return pack(env_sid), pack(env_anchor), pack(env_nm), lbs2
+        lbs2 = jnp.pad((lbs_sorted ** 2).astype(jnp.float32),
+                       ((0, 0), (0, pad)), constant_values=jnp.inf)
+        return pack(env_sid), pack(env_anchor), pack(env_nm), lbs2
+
+    b_sz, n = lbs.shape
+    n_main = n - n_delta
+    nd_pad = -(-n_delta // chunk) * chunk
+    # delta block: original order, real bounds, chunk heads pinned
+    didx = jnp.arange(nd_pad, dtype=jnp.int32)
+    dreal = didx < n_delta
+    dsafe = n_main + jnp.minimum(didx, n_delta - 1)
+
+    def dpack(col):
+        out = jnp.where(dreal, jnp.take(col, dsafe), 0).astype(jnp.int32)
+        return jnp.broadcast_to(out[None, :], (b_sz, nd_pad))
+
+    d_lb2 = jnp.pad((lbs[:, n_main:] ** 2).astype(jnp.float32),
+                    ((0, 0), (0, nd_pad - n_delta)),
+                    constant_values=jnp.inf)
+    # invalid delta envelopes carry lb = +inf; zero their n_master so a
+    # pinned head can never expand garbage candidate windows
+    d_nm = jnp.where(jnp.isfinite(d_lb2), dpack(env_nm), 0)
+    head = ((didx % chunk) == 0) & dreal
+    d_lb2 = jnp.where(head[None, :], 0.0, d_lb2)
+    # main block: the classic LB-argsort, padded out to n_pad
+    m_pad = n_pad - nd_pad
+    mlbs = lbs[:, :n_main]
+    order = jnp.argsort(mlbs, axis=1)
+    lbs_sorted = jnp.take_along_axis(mlbs, order, axis=1)
+
+    def mpack(col):
+        out = jnp.take(col[:n_main], order).astype(jnp.int32)
+        return jnp.pad(out, ((0, 0), (0, m_pad - n_main)))
+
+    m_lb2 = jnp.pad((lbs_sorted ** 2).astype(jnp.float32),
+                    ((0, 0), (0, m_pad - n_main)),
+                    constant_values=jnp.inf)
+    cat = lambda a, b: jnp.concatenate([a, b], axis=1)  # noqa: E731
+    return (cat(dpack(env_sid), mpack(env_sid)),
+            cat(dpack(env_anchor), mpack(env_anchor)),
+            cat(d_nm, mpack(env_nm)), cat(d_lb2, m_lb2))
 
 
 @partial(jax.jit, static_argnames=("n_pad",))

@@ -80,6 +80,39 @@ SHARDED_INDEX_FIELDS = (
     "series_id", "anchor", "n_master", "valid",
 )
 
+# the non-data fields, as built per block by build_host_index and
+# persisted per shard by repro.storage.save_distributed (DESIGN.md §15)
+INDEX_SECTION_FIELDS = SHARDED_INDEX_FIELDS[1:]
+
+
+def build_host_index(p: EnvelopeParams, breakpoints, data) -> dict:
+    """Host-side index rows for one block of series: the 13 non-data
+    fields of SHARDED_INDEX_FIELDS as numpy arrays, with series_id
+    LOCAL to the block (row index within `data`).
+
+    Row-wise determinism (Collection.from_array / host_prefix_stats and
+    build_envelope_set are all per-series) makes a per-block build
+    bit-equal to slicing one global build, so concatenating block
+    results — with env series_id offset by the series before the block
+    — IS the full build.  The per-shard delta model and the persisted
+    manifest sections (DESIGN.md §15) both lean on exactly this: a
+    shard's [main; delta] index is sections for the saved prefix plus a
+    build over the appended tail, never a re-summarization of the
+    whole shard.
+    """
+    coll = Collection.from_array(np.asarray(data, np.float32))
+    env = build_envelope_set(coll, p, breakpoints)
+    out = {
+        "csum": coll.csum, "csum2": coll.csum2,
+        "csum_lo": coll.csum_lo, "csum2_lo": coll.csum2_lo,
+        "center": coll.center,
+        "paa_lo": env.paa_lo, "paa_hi": env.paa_hi,
+        "sym_lo": env.sym_lo, "sym_hi": env.sym_hi,
+        "series_id": env.series_id, "anchor": env.anchor,
+        "n_master": env.n_master, "valid": env.valid,
+    }
+    return {f: np.asarray(v) for f, v in out.items()}
+
 
 def build_sharded_index(mesh, p: EnvelopeParams, breakpoints, data,
                         axes=("data",), data_sharded=None):
@@ -132,7 +165,8 @@ def _shard_row_index(mesh, axes):
 def _sharded_knn_scan(coll: Collection, sids, anchors, n_master, lbs2,
                       qs, dtw_lo, dtw_hi, *, k: int, g: int, chunk: int,
                       znorm: bool, measure: str, r: int, sb: int,
-                      sync_every: int, budget_chunks: int, axis_name,
+                      sync_every: int, budget_chunks: int,
+                      delta_chunks: int = 0, axis_name,
                       interpret: bool):
     """One shard's half of the globally-pruned k-NN scan (paper Alg. 5/7
     on a mesh).
@@ -149,7 +183,13 @@ def _sharded_knn_scan(coll: Collection, sids, anchors, n_master, lbs2,
 
     `budget_chunks` > 0 caps the per-shard scan depth (the distributed
     approximate mode: the first LB-ordered chunks ARE the paper's
-    best-first leaf visits); 0 means scan to convergence.  Returns
+    best-first leaf visits); 0 means scan to convergence.
+    `delta_chunks` counts leading UNSORTED delta chunks in the pack
+    (planner.device_shard_pack with n_delta > 0, pinned heads): they
+    are an always-visited exhaustive sweep mirroring the local delta
+    pass, so the approximate budget stretches by them — the chunk at
+    `budget` is then a main LB-ascending chunk and the certificate
+    reasoning below still holds.  Returns
     (pool, stats (B, executor.STATS_WIDTH), cert (B,)) — `cert` is the
     in-graph exactness
     certificate: True iff no shard's first unvisited chunk could still
@@ -159,7 +199,8 @@ def _sharded_knn_scan(coll: Collection, sids, anchors, n_master, lbs2,
     b_sz = qs.shape[0]
     n_pad = sids.shape[1]
     n_chunks = n_pad // chunk
-    budget = min(budget_chunks, n_chunks) if budget_chunks else n_chunks
+    budget = (min(budget_chunks + delta_chunks, n_chunks)
+              if budget_chunks else n_chunks)
 
     def local_active(i, pool, gkth):
         kth = jnp.minimum(pool[0][:, k - 1], gkth)
@@ -215,13 +256,22 @@ def _sharded_knn_scan(coll: Collection, sids, anchors, n_master, lbs2,
 
 def _shard_prelude(p, breakpoints, use_paa, mesh, axes, data, e_sid,
                    e_anc, e_nm, e_valid, e_paalo, e_paahi, e_symlo,
-                   e_symhi, qb, qh, qlen):
+                   e_symhi, qb, qh, qlen, localized: bool = False):
     """Shared per-shard query prelude: localize series ids, rebuild the
     EnvelopeSet view, compute lower bounds for the batch.  Returns
-    (shard_idx, local sids, lbs (B, N_local))."""
+    (shard_idx, local sids, lbs (B, N_local)).
+
+    `localized`: the env series_id column is ALREADY the row index into
+    this shard's data block (the delta/gmap program families — global
+    ids of delta rows are not affine in the shard index once several
+    append parts exist, so those families carry an explicit local→
+    global map instead of localizing here)."""
     s_local = data.shape[0]
     shard_idx = _shard_row_index(mesh, axes)
-    lsid = (e_sid - shard_idx * s_local).astype(jnp.int32)
+    if localized:
+        lsid = e_sid.astype(jnp.int32)
+    else:
+        lsid = (e_sid - shard_idx * s_local).astype(jnp.int32)
     env = EnvelopeSet(paa_lo=e_paalo, paa_hi=e_paahi, sym_lo=e_symlo,
                       sym_hi=e_symhi, series_id=lsid, anchor=e_anc,
                       n_master=e_nm, valid=e_valid)
@@ -235,7 +285,8 @@ def make_sharded_knn_query(mesh, p: EnvelopeParams, breakpoints, *,
                            k: int, measure: str = "ed", r: int = 0,
                            use_paa: bool = False, chunk_size: int = 512,
                            sync_every: int = 8, budget_chunks: int = 0,
-                           axes=("data",), interpret=None):
+                           axes=("data",), delta_rows: int = 0,
+                           with_gmap: bool = False, interpret=None):
     """Build the jitted sharded k-NN program (exact or, with
     `budget_chunks` > 0, the budget-capped approximate mode).
 
@@ -246,6 +297,17 @@ def make_sharded_knn_query(mesh, p: EnvelopeParams, breakpoints, *,
     build_sharded_index tuple in SHARDED_INDEX_FIELDS order; query
     length is read from qs.shape (one retrace per (B, qlen) shape, no
     per-length maker).
+
+    The delta/ingestion variant (DESIGN.md §15): `with_gmap=True`
+    inserts a 15th sharded input after `valid` — gmap (s_local,) int32
+    mapping local data row -> GLOBAL series id — and treats the env
+    series_id column as already-local row indices (see _shard_prelude).
+    `delta_rows` (static) is the per-shard count of trailing UNSORTED
+    delta envelope rows; they pack FIRST with pinned chunk heads
+    (planner.device_shard_pack) so the scan sweeps them exhaustively
+    before the LB-ascending main region.  `delta_rows=0, with_gmap=True`
+    is the cold-open no-delta case and runs the identical arithmetic to
+    the classic family (the n_delta=0 pack is the classic pack).
     """
     if interpret is None:
         from repro.kernels.common import default_interpret
@@ -255,27 +317,38 @@ def make_sharded_knn_query(mesh, p: EnvelopeParams, breakpoints, *,
     g = p.gamma + 1
 
     def local_fn(data, csum, csum2, cslo, cs2lo, center, paa_lo, paa_hi,
-                 sym_lo, sym_hi, e_sid, e_anc, e_nm, e_valid, qs, dlo,
-                 dhi, qb, qh):
+                 sym_lo, sym_hi, e_sid, e_anc, e_nm, e_valid, *rest):
+        if with_gmap:
+            gmap, qs, dlo, dhi, qb, qh = rest
+        else:
+            gmap, (qs, dlo, dhi, qb, qh) = None, rest
         qlen = qs.shape[1]
         shard_idx, lsid, lbs = _shard_prelude(
             p, breakpoints, use_paa, mesh, axes, data, e_sid, e_anc,
-            e_nm, e_valid, paa_lo, paa_hi, sym_lo, sym_hi, qb, qh, qlen)
-        n_pad = executor.pow2ceil(e_sid.shape[0])
+            e_nm, e_valid, paa_lo, paa_hi, sym_lo, sym_hi, qb, qh, qlen,
+            localized=with_gmap)
+        n_pad, chunk, nd_pad = executor.shard_pack_geometry(
+            e_sid.shape[0], delta_rows, chunk_size)
         sids, anc, nm, lbs2 = planner.device_shard_pack(
-            lsid, e_anc, e_nm, lbs, n_pad=n_pad)
-        chunk = min(executor.pow2ceil(chunk_size), n_pad)
+            lsid, e_anc, e_nm, lbs, n_pad=n_pad, n_delta=delta_rows,
+            chunk=chunk)
         coll = Collection(data=data, csum=csum, csum2=csum2,
                           center=center, csum_lo=cslo, csum2_lo=cs2lo)
         pool, stats, cert = _sharded_knn_scan(
             coll, sids, anc, nm, lbs2, qs, dlo, dhi, k=k, g=g,
             chunk=chunk, znorm=p.znorm, measure=measure, r=r,
             sb=min(128, chunk * g), sync_every=sync_every,
-            budget_chunks=budget_chunks, axis_name=axis,
-            interpret=interpret)
+            budget_chunks=budget_chunks, delta_chunks=nd_pad // chunk,
+            axis_name=axis, interpret=interpret)
         d2, psid, poff = pool
-        gsid = jnp.where(psid >= 0, psid + shard_idx * data.shape[0],
-                         -1).astype(jnp.int32)
+        if gmap is None:
+            gsid = jnp.where(psid >= 0,
+                             psid + shard_idx * data.shape[0],
+                             -1).astype(jnp.int32)
+        else:
+            gsid = jnp.where(psid >= 0,
+                             jnp.take(gmap, jnp.maximum(psid, 0)),
+                             -1).astype(jnp.int32)
         if shards == 1:
             md2, msid, moff = d2, gsid, poff
         elif len(axes) == 1:
@@ -289,7 +362,8 @@ def make_sharded_knn_query(mesh, p: EnvelopeParams, breakpoints, *,
     spec_data = P(axes if len(axes) > 1 else axes[0])
     fn = shard_map(
         local_fn, mesh=mesh,
-        in_specs=tuple([spec_data] * 14 + [P()] * 5),
+        in_specs=tuple([spec_data] * (15 if with_gmap else 14)
+                       + [P()] * 5),
         out_specs=(P(), P(), P(), spec_data, P()), check=False)
     return jax.jit(fn)
 
@@ -299,7 +373,7 @@ def make_sharded_range_query(mesh, p: EnvelopeParams, breakpoints, *,
                              measure: str = "ed", r: int = 0,
                              use_paa: bool = False,
                              chunk_size: int = 512, axes=("data",),
-                             interpret=None):
+                             with_gmap: bool = False, interpret=None):
     """Build the jitted sharded eps-range program.
 
     Each shard packs its candidates (lb2 <= eps2, sortless — the cut
@@ -317,6 +391,14 @@ def make_sharded_range_query(mesh, p: EnvelopeParams, breakpoints, *,
     `ovf * chunk`, and returning it (like device_range_scan does) keeps
     the engine from re-deriving (and drifting from) the internal
     chunking; `n_rows_per_shard` pins the packing width the same way.
+
+    `with_gmap=True` is the delta/ingestion variant (DESIGN.md §15):
+    a 15th sharded input after `valid` — gmap (s_local,) int32, local
+    data row -> GLOBAL series id — with env series_id already local.
+    Unlike the k-NN pack, the range pack needs NO delta-first region:
+    device_range_pack is sortless (the eps cut never moves, order is
+    irrelevant), so delta rows pack wherever they land and the §9 core
+    handles them untouched; only the id globalization changes.
     """
     if interpret is None:
         from repro.kernels.common import default_interpret
@@ -327,12 +409,16 @@ def make_sharded_range_query(mesh, p: EnvelopeParams, breakpoints, *,
     chunk = min(executor.pow2ceil(chunk_size), n_pad)
 
     def local_fn(data, csum, csum2, cslo, cs2lo, center, paa_lo, paa_hi,
-                 sym_lo, sym_hi, e_sid, e_anc, e_nm, e_valid, qs, dlo,
-                 dhi, qb, qh, eps2):
+                 sym_lo, sym_hi, e_sid, e_anc, e_nm, e_valid, *rest):
+        if with_gmap:
+            gmap, qs, dlo, dhi, qb, qh, eps2 = rest
+        else:
+            gmap, (qs, dlo, dhi, qb, qh, eps2) = None, rest
         qlen = qs.shape[1]
         shard_idx, lsid, lbs = _shard_prelude(
             p, breakpoints, use_paa, mesh, axes, data, e_sid, e_anc,
-            e_nm, e_valid, paa_lo, paa_hi, sym_lo, sym_hi, qb, qh, qlen)
+            e_nm, e_valid, paa_lo, paa_hi, sym_lo, sym_hi, qb, qh, qlen,
+            localized=with_gmap)
         sids, anc, nm, lbs2, _ = planner.device_range_pack(
             lsid, e_anc, e_nm, lbs, eps2, n_pad=n_pad)
         bd2, bsid, boff, cnt, ovf, st = executor._device_range_core(
@@ -340,17 +426,25 @@ def make_sharded_range_query(mesh, p: EnvelopeParams, breakpoints, *,
             lbs2, qs, dlo, dhi, eps2, cap=cap, g=g, chunk=chunk,
             znorm=p.znorm, measure=measure, r=r,
             sb=min(128, chunk * g), interpret=interpret)
-        off0 = shard_idx * data.shape[0]
-        gbsid = jnp.where(bsid >= 0, bsid + off0, bsid)
+        if gmap is None:
+            off0 = shard_idx * data.shape[0]
+            gbsid = jnp.where(bsid >= 0, bsid + off0, bsid)
+            plan_sid = (sids + off0).astype(jnp.int32)
+        else:
+            gbsid = jnp.where(bsid >= 0,
+                              jnp.take(gmap, jnp.maximum(bsid, 0)),
+                              bsid)
+            plan_sid = jnp.take(gmap, sids).astype(jnp.int32)
         return (bd2, gbsid.astype(jnp.int32), boff, cnt[None],
-                ovf[None], st[None], (sids + off0).astype(jnp.int32)[None],
+                ovf[None], st[None], plan_sid[None],
                 anc[None], nm[None], lbs2[None])
 
     spec_data = P(axes if len(axes) > 1 else axes[0])
     row0 = axes if len(axes) > 1 else axes[0]
     fn = shard_map(
         local_fn, mesh=mesh,
-        in_specs=tuple([spec_data] * 14 + [P()] * 6),
+        in_specs=tuple([spec_data] * (15 if with_gmap else 14)
+                       + [P()] * 6),
         out_specs=(P(None, row0), P(None, row0), P(None, row0),
                    spec_data, spec_data, spec_data, spec_data,
                    spec_data, spec_data, spec_data), check=False)

@@ -369,7 +369,17 @@ class UlisseServer:
     def append(self, series) -> Ticket:
         """Ingest series through the writer lane: applied between
         dispatches, bumps the snapshot version.  The ticket completes
-        once the series are searchable."""
+        once the series are searchable.
+
+        Shape/layout errors are raised HERE, on the caller's thread
+        (`engine.validate_append` is read-only, so it is safe off the
+        dispatcher) — a malformed batch fails fast as ValueError
+        instead of surfacing later through the ticket.  The same lane
+        serves both backends: a distributed engine lands the rows in
+        its per-shard delta buffers (searched alongside the sorted
+        envelopes) exactly as the local engine's unsorted delta is.
+        """
+        self.engine.validate_append(series)
         return self._submit_writer("append", series)
 
     def compact(self) -> Ticket:

@@ -12,6 +12,20 @@ An index is a *directory*:
                                 #   table in the manifest names them)
       delta/<field>.npy         # optional: unsorted ingestion buffer
 
+Distributed saves (kind == "distributed") add, all additive under the
+same FORMAT_VERSION (old readers ignore the extra manifest keys):
+
+      shards/shard_<s>.npy        # per-shard MAIN raw rows
+      delta/shard_<s>.npy         # per-shard uncompacted delta rows
+      delta/shard_<s>_gmap.npy    # their GLOBAL series ids (append
+                                  #   parts interleave shards, so the
+                                  #   local->global map is not affine)
+      index/shard_<s>_<field>.npy # per-shard envelope + prefix-sum
+                                  #   sections over [main; delta] —
+                                  #   with these a distributed open()
+                                  #   reads O(index) bytes and never
+                                  #   re-runs summarization
+
 The write protocol is the same atomic commit train/checkpoint.py uses:
 everything is staged into `<path>.tmp/` and `os.rename`d to `<path>` in
 one step — a crashed writer never corrupts the last good index, and a

@@ -474,20 +474,62 @@ def open_index(path: str, params: Optional[EnvelopeParams] = None,
 
 def save_distributed(path: str, params: EnvelopeParams, breakpoints,
                      shard_arrays, axes=("data",),
-                     max_batch: int = 8) -> str:
-    """Serialize a distributed engine's state as per-shard raw payloads.
+                     max_batch: int = 8, *, delta_blocks=None,
+                     delta_gmaps=None, sections=None) -> str:
+    """Serialize a distributed engine's state as per-shard payloads.
 
-    `shard_arrays`: per-shard (rows, n) host arrays in row order (see
-    distributed.ulisse.shard_host_arrays) — one payload file each, so
-    a multi-host deployment writes only its addressable shards.
+    `shard_arrays`: per-shard (rows, n) MAIN host arrays in row order
+    (see distributed.ulisse.shard_host_arrays) — one payload file each,
+    so a multi-host deployment writes only its addressable shards.
+
+    The ingestion/cold-start extensions (DESIGN.md §15), all additive
+    to the PR-2 manifest (FORMAT_VERSION stays 1; old readers ignore
+    the extra keys and still see the main payload shards):
+
+      delta_blocks  per-shard (d, n) uncompacted delta rows;
+      delta_gmaps   per-shard (d,) GLOBAL series ids of those rows
+                    (append parts interleave shards, so the map is not
+                    affine and must be recorded);
+      sections      per-shard dicts of INDEX_SECTION_FIELDS covering
+                    the shard's FULL [main; delta] block — envelope
+                    rows AND prefix-sum planes, env series_id local.
+                    With these, `load_distributed_sections` reopens
+                    O(index): no summarization, payload bytes mmap'd
+                    and only materialized at first search.
+
+    One staged directory, one atomic commit — a crash between the
+    per-shard writes and the manifest leaves only a staging dir for
+    `gc_stale_tmp` to sweep; readers never see a half save.
     """
     shard_arrays = [np.asarray(s, np.float32) for s in shard_arrays]
-    tmp = fmt.stage_dir(path, "shards")
+    dirs = ["shards"]
+    if delta_blocks is not None and any(
+            b.shape[0] for b in delta_blocks):
+        dirs.append("delta")
+    if sections is not None:
+        dirs.append("index")
+    tmp = fmt.stage_dir(path, *dirs)
     arrays = {"breakpoints": fmt.save_array(tmp, "breakpoints", breakpoints)}
     shards = []
     for s, rows in enumerate(shard_arrays):
         rel = f"shards/shard_{s:05d}"
         shards.append(fmt.save_array(tmp, rel, rows))
+    delta_rows = 0
+    if "delta" in dirs:
+        delta_rows = int(delta_blocks[0].shape[0])
+        for s, (blk, gmap) in enumerate(zip(delta_blocks, delta_gmaps)):
+            rel = f"delta/shard_{s:05d}"
+            arrays[rel] = fmt.save_array(
+                tmp, rel, np.asarray(blk, np.float32))
+            rel = f"delta/shard_{s:05d}_gmap"
+            arrays[rel] = fmt.save_array(
+                tmp, rel, np.asarray(gmap, np.int64))
+    if sections is not None:
+        from repro.distributed.ulisse import INDEX_SECTION_FIELDS
+        for s, sec in enumerate(sections):
+            for field in INDEX_SECTION_FIELDS:
+                rel = f"index/shard_{s:05d}_{field}"
+                arrays[rel] = fmt.save_array(tmp, rel, sec[field])
     fmt.write_manifest(tmp, {
         "kind": fmt.KIND_DISTRIBUTED,
         "params": fmt.params_to_dict(params),
@@ -495,10 +537,54 @@ def save_distributed(path: str, params: EnvelopeParams, breakpoints,
         "series_len": int(shard_arrays[0].shape[1]),
         "axes": list(axes),
         "max_batch": max_batch,
+        "delta_rows_per_shard": delta_rows,
+        "index_sections": sections is not None,
         "arrays": arrays,
         "collection_shards": shards,
     })
     return fmt.commit(path)
+
+
+def load_distributed_sections(path: str,
+                              params: Optional[EnvelopeParams] = None):
+    """The O(index) cold-open payload of a distributed save, or None.
+
+    Returns (params, breakpoints, manifest, mains, deltas, delta_gmaps,
+    sections) — mains/deltas are per-shard mmap handles (no payload
+    bytes read), sections per-shard dicts of mmap'd
+    INDEX_SECTION_FIELDS arrays.  None when `path` holds a local index
+    or a pre-section distributed save — callers fall back to
+    `load_raw_data` + re-summarization then.
+    """
+    fmt.gc_stale_tmp(path)
+    manifest = fmt.read_manifest(path)
+    if (manifest["kind"] != fmt.KIND_DISTRIBUTED
+            or not manifest.get("index_sections")):
+        return None
+    from repro.distributed.ulisse import INDEX_SECTION_FIELDS
+    stored = fmt.params_from_dict(manifest["params"])
+    fmt.validate_params(stored, params)
+    arrays = manifest["arrays"]
+    mains = [fmt.load_array(path, e, mmap=True)
+             for e in manifest["collection_shards"]]
+    n = int(manifest["series_len"])
+    deltas, gmaps, sections = [], [], []
+    for s in range(len(mains)):
+        key = f"delta/shard_{s:05d}"
+        if key in arrays:
+            deltas.append(fmt.load_array(path, arrays[key], mmap=True))
+            gmaps.append(np.asarray(fmt.load_array(
+                path, arrays[f"{key}_gmap"])))
+        else:
+            deltas.append(np.zeros((0, n), np.float32))
+            gmaps.append(np.zeros((0,), np.int64))
+        sections.append({
+            f: fmt.load_array(path, arrays[f"index/shard_{s:05d}_{f}"],
+                              mmap=True)
+            for f in INDEX_SECTION_FIELDS})
+    bp = fmt.load_array(path, arrays["breakpoints"])
+    return (stored, jnp.asarray(bp), manifest, mains, deltas, gmaps,
+            sections)
 
 
 def load_raw_data(path: str, params: Optional[EnvelopeParams] = None):
@@ -507,14 +593,31 @@ def load_raw_data(path: str, params: Optional[EnvelopeParams] = None):
     The re-sharding entry point: a distributed engine can be restored on
     any mesh size from these (the shard table is a layout hint, not a
     constraint), and a local index can be promoted to a distributed one.
-    Returns (params, breakpoints, data, manifest).
+    Uncompacted delta rows of a distributed save fold back into the
+    returned array at their recorded GLOBAL ids, so re-sharding keeps
+    every appended series.  Returns (params, breakpoints, data,
+    manifest).
     """
     fmt.gc_stale_tmp(path)
     manifest = fmt.read_manifest(path)
     stored = fmt.params_from_dict(manifest["params"])
     fmt.validate_params(stored, params)
+    arrays = manifest["arrays"]
     parts = [fmt.load_array(path, e, mmap=True)
              for e in manifest["collection_shards"]]
     data = parts[0] if len(parts) == 1 else np.concatenate(parts)
-    bp = fmt.load_array(path, manifest["arrays"]["breakpoints"])
-    return stored, jnp.asarray(bp), np.asarray(data), manifest
+    data = np.asarray(data)
+    d = int(manifest.get("delta_rows_per_shard", 0))
+    if d:
+        shards = len(manifest["collection_shards"])
+        total = data.shape[0] + d * shards
+        out = np.empty((total, data.shape[1]), np.float32)
+        out[:data.shape[0]] = data
+        for s in range(shards):
+            key = f"delta/shard_{s:05d}"
+            blk = np.asarray(fmt.load_array(path, arrays[key]))
+            gmap = np.asarray(fmt.load_array(path, arrays[f"{key}_gmap"]))
+            out[gmap] = blk
+        data = out
+    bp = fmt.load_array(path, arrays["breakpoints"])
+    return stored, jnp.asarray(bp), data, manifest

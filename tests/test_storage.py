@@ -238,10 +238,13 @@ def test_append_rejects_bad_width_and_distributed(walk_collection):
         eng.append(np.zeros((1, 64), np.float32))
     mesh = jax.make_mesh((1,), ("data",))
     dist = UlisseEngine.distributed(mesh, p, walk_collection)
-    with pytest.raises(NotImplementedError):
-        dist.append(walk_collection[:1])
-    with pytest.raises(NotImplementedError):
-        dist.compact()
+    # the distributed backend ingests too (DESIGN.md §15) — same
+    # width validation, then delta placement + compact just work
+    with pytest.raises(ValueError, match="fixed-width"):
+        dist.append(np.zeros((1, 64), np.float32))
+    dist.append(walk_collection[:1])
+    dist.compact()
+    assert dist.raw_data.shape[0] == walk_collection.shape[0] + 1
 
 
 def test_crash_safety_stale_tmp_ignored_and_gcd(znorm_engine,
